@@ -1,0 +1,64 @@
+"""Kernel micro-benchmarks: Pallas (interpret) vs jnp oracle timings and
+arithmetic checks. Interpret mode is Python emulation — the derived column
+reports correctness/op-counts, not TPU speed (see roofline for that).
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+
+def _time(fn, *args, reps=3):
+    fn(*args)  # warm
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        r = fn(*args)
+        if hasattr(r, "block_until_ready"):
+            r.block_until_ready()
+        elif isinstance(r, tuple):
+            r[0].block_until_ready()
+    return (time.perf_counter() - t0) / reps
+
+
+def run(full: bool = False) -> list[str]:
+    import jax.numpy as jnp
+    from repro.kernels.binary_matvec import ops as bops, ref as bref
+    from repro.kernels.quant_matmul import ops as qops, ref as qref
+    from repro.kernels.ssd_scan import ops as sops, ref as sref
+
+    rows = []
+    rng = np.random.default_rng(0)
+
+    # binary matvec: paper-sized layer 784 -> 500
+    x = jnp.asarray(rng.integers(0, 2, size=(64, 784)).astype(np.int8))
+    w = jnp.asarray(rng.integers(-9, 10, size=(784, 500)).astype(np.int32))
+    t_ref = _time(lambda: bref.binary_matmul_ref(x, w))
+    got = bops.binary_matmul(x, w)
+    ok = int(np.array_equal(np.asarray(got),
+                            np.asarray(bref.binary_matmul_ref(x, w))))
+    rows.append(f"kern_binary_matmul_ref,{t_ref*1e6:.1f},exact={ok}")
+
+    # quant matmul
+    xq = jnp.asarray(rng.integers(-127, 128, size=(64, 512)).astype(np.int8))
+    wq = jnp.asarray(rng.integers(-127, 128, size=(512, 256)).astype(np.int8))
+    sw = jnp.ones((256,), jnp.float32)
+    t_ref = _time(lambda: qref.quant_matmul_ref(xq, wq, np.float32(1), sw))
+    got = qops.quant_matmul(xq, wq, np.float32(1), sw)
+    ok = int(np.allclose(np.asarray(got),
+                         np.asarray(qref.quant_matmul_ref(xq, wq, np.float32(1), sw))))
+    rows.append(f"kern_quant_matmul_ref,{t_ref*1e6:.1f},exact={ok}")
+
+    # ssd scan
+    b, l, h, g, p, n = (2, 256, 4, 1, 64, 128) if full else (1, 128, 2, 1, 32, 64)
+    xx = jnp.asarray(rng.normal(size=(b, l, h, p)).astype(np.float32))
+    dt = jnp.asarray(rng.uniform(0.001, 0.1, size=(b, l, h)).astype(np.float32))
+    a = jnp.asarray(-rng.uniform(0.5, 2, size=(h,)).astype(np.float32))
+    bb = jnp.asarray(rng.normal(size=(b, l, g, n)).astype(np.float32) / np.sqrt(n))
+    cc = jnp.asarray(rng.normal(size=(b, l, g, n)).astype(np.float32) / np.sqrt(n))
+    t_k = _time(lambda: sops.ssd(xx, dt, a, bb, cc, chunk=64))
+    yk, _ = sops.ssd(xx, dt, a, bb, cc, chunk=64)
+    yr, _ = sref.ssd_batched_ref(xx, dt, a, bb, cc, chunk=64)
+    err = float(np.max(np.abs(np.asarray(yk) - np.asarray(yr))))
+    rows.append(f"kern_ssd_scan_interpret,{t_k*1e6:.1f},maxerr={err:.2e}")
+    return rows

@@ -1,0 +1,45 @@
+"""Paper §V.D table: resource counts through the netgen rewrites.
+
+Paper: >80k logic cells (naive) -> 38k (pruned) -> <16k (addend form).
+Our units: multiply/add operation counts per prediction (what the cell
+counts are proportional to), plus emitted-Verilog size as the direct
+artifact analogue.
+"""
+from __future__ import annotations
+
+import time
+
+
+def run(full: bool = False) -> list[str]:
+    import numpy as np
+    from repro.core import dataset, mlp, netgen, quantize
+
+    n_hidden = 500 if full else 128
+    epochs = 60 if full else 20
+    xtr, ytr, *_ = dataset.train_test_split(800, 10, seed=1)
+    cfg = mlp.MLPConfig(n_hidden=n_hidden, epochs=epochs, seed=4)
+    t0 = time.time()
+    params = mlp.train(cfg, xtr, ytr)
+    qnet = quantize.quantize(params)
+    st = netgen.stats(qnet)
+    _, pinfo = netgen.prune(qnet)
+    dt = (time.time() - t0) * 1e6
+
+    rows = [
+        f"netgen_mults_dense,{dt:.0f},{st.mults_dense}",
+        f"netgen_mults_pruned,0,{st.mults_pruned}",
+        f"netgen_mults_addend,0,{st.mults_addend}",
+        f"netgen_adds_addend,0,{st.adds_addend}",
+        f"netgen_zero_fraction,0,{st.zero_fraction:.4f}",
+        f"netgen_hidden_removed,0,{pinfo.hidden_removed}",
+    ]
+    # Verilog artifact (3x3 always; full-size only with --full: ~100 MB text)
+    demo = quantize.QuantizedNet(
+        w1=np.clip(qnet.w1[:3, :3], -9, 9), w2=np.clip(qnet.w2[:3, :3], -9, 9))
+    v = netgen.emit_verilog(demo, addend=True)
+    rows.append(f"netgen_verilog_3x3_lines,0,{len(v.splitlines())}")
+    if full:
+        t0 = time.time()
+        vfull = netgen.emit_verilog(qnet, addend=False)
+        rows.append(f"netgen_verilog_full_bytes,{(time.time()-t0)*1e6:.0f},{len(vfull)}")
+    return rows

@@ -1,0 +1,56 @@
+"""Render the roofline table (EXPERIMENTS.md §Roofline) from dry-run JSON."""
+from __future__ import annotations
+
+import json
+import os
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "results")
+
+
+def load(mesh: str = "single_pod", tag: str = "") -> list[dict]:
+    path = os.path.join(RESULTS_DIR, f"dryrun_{mesh}{tag}.json")
+    if not os.path.exists(path):
+        return []
+    with open(path) as f:
+        return json.load(f)
+
+
+def render(records: list[dict]) -> str:
+    hdr = ("| arch | shape | t_comp (ms) | t_mem (ms) | t_coll (ms) | "
+           "bottleneck | useful | roofline frac | peak GiB/dev |")
+    sep = "|" + "---|" * 9
+    lines = [hdr, sep]
+    for r in sorted(records, key=lambda r: (r.get("arch", ""), r.get("shape", ""))):
+        if not r.get("ok"):
+            lines.append(f"| {r['cell']} | - | - | - | - | FAILED: "
+                         f"{r.get('error','?')[:60]} | - | - | - |")
+            continue
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['t_compute']*1e3:.1f} | "
+            f"{r['t_memory']*1e3:.1f} | {r['t_collective']*1e3:.1f} | "
+            f"{r['bottleneck']} | {r['useful_flops_ratio']:.2f} | "
+            f"{r['roofline_fraction']:.3f} | "
+            f"{r['peak_mem_per_device']/2**30:.2f} |")
+    return "\n".join(lines)
+
+
+def run(full: bool = False) -> list[str]:
+    rows = []
+    for mesh, tag in (("single_pod", "_final"), ("multi_pod", "")):
+        recs = load(mesh, tag) or load(mesh)
+        ok = sum(1 for r in recs if r.get("ok"))
+        rows.append(f"dryrun_{mesh}{tag}_cells_ok,0,{ok}/{len(recs)}")
+    hc = os.path.join(RESULTS_DIR, "perf_hillclimb.json")
+    if os.path.exists(hc):
+        with open(hc) as f:
+            n = sum(1 for r in json.load(f) if r.get("ok"))
+        rows.append(f"perf_hillclimb_variants_ok,0,{n}")
+    return rows
+
+
+if __name__ == "__main__":
+    for mesh, tag in (("single_pod", "_final"), ("multi_pod", "")):
+        recs = load(mesh, tag) or load(mesh)
+        if recs:
+            print(f"\n### {mesh}{tag}\n")
+            print(render(recs))

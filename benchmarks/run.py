@@ -1,0 +1,49 @@
+"""Benchmark harness — one module per paper table (+ kernels & dry-run
+summary). Prints ``name,us_per_call,derived`` CSV.
+
+  python -m benchmarks.run [--full]
+
+--full runs paper-sized versions (500 hidden units, 60 epochs, full
+Verilog emission); default is a fast sanity pass.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import traceback
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args()
+
+    from benchmarks import (bench_kernels, bench_ladder, bench_netgen,
+                            bench_throughput, roofline_table)
+
+    suites = {
+        "ladder": bench_ladder.run,          # paper §III accuracy table
+        "netgen": bench_netgen.run,          # paper §V.D resource table
+        "throughput": bench_throughput.run,  # paper §V.E FPGA-vs-CPU table
+        "kernels": bench_kernels.run,
+        "roofline": roofline_table.run,      # dry-run summary counts
+    }
+    print("name,us_per_call,derived")
+    failed = 0
+    for name, fn in suites.items():
+        if args.only and name != args.only:
+            continue
+        try:
+            for row in fn(full=args.full):
+                print(row, flush=True)
+        except Exception:  # noqa: BLE001
+            traceback.print_exc()
+            print(f"{name}_FAILED,0,0")
+            failed += 1
+    if failed:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

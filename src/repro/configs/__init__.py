@@ -1,0 +1,65 @@
+"""Architecture config registry.
+
+`get_config(name)` returns the full published config; `smoke(name)` a
+reduced same-family variant for CPU tests (small widths/depths/vocabs,
+same structural features: GQA ratios, MoE routing, SSD state, hybrid
+sharing)."""
+from __future__ import annotations
+
+import dataclasses
+
+from repro.models.base import ArchConfig, SHAPES, ShapeConfig, supports_shape
+
+from repro.configs import (  # noqa: F401
+    qwen1_5_4b, qwen2_72b, gemma_2b, llama3_2_3b, qwen2_vl_2b,
+    granite_moe_1b_a400m, qwen3_moe_30b_a3b, mamba2_2_7b, zamba2_2_7b,
+    musicgen_medium, mnist_fpga,
+)
+
+ARCHS: dict[str, ArchConfig] = {
+    m.CONFIG.name: m.CONFIG
+    for m in (
+        qwen1_5_4b, qwen2_72b, gemma_2b, llama3_2_3b, qwen2_vl_2b,
+        granite_moe_1b_a400m, qwen3_moe_30b_a3b, mamba2_2_7b, zamba2_2_7b,
+        musicgen_medium,
+    )
+}
+
+
+def get_config(name: str) -> ArchConfig:
+    return ARCHS[name]
+
+
+def smoke(name: str) -> ArchConfig:
+    """Reduced config preserving the family's structure."""
+    c = ARCHS[name]
+    kv = max(1, (4 * c.n_kv_heads) // max(c.n_heads, 1)) if c.n_heads else 0
+    repl: dict = dict(
+        name=c.name + "-smoke",
+        n_layers=4 if c.family == "hybrid" else 2,
+        d_model=64,
+        n_heads=4 if c.n_heads else 0,
+        n_kv_heads=kv,
+        head_dim=16 if c.n_heads else 0,
+        d_ff=96 if c.d_ff else 0,
+        vocab=512,
+    )
+    if c.family == "moe":
+        repl.update(n_experts=8, experts_per_token=2)
+    if c.family in ("ssm", "hybrid"):
+        repl.update(ssm_state=16, ssm_headdim=16, ssm_groups=1)
+    if c.family == "hybrid":
+        repl.update(attn_every=2)
+    if c.pos == "mrope":
+        repl.update(mrope_sections=(2, 3, 3))     # sums to head_dim//2 = 8
+    return dataclasses.replace(c, **repl)
+
+
+def all_cells() -> list[tuple[ArchConfig, ShapeConfig]]:
+    """Every supported (architecture x input-shape) pair (the dry-run grid)."""
+    cells = []
+    for cfg in ARCHS.values():
+        for shp in SHAPES.values():
+            if supports_shape(cfg, shp):
+                cells.append((cfg, shp))
+    return cells

@@ -1,0 +1,13 @@
+"""The paper's own network: 784-500-10 feed-forward MNIST classifier
+(Adiletta & Flanagan 2020). Kept in the registry so the paper's technique
+is a first-class selectable arch next to the assigned LM configs; its
+pipeline lives in repro.core (training, quantization ladder, netgen)."""
+from repro.models.base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="mnist-fpga",
+    family="mlp",           # handled by repro.core, not the LM runtime
+    n_layers=2,
+    d_model=500,            # hidden width
+    vocab=10,               # output classes
+)

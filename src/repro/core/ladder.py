@@ -1,0 +1,72 @@
+"""End-to-end harness for the paper's optimization ladder (§III).
+
+Trains the 784-500-10 net with the paper's protocol (1000 images,
+5 epochs), then evaluates every ladder stage on held-out data and checks
+the paper's structural claims:
+
+  * accuracy decreases monotonically-ish and modestly L0 -> L3
+    (paper: 98 / 95 / 94 / 92),
+  * L4 (pruning) and L5 (mult-free/specialized) are EXACT rewrites of L3
+    (identical predictions),
+  * pruning removes a large fraction of weight terms (paper: ~50%).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.core import dataset, mlp, netgen, quantize
+
+
+@dataclasses.dataclass
+class LadderResult:
+    acc: dict            # stage name -> accuracy
+    stats: netgen.NetgenStats
+    prune_info: netgen.PruneInfo
+    exact_l4_l5: bool    # L4/L5 predictions identical to L3
+
+    def table(self) -> str:
+        rows = ["stage,accuracy,paper_accuracy"]
+        paper = {"L0_baseline": 0.98, "L1_step_act": 0.95,
+                 "L2_binary_input": 0.94, "L3_int_weights": 0.92,
+                 "L4_pruned": 0.92, "L5_multfree": 0.92}
+        for k, v in self.acc.items():
+            rows.append(f"{k},{v:.4f},{paper.get(k, float('nan')):.2f}")
+        return "\n".join(rows)
+
+
+def run_ladder(
+    n_train: int = 1000,
+    n_test: int = 1000,
+    epochs: int = 60,
+    seed: int = 0,
+    backends: tuple = ("jnp",),
+) -> LadderResult:
+    xtr, ytr, xte, yte = dataset.train_test_split(n_train, n_test, seed=seed)
+    cfg = mlp.MLPConfig(epochs=epochs, seed=seed + 1)
+    params = mlp.train(cfg, xtr, ytr)
+
+    acc = {}
+    acc["L0_baseline"] = mlp.accuracy(mlp.predict_l0(params), xte, yte)
+    acc["L1_step_act"] = mlp.accuracy(quantize.predict_l1(params), xte, yte)
+    acc["L2_binary_input"] = mlp.accuracy(quantize.predict_l2(params), xte, yte)
+    l3_fn = quantize.predict_l3(params)
+    acc["L3_int_weights"] = mlp.accuracy(l3_fn, xte, yte)
+
+    qnet = quantize.quantize(params)
+    qnet_pruned, pinfo = netgen.prune(qnet)
+    st = netgen.stats(qnet)
+
+    import jax.numpy as jnp
+    l3_preds = np.asarray(l3_fn(jnp.asarray(xte)))
+    exact = True
+    for backend in backends:
+        fn = netgen.specialize(qnet, backend=backend)
+        preds = np.asarray(fn(jnp.asarray(xte)))
+        key = {"jnp": "L4_pruned", "pallas": "L5_multfree",
+               "fused": "L5_fused"}.get(backend, backend)
+        acc[key] = float(np.mean(preds == yte))
+        exact = exact and bool(np.array_equal(preds, l3_preds))
+
+    return LadderResult(acc=acc, stats=st, prune_info=pinfo, exact_l4_l5=exact)

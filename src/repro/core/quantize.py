@@ -1,0 +1,130 @@
+"""The paper's optimization ladder (§III): inference-time simplifications.
+
+Stages (cumulative, exactly as the paper applies them):
+
+  L0  baseline       — sigmoid activations, scaled float inputs, fp32 weights
+  L1  step act       — hidden sigmoid -> step(x > 0); output argmax unchanged
+                       (paper §III.A: 98% -> 95%)
+  L2  binary input   — raw pixel > 128 -> {0,1} instead of float scaling
+                       (paper §III.B: 95% -> 94%)
+  L3  integer weights— weights cast to small integers
+                       (paper §III.C: 94% -> 92%)
+
+L4 (zero pruning) and L5 (multiplication-free addend form) are *exact
+rewrites* of the L3 network — they change resources, not accuracy — and
+live in `repro.core.netgen`.
+
+A note on L3 faithfulness: the paper's Verilog comments bound weights as
+-10 < w < 10, i.e. the float weights are affinely scaled into a small
+integer range before casting (raw trained weights have |w| << 1 and a
+direct cast would zero the network). Positive per-layer scaling commutes
+with both the step threshold at 0 and the final argmax, so the scaled cast
+is mathematically the paper's transform.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import mlp as mlp_lib
+
+INPUT_THRESHOLD = 128  # paper: pixel cutoff value
+WEIGHT_BOUND = 9       # paper: -10 < weights < 10
+
+
+def step(x: jnp.ndarray) -> jnp.ndarray:
+    """Paper's activation: comparator at 0. On hardware this is the MSB
+    (sign bit) of the signed accumulator; here a VPU compare."""
+    return (x > 0).astype(jnp.int32)
+
+
+def binarize_input(x_uint8: jnp.ndarray, threshold: int = INPUT_THRESHOLD) -> jnp.ndarray:
+    """Paper §III.B: raw pixel in [0,255] -> {0,1} at cutoff 128."""
+    return (x_uint8.astype(jnp.int32) > threshold).astype(jnp.int32)
+
+
+def int_cast_weights(w: np.ndarray, bound: int = WEIGHT_BOUND) -> np.ndarray:
+    """Paper §III.C: cast weights to integers, scaled into (-10, 10).
+
+    Scale is per-matrix (a single positive scalar), preserving the sign of
+    every pre-activation and the argmax of the output layer.
+    """
+    w = np.asarray(w, dtype=np.float64)
+    s = bound / max(np.abs(w).max(), 1e-12)
+    return np.round(w * s).astype(np.int32)
+
+
+# ---------------------------------------------------------------------------
+# Ladder predictors. Each returns a jitted fn: uint8 images -> int predictions.
+# ---------------------------------------------------------------------------
+
+def predict_l1(params: dict):
+    """L1: step hidden activation, float weights, scaled float input."""
+    w1 = jnp.asarray(params["w1"], jnp.float32)
+    w2 = jnp.asarray(params["w2"], jnp.float32)
+
+    @jax.jit
+    def f(x_uint8):
+        x = mlp_lib.scale_inputs(x_uint8)
+        hi = x @ w1
+        ho = step(hi).astype(jnp.float32)
+        fi = ho @ w2
+        return jnp.argmax(fi, axis=-1)
+
+    return f
+
+
+def predict_l2(params: dict):
+    """L2: + binary inputs (pixel > 128)."""
+    w1 = jnp.asarray(params["w1"], jnp.float32)
+    w2 = jnp.asarray(params["w2"], jnp.float32)
+
+    @jax.jit
+    def f(x_uint8):
+        x = binarize_input(x_uint8).astype(jnp.float32)
+        hi = x @ w1
+        ho = step(hi).astype(jnp.float32)
+        fi = ho @ w2
+        return jnp.argmax(fi, axis=-1)
+
+    return f
+
+
+def predict_l3(params: dict):
+    """L3: + integer weights. The whole network is now integer arithmetic:
+    binary inputs, int weights, int accumulators, sign-bit activations —
+    exactly the arithmetic the paper's Verilog implements."""
+    w1 = jnp.asarray(int_cast_weights(params["w1"]), jnp.int32)
+    w2 = jnp.asarray(int_cast_weights(params["w2"]), jnp.int32)
+
+    @jax.jit
+    def f(x_uint8):
+        x = binarize_input(x_uint8)                 # {0,1} int32
+        hi = x @ w1                                 # int32 accumulate
+        ho = step(hi)                               # {0,1} int32
+        fi = ho @ w2
+        return jnp.argmax(fi, axis=-1)
+
+    return f
+
+
+@dataclasses.dataclass(frozen=True)
+class QuantizedNet:
+    """Frozen integer network produced by the ladder (input to netgen)."""
+    w1: np.ndarray  # int32 (n_in, n_hidden)
+    w2: np.ndarray  # int32 (n_hidden, n_out)
+    input_threshold: int = INPUT_THRESHOLD
+
+    @property
+    def shapes(self) -> tuple:
+        return (self.w1.shape, self.w2.shape)
+
+
+def quantize(params: dict) -> QuantizedNet:
+    return QuantizedNet(
+        w1=int_cast_weights(params["w1"]),
+        w2=int_cast_weights(params["w2"]),
+    )

@@ -1,0 +1,59 @@
+"""ShapeDtypeStruct stand-ins for every model input (dry-run contract).
+
+`input_specs(cfg, shape)` returns weak-type-correct, shardable abstract
+values for each cell kind — no device allocation ever happens:
+
+  train   -> {tokens, targets, (+vlm/audio extras)}
+  prefill -> {tokens, (+extras)}           (cache passed separately)
+  decode  -> {tokens (B,1), pos (B,)}      (cache passed separately)
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.base import ArchConfig, ShapeConfig
+from repro.parallel import sharding as shd
+
+
+def _sds(shape, dtype, logical):
+    sh = shd.named_sharding(shape, logical)
+    return jax.ShapeDtypeStruct(shape, dtype, sharding=sh)
+
+
+def input_specs(cfg: ArchConfig, shape: ShapeConfig) -> dict:
+    B, S = shape.global_batch, shape.seq_len
+    kind = shape.kind
+    if kind == "train":
+        d = {
+            "tokens": _sds((B, S), jnp.int32, ("batch", "seq")),
+            "targets": _sds((B, S), jnp.int32, ("batch", "seq")),
+        }
+        if cfg.modality == "vlm":
+            d["pixel_embeds"] = _sds((B, S, cfg.d_model), cfg.cdtype(),
+                                     ("batch", "seq", None))
+            d["pixel_mask"] = _sds((B, S), jnp.bool_, ("batch", "seq"))
+            # (B, 3, S): batch-leading so grad-accum microbatching can split
+            d["positions"] = _sds((B, 3, S), jnp.int32, ("batch", None, "seq"))
+            d["loss_mask"] = _sds((B, S), jnp.float32, ("batch", "seq"))
+        elif cfg.modality == "audio":
+            d["frame_embeds"] = _sds((B, S, cfg.d_model), cfg.cdtype(),
+                                     ("batch", "seq", None))
+        return d
+    if kind == "prefill":
+        d = {"tokens": _sds((B, S), jnp.int32, ("batch", "seq"))}
+        if cfg.modality == "vlm":
+            d["pixel_embeds"] = _sds((B, S, cfg.d_model), cfg.cdtype(),
+                                     ("batch", "seq", None))
+            d["pixel_mask"] = _sds((B, S), jnp.bool_, ("batch", "seq"))
+            d["positions"] = _sds((B, 3, S), jnp.int32, ("batch", None, "seq"))
+        elif cfg.modality == "audio":
+            d["frame_embeds"] = _sds((B, S, cfg.d_model), cfg.cdtype(),
+                                     ("batch", "seq", None))
+        return d
+    if kind == "decode":
+        return {
+            "tokens": _sds((B, 1), jnp.int32, ("batch", None)),
+            "pos": _sds((B,), jnp.int32, ("batch",)),
+        }
+    raise ValueError(kind)

@@ -1,0 +1,149 @@
+"""Pallas TPU kernel: multiplication-free binary-activation matmul.
+
+TPU adaptation of the paper's L5 "selected addends" rewrite: with
+activations x in {0,1}, a dense layer is a *masked column sum*
+
+    y[b, :] = sum_{k : x[b,k] == 1} w[k, :]
+
+i.e. adds only — the select/accumulate runs on the VPU; no multiplier
+(MXU) is engaged, mirroring the paper's removal of multiplier logic.
+
+Two input formats:
+  * int8 activations (B, K)           — `binary_matmul_kernel`
+  * bitpacked uint32 (B, K//32)       — `binary_matmul_packed_kernel`
+    (32 activations per word: 8x less HBM->VMEM traffic than int8; the
+    TPU analogue of the paper's single-bit wires)
+
+Tiling: grid (B/bm, N/bn, K/bk) with the K axis innermost (sequential on
+TPU), accumulating into the output block, which stays resident in VMEM
+across the K sweep (revisited blocks are not re-fetched).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+# --------------------------------------------------------------------------
+# int8-activation kernel
+# --------------------------------------------------------------------------
+
+def _binary_matmul_kernel(x_ref, w_ref, o_ref):
+    """x: (bm, bk) int8 {0,1}; w: (bk, bn) int32; o: (bm, bn) int32."""
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    x = x_ref[...]
+    w = w_ref[...]
+    # Masked accumulate: select rows of w where the activation bit is set,
+    # then reduce over k inside the tile. (bm, bk, bn) never materializes in
+    # HBM — it is a VPU select feeding an add-reduce within VMEM.
+    sel = jnp.where(x[:, :, None] != 0, w[None, :, :], 0)
+    o_ref[...] += jnp.sum(sel, axis=1)
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk", "interpret"))
+def binary_matmul(
+    x: jnp.ndarray,
+    w: jnp.ndarray,
+    *,
+    bm: int = 128,
+    bn: int = 128,
+    bk: int = 128,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    """y = x @ w with x in {0,1}. Pads to tile multiples; returns int32 (B, N)."""
+    B, K = x.shape
+    K2, N = w.shape
+    assert K == K2, (x.shape, w.shape)
+    bm, bn, bk = min(bm, _rup(B)), min(bn, _rup(N)), min(bk, _rup(K))
+    Bp, Np, Kp = _pad_to(B, bm), _pad_to(N, bn), _pad_to(K, bk)
+    xp = jnp.zeros((Bp, Kp), jnp.int8).at[:B, :K].set(x.astype(jnp.int8))
+    wp = jnp.zeros((Kp, Np), jnp.int32).at[:K, :N].set(w.astype(jnp.int32))
+
+    out = pl.pallas_call(
+        _binary_matmul_kernel,
+        grid=(Bp // bm, Np // bn, Kp // bk),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, k: (i, k)),
+            pl.BlockSpec((bk, bn), lambda i, j, k: (k, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((Bp, Np), jnp.int32),
+        interpret=interpret,
+    )(xp, wp)
+    return out[:B, :N]
+
+
+# --------------------------------------------------------------------------
+# bitpacked kernel: 32 activations per uint32 word
+# --------------------------------------------------------------------------
+
+def _binary_matmul_packed_kernel(xp_ref, w_ref, o_ref, *, bkw: int):
+    """xp: (bm, bkw) uint32; w: (bkw*32, bn) int32; o: (bm, bn) int32."""
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    xp = xp_ref[...]                       # (bm, bkw)
+    w = w_ref[...]                         # (bkw*32, bn)
+    bm = xp.shape[0]
+    bn = w.shape[1]
+    # Unpack 32 bits per word in-register, then masked-accumulate.
+    shifts = jnp.arange(32, dtype=jnp.uint32)
+    bits = (xp[:, :, None] >> shifts[None, None, :]) & jnp.uint32(1)
+    bits = bits.reshape(bm, bkw * 32)      # (bm, bk) in {0,1}
+    sel = jnp.where(bits[:, :, None] != 0, w[None, :, :], 0)
+    o_ref[...] += jnp.sum(sel, axis=1)
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "bkw", "interpret"))
+def binary_matmul_packed(
+    xp: jnp.ndarray,
+    w: jnp.ndarray,
+    *,
+    bm: int = 128,
+    bn: int = 128,
+    bkw: int = 8,          # K-tile in 32-bit words -> bk = 256 bits
+    interpret: bool = True,
+) -> jnp.ndarray:
+    """y = unpack(xp) @ w. xp: uint32 (B, K//32); w: (K, N) int32."""
+    B, KW = xp.shape
+    K, N = w.shape
+    assert KW * 32 == K, (xp.shape, w.shape)
+    bm = min(bm, _rup(B))
+    bn = min(bn, _rup(N))
+    bkw = min(bkw, KW)
+    Bp, Np, KWp = _pad_to(B, bm), _pad_to(N, bn), _pad_to(KW, bkw)
+    xpp = jnp.zeros((Bp, KWp), jnp.uint32).at[:B, :KW].set(xp)
+    wp = jnp.zeros((KWp * 32, Np), jnp.int32).at[:K, :N].set(w.astype(jnp.int32))
+
+    out = pl.pallas_call(
+        functools.partial(_binary_matmul_packed_kernel, bkw=bkw),
+        grid=(Bp // bm, Np // bn, KWp // bkw),
+        in_specs=[
+            pl.BlockSpec((bm, bkw), lambda i, j, k: (i, k)),
+            pl.BlockSpec((bkw * 32, bn), lambda i, j, k: (k, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((Bp, Np), jnp.int32),
+        interpret=interpret,
+    )(xpp, wp)
+    return out[:B, :N]
+
+
+def _rup(x: int, m: int = 8) -> int:
+    """Round up to a small hardware-friendly multiple for tiny dims."""
+    return max(m, ((x + m - 1) // m) * m)
+
+
+def _pad_to(x: int, m: int) -> int:
+    return ((x + m - 1) // m) * m

@@ -1,0 +1,32 @@
+"""Public ops for the binary (multiplication-free) matmul kernel."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.kernels.binary_matvec import binary_matvec as _k
+from repro.kernels.binary_matvec import ref as _ref
+
+# Default to interpret mode (this container is CPU-only); on a real TPU
+# deployment, set interpret=False via these wrappers.
+_INTERPRET = True
+
+
+def binary_matmul(x: jnp.ndarray, w: jnp.ndarray, **kw) -> jnp.ndarray:
+    """y = x @ w, x in {0,1} (int8), w int — adds-only Pallas kernel."""
+    kw.setdefault("interpret", _INTERPRET)
+    return _k.binary_matmul(x, w, **kw)
+
+
+def binary_matmul_packed(xp: jnp.ndarray, w: jnp.ndarray, **kw) -> jnp.ndarray:
+    """y = unpack(xp) @ w for bitpacked activations (uint32 words)."""
+    kw.setdefault("interpret", _INTERPRET)
+    return _k.binary_matmul_packed(xp, w, **kw)
+
+
+def pack_bits(x: jnp.ndarray) -> jnp.ndarray:
+    """Pack binary activations 32-per-uint32 (pads K up to a /32 multiple)."""
+    b, k = x.shape
+    kp = ((k + 31) // 32) * 32
+    if kp != k:
+        x = jnp.zeros((b, kp), x.dtype).at[:, :k].set(x)
+    return _ref.pack_bits_ref(x)

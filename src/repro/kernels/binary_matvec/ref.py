@@ -1,0 +1,41 @@
+"""Pure-jnp oracle for the multiplication-free binary matmul.
+
+Semantics: y[b, n] = sum_k x[b, k] * w[k, n] with x in {0, 1}.
+The oracle is written as the masked column-sum (adds only) to document the
+arithmetic identity the kernel exploits; numerically it equals the matmul.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def binary_matmul_ref(x: jnp.ndarray, w: jnp.ndarray) -> jnp.ndarray:
+    """x: (B, K) in {0,1} any int dtype; w: (K, N) int32. Returns int32 (B, N)."""
+    x = x.astype(jnp.int32)
+    w = w.astype(jnp.int32)
+    return x @ w
+
+
+def binary_matmul_masked_ref(x: jnp.ndarray, w: jnp.ndarray) -> jnp.ndarray:
+    """Adds-only form: y = sum of rows of w where the input bit is set."""
+    mask = (x != 0)
+    return jnp.sum(jnp.where(mask[:, :, None], w[None].astype(jnp.int32), 0), axis=1)
+
+
+def pack_bits_ref(x: jnp.ndarray) -> jnp.ndarray:
+    """Pack binary (B, K) with K % 32 == 0 into uint32 (B, K // 32).
+    Bit i of word j holds x[:, 32*j + i] (little-endian within the word)."""
+    b, k = x.shape
+    assert k % 32 == 0, k
+    xr = (x != 0).astype(jnp.uint32).reshape(b, k // 32, 32)
+    shifts = jnp.arange(32, dtype=jnp.uint32)
+    return jnp.sum(xr << shifts[None, None, :], axis=-1, dtype=jnp.uint32)
+
+
+def unpack_bits_ref(xp: jnp.ndarray, k: int) -> jnp.ndarray:
+    """Inverse of pack_bits_ref -> int8 (B, K)."""
+    b, kw = xp.shape
+    assert kw * 32 >= k
+    shifts = jnp.arange(32, dtype=jnp.uint32)
+    bits = (xp[:, :, None] >> shifts[None, None, :]) & jnp.uint32(1)
+    return bits.reshape(b, kw * 32)[:, :k].astype(jnp.int8)

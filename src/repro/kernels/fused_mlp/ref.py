@@ -1,0 +1,17 @@
+"""Pure-jnp oracle for the fused whole-network MLP kernel."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def fused_mlp_predict_ref(
+    x_uint8: jnp.ndarray, w1: jnp.ndarray, w2: jnp.ndarray, *, threshold: int = 128
+) -> jnp.ndarray:
+    """Whole paper network: binarize -> int matmul -> step -> int matmul ->
+    argmax. x: (B, n_in) uint8; w1: (n_in, H) int32; w2: (H, n_out) int32.
+    Returns int32 predictions (B,)."""
+    x = (x_uint8.astype(jnp.int32) > threshold).astype(jnp.int32)
+    hi = x @ w1.astype(jnp.int32)
+    ho = (hi > 0).astype(jnp.int32)
+    fi = ho @ w2.astype(jnp.int32)
+    return jnp.argmax(fi, axis=-1).astype(jnp.int32)

@@ -1,0 +1,90 @@
+"""Pallas TPU kernel: W8A8 integer matmul with fused dequant epilogue.
+
+Generalization of the paper's L3 (integer-weight) optimization to the TPU:
+the MXU executes int8 x int8 -> int32 at up to 2x the bf16 rate on real
+TPUs, and int8 weights halve HBM traffic vs bf16 — the same two wins
+(cheaper arithmetic, smaller storage) the paper buys on the FPGA.
+
+Tiling: grid (M/bm, N/bn, K/bk), K innermost (sequential); int32
+accumulator lives in a VMEM scratch block across the K sweep; the fp32
+dequant (per-tensor activation scale x per-channel weight scale) is fused
+into the epilogue on the last K step, so the int32 accumulator never
+touches HBM.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _quant_matmul_kernel(x_ref, w_ref, sx_ref, sw_ref, o_ref, acc_ref):
+    k = pl.program_id(2)
+    nk = pl.num_programs(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jax.lax.dot(
+        x_ref[...].astype(jnp.int32),
+        w_ref[...].astype(jnp.int32),
+        preferred_element_type=jnp.int32,
+    )
+
+    @pl.when(k == nk - 1)
+    def _epilogue():
+        sx = sx_ref[0]
+        sw = sw_ref[...]                       # (bn,)
+        o_ref[...] = acc_ref[...].astype(jnp.float32) * sx * sw[None, :]
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk", "interpret"))
+def quant_matmul(
+    x_q: jnp.ndarray,
+    w_q: jnp.ndarray,
+    sx: jnp.ndarray,
+    sw: jnp.ndarray,
+    *,
+    bm: int = 128,
+    bn: int = 128,
+    bk: int = 128,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    """y = (x_q @ w_q) * sx * sw. x_q int8 (M,K); w_q int8 (K,N); fp32 out."""
+    M, K = x_q.shape
+    K2, N = w_q.shape
+    assert K == K2 and sw.shape == (N,), (x_q.shape, w_q.shape, sw.shape)
+    bm, bn, bk = min(bm, _rup(M)), min(bn, _rup(N)), min(bk, _rup(K))
+    Mp, Np, Kp = _pad(M, bm), _pad(N, bn), _pad(K, bk)
+    xp = jnp.zeros((Mp, Kp), jnp.int8).at[:M, :K].set(x_q)
+    wp = jnp.zeros((Kp, Np), jnp.int8).at[:K, :N].set(w_q)
+    swp = jnp.zeros((Np,), jnp.float32).at[:N].set(sw)
+    sx = jnp.asarray(sx, jnp.float32).reshape((1,))
+
+    out = pl.pallas_call(
+        _quant_matmul_kernel,
+        grid=(Mp // bm, Np // bn, Kp // bk),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, k: (i, k)),
+            pl.BlockSpec((bk, bn), lambda i, j, k: (k, j)),
+            pl.BlockSpec((1,), lambda i, j, k: (0,)),
+            pl.BlockSpec((bn,), lambda i, j, k: (j,)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((Mp, Np), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.int32)],
+        interpret=interpret,
+    )(xp, wp, sx, swp)
+    return out[:M, :N]
+
+
+def _rup(x: int, m: int = 8) -> int:
+    return max(m, ((x + m - 1) // m) * m)
+
+
+def _pad(x: int, m: int) -> int:
+    return ((x + m - 1) // m) * m

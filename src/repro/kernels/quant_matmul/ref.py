@@ -1,0 +1,35 @@
+"""Pure-jnp oracle for the W8A8 quantized matmul.
+
+Semantics: y = (x_q @ w_q) * sx * sw[None, :]
+  x_q int8 (M, K), per-tensor activation scale sx (scalar fp32)
+  w_q int8 (K, N), per-output-channel scale sw (N,) fp32
+Accumulation in int32 (exact), dequant in fp32.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def quant_matmul_ref(
+    x_q: jnp.ndarray, w_q: jnp.ndarray, sx: jnp.ndarray, sw: jnp.ndarray
+) -> jnp.ndarray:
+    acc = jnp.dot(
+        x_q.astype(jnp.int32), w_q.astype(jnp.int32), preferred_element_type=jnp.int32
+    )
+    return acc.astype(jnp.float32) * sx * sw[None, :]
+
+
+def quantize_act_ref(x: jnp.ndarray) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Symmetric per-tensor int8 quantization of activations."""
+    amax = jnp.maximum(jnp.max(jnp.abs(x)), 1e-8)
+    s = amax / 127.0
+    q = jnp.clip(jnp.round(x / s), -127, 127).astype(jnp.int8)
+    return q, s.astype(jnp.float32)
+
+
+def quantize_weight_ref(w: jnp.ndarray) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Symmetric per-output-channel int8 quantization of weights (K, N)."""
+    amax = jnp.maximum(jnp.max(jnp.abs(w), axis=0), 1e-8)   # (N,)
+    s = amax / 127.0
+    q = jnp.clip(jnp.round(w / s[None, :]), -127, 127).astype(jnp.int8)
+    return q, s.astype(jnp.float32)

@@ -1,0 +1,41 @@
+"""Public op for the Mamba2 SSD scan kernel.
+
+`ssd` takes the model-layout tensors (batch, length, heads, ...) used by
+`repro.layers.mamba2`, flattens (B, H) into the kernel's program axis,
+broadcasts group-shared B/C to heads, and restores the layout after.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.kernels.ssd_scan import ssd_scan as _k
+
+_INTERPRET = True
+
+
+def ssd(
+    x: jnp.ndarray,        # (B, L, H, P)
+    dt: jnp.ndarray,       # (B, L, H)
+    a_per_head: jnp.ndarray,  # (H,) negative decay rates
+    b: jnp.ndarray,        # (B, L, G, N)
+    c: jnp.ndarray,        # (B, L, G, N)
+    *,
+    chunk: int = 64,
+    interpret: bool | None = None,
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Returns (y (B, L, H, P), s_final (B, H, N, P))."""
+    B, L, H, P = x.shape
+    G, N = b.shape[2], b.shape[3]
+    rep = H // G
+    interpret = _INTERPRET if interpret is None else interpret
+
+    xf = x.transpose(0, 2, 1, 3).reshape(B * H, L, P)
+    dtf = dt.transpose(0, 2, 1).reshape(B * H, L)
+    af = jnp.tile(a_per_head, (B,))
+    bf = jnp.repeat(b, rep, axis=2).transpose(0, 2, 1, 3).reshape(B * H, L, N)
+    cf = jnp.repeat(c, rep, axis=2).transpose(0, 2, 1, 3).reshape(B * H, L, N)
+
+    y, s = _k.ssd_scan(xf, dtf, af, bf, cf, chunk=chunk, interpret=interpret)
+    y = y.reshape(B, H, L, P).transpose(0, 2, 1, 3)
+    s = s.reshape(B, H, N, P)
+    return y, s

@@ -1,0 +1,104 @@
+"""Pure-jnp oracles for the Mamba2 SSD (state-space duality) scan.
+
+Semantics (per batch b, head h; head dim P, state dim N):
+
+    S_0 = S_init (or zeros)
+    S_t = exp(dt_t * A_h) * S_{t-1} + dt_t * B_t^T x_t        (N, P)
+    y_t = C_t S_t                                              (P,)
+
+with A_h < 0 (continuous-time decay), dt_t > 0, and B/C shared across the
+heads of a group. Two oracles:
+
+  * `ssd_sequential_ref` — the exact recurrence via lax.scan (ground truth)
+  * `ssd_chunked_ref`    — the SSD chunked algorithm (quadratic intra-chunk
+    "attention" + inter-chunk state recurrence), the algorithm the Pallas
+    kernel implements; validates the chunk math against the recurrence.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def ssd_sequential_ref(x, dt, a, b, c, s_init=None):
+    """x: (L, P); dt: (L,); a: scalar < 0; b, c: (L, N). Returns (y (L, P),
+    s_final (N, P)). fp32 math."""
+    x, dt, b, c = (t.astype(jnp.float32) for t in (x, dt, b, c))
+    L, P = x.shape
+    N = b.shape[-1]
+    s0 = jnp.zeros((N, P), jnp.float32) if s_init is None else s_init.astype(jnp.float32)
+
+    def step(s, inp):
+        xt, dtt, bt, ct = inp
+        decay = jnp.exp(dtt * a)
+        s = decay * s + dtt * (bt[:, None] * xt[None, :])
+        return s, ct @ s
+
+    s_final, y = jax.lax.scan(step, s0, (x, dt, b, c))
+    return y, s_final
+
+
+def ssd_chunked_ref(x, dt, a, b, c, chunk: int = 64, s_init=None):
+    """Chunked SSD, same signature/semantics as ssd_sequential_ref."""
+    x, dt, b, c = (t.astype(jnp.float32) for t in (x, dt, b, c))
+    L, P = x.shape
+    N = b.shape[-1]
+    assert L % chunk == 0, (L, chunk)
+    nc = L // chunk
+    xc = x.reshape(nc, chunk, P)
+    dtc = dt.reshape(nc, chunk)
+    bc = b.reshape(nc, chunk, N)
+    cc = c.reshape(nc, chunk, N)
+    s0 = jnp.zeros((N, P), jnp.float32) if s_init is None else s_init.astype(jnp.float32)
+
+    def per_chunk(s_prev, inp):
+        xq, dtq, bq, cq = inp                     # (Q,P) (Q,) (Q,N) (Q,N)
+        da = dtq * a                              # (Q,) <= 0
+        cum = jnp.cumsum(da)                      # (Q,)
+        # intra-chunk: masked decay matrix  Lmat[t,s] = exp(cum_t - cum_s), t>=s
+        diff = cum[:, None] - cum[None, :]
+        lmat = jnp.where(
+            jnp.tril(jnp.ones((dtq.shape[0],) * 2, bool)), jnp.exp(diff), 0.0
+        )
+        scores = (cq @ bq.T) * lmat               # (Q, Q)
+        y = scores @ (xq * dtq[:, None])          # (Q, P)
+        # inter-chunk: contribution of the carried state
+        y = y + (cq * jnp.exp(cum)[:, None]) @ s_prev
+        # state update: decay to end of chunk
+        decay_to_end = jnp.exp(cum[-1] - cum)     # (Q,)
+        s_new = jnp.exp(cum[-1]) * s_prev + (
+            (bq * (dtq * decay_to_end)[:, None]).T @ xq
+        )                                          # (N, P)
+        return s_new, y
+
+    s_final, yc = jax.lax.scan(per_chunk, s0, (xc, dtc, bc, cc))
+    return yc.reshape(L, P), s_final
+
+
+def ssd_batched_ref(x, dt, a_per_head, b, c, chunk: int = 64, s_init=None):
+    """Batched/multi-head oracle.
+    x: (B, L, H, P); dt: (B, L, H); a: (H,); b, c: (B, L, G, N) with H % G == 0.
+    Returns y (B, L, H, P), s_final (B, H, N, P)."""
+    B, L, H, P = x.shape
+    G = b.shape[2]
+    rep = H // G
+    bh = jnp.repeat(b, rep, axis=2)   # (B, L, H, N)
+    ch = jnp.repeat(c, rep, axis=2)
+
+    def one(bi, hi):
+        s0 = None if s_init is None else s_init[bi, hi]
+        return ssd_chunked_ref(
+            x[bi, :, hi], dt[bi, :, hi], a_per_head[hi], bh[bi, :, hi], ch[bi, :, hi],
+            chunk=chunk, s_init=s0,
+        )
+
+    ys, ss = [], []
+    for bi in range(B):
+        yb, sb = [], []
+        for hi in range(H):
+            y, s = one(bi, hi)
+            yb.append(y)
+            sb.append(s)
+        ys.append(jnp.stack(yb, axis=1))       # (L, H, P)
+        ss.append(jnp.stack(sb, axis=0))       # (H, N, P)
+    return jnp.stack(ys), jnp.stack(ss)

@@ -1,0 +1,110 @@
+"""Pallas TPU kernel: Mamba2 SSD chunked scan.
+
+The SSD (state-space duality) decomposition splits the linear recurrence
+into (i) a quadratic intra-chunk term — an MXU-friendly (Q x Q) masked
+"attention" — and (ii) a tiny inter-chunk state recurrence carried in VMEM
+scratch across sequential grid steps. This is the TPU-native shape of the
+algorithm: the FLOP-dense part lands on the MXU with hardware-aligned
+(Q, N, P) tiles, while the serial dependency is a (N, P) carry that never
+leaves VMEM.
+
+Grid: (B*H, L/Q) — the chunk axis is last, i.e. innermost/sequential on
+TPU, so the scratch state persists across the chunk sweep of each (b, h)
+program and is reset when a new (b, h) begins.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _ssd_kernel(x_ref, dt_ref, a_ref, b_ref, c_ref, y_ref, sfin_ref, s_ref):
+    """Blocks (leading grid dim squeezed):
+      x (1, Q, P) | dt (1, Q) | a (1,) | b/c (1, Q, N)
+      y (1, Q, P) | sfin (1, N, P) | scratch s (N, P) fp32
+    """
+    q = pl.program_id(1)
+    nq = pl.num_programs(1)
+
+    @pl.when(q == 0)
+    def _reset():
+        s_ref[...] = jnp.zeros_like(s_ref)
+
+    xq = x_ref[0].astype(jnp.float32)          # (Q, P)
+    dtq = dt_ref[0].astype(jnp.float32)        # (Q,)
+    a = a_ref[0].astype(jnp.float32)           # scalar (decay rate < 0)
+    bq = b_ref[0].astype(jnp.float32)          # (Q, N)
+    cq = c_ref[0].astype(jnp.float32)          # (Q, N)
+
+    da = dtq * a
+    cum = jnp.cumsum(da)                       # (Q,)
+    Q = dtq.shape[0]
+    tri = jnp.tril(jnp.ones((Q, Q), jnp.bool_))
+    lmat = jnp.where(tri, jnp.exp(cum[:, None] - cum[None, :]), 0.0)
+
+    # intra-chunk quadratic term (two MXU matmuls)
+    scores = jax.lax.dot(cq, bq.T, preferred_element_type=jnp.float32) * lmat
+    y = jax.lax.dot(scores, xq * dtq[:, None], preferred_element_type=jnp.float32)
+
+    # inter-chunk: carried state contribution
+    s_prev = s_ref[...]
+    y = y + jax.lax.dot(
+        cq * jnp.exp(cum)[:, None], s_prev, preferred_element_type=jnp.float32
+    )
+    y_ref[0] = y.astype(y_ref.dtype)
+
+    # state update for the next chunk
+    decay_to_end = jnp.exp(cum[-1] - cum)
+    s_new = jnp.exp(cum[-1]) * s_prev + jax.lax.dot(
+        (bq * (dtq * decay_to_end)[:, None]).T, xq, preferred_element_type=jnp.float32
+    )
+    s_ref[...] = s_new
+
+    @pl.when(q == nq - 1)
+    def _emit_state():
+        sfin_ref[0] = s_new.astype(sfin_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ssd_scan(
+    x: jnp.ndarray,      # (BH, L, P)
+    dt: jnp.ndarray,     # (BH, L)
+    a: jnp.ndarray,      # (BH,)  per-(batch,head) decay rate (A broadcast)
+    b: jnp.ndarray,      # (BH, L, N)
+    c: jnp.ndarray,      # (BH, L, N)
+    *,
+    chunk: int = 64,
+    interpret: bool = True,
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Returns (y (BH, L, P), s_final (BH, N, P) fp32)."""
+    BH, L, P = x.shape
+    N = b.shape[-1]
+    assert L % chunk == 0, (L, chunk)
+    nq = L // chunk
+
+    y, sfin = pl.pallas_call(
+        _ssd_kernel,
+        grid=(BH, nq),
+        in_specs=[
+            pl.BlockSpec((1, chunk, P), lambda i, q: (i, q, 0)),
+            pl.BlockSpec((1, chunk), lambda i, q: (i, q)),
+            pl.BlockSpec((1,), lambda i, q: (i,)),
+            pl.BlockSpec((1, chunk, N), lambda i, q: (i, q, 0)),
+            pl.BlockSpec((1, chunk, N), lambda i, q: (i, q, 0)),
+        ],
+        out_specs=(
+            pl.BlockSpec((1, chunk, P), lambda i, q: (i, q, 0)),
+            pl.BlockSpec((1, N, P), lambda i, q: (i, 0, 0)),
+        ),
+        out_shape=(
+            jax.ShapeDtypeStruct((BH, L, P), x.dtype),
+            jax.ShapeDtypeStruct((BH, N, P), jnp.float32),
+        ),
+        scratch_shapes=[pltpu.VMEM((N, P), jnp.float32)],
+        interpret=interpret,
+    )(x, dt, a, b, c)
+    return y, sfin

@@ -1,0 +1,62 @@
+"""Production training launcher.
+
+  python -m repro.launch.train --arch llama3.2-3b --shape train_4k \
+      [--smoke] [--steps N] [--resume] [--mesh-data D --mesh-model M]
+
+On this container (1 CPU device) use --smoke, which runs the reduced
+same-family config on a trivial mesh — the code path (mesh + sharded
+train_step + checkpoint manager + fault tolerance) is identical to the
+production one; only the mesh shape differs. On a real cluster the same
+entry point builds the 16x16 (or 2x16x16 with --multi-pod) mesh from
+`repro.launch.mesh` and proceeds unchanged.
+"""
+from __future__ import annotations
+
+import argparse
+
+import jax
+
+from repro import configs
+from repro.launch.mesh import make_host_mesh, make_production_mesh
+from repro.models.base import SHAPES, ShapeConfig
+from repro.optim import adamw
+from repro.parallel import sharding as shd
+from repro.train import trainer
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", default="train_4k")
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--resume", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_launch_train")
+    ap.add_argument("--lr", type=float, default=3e-4)
+    args = ap.parse_args()
+
+    if args.smoke:
+        cfg = configs.smoke(args.arch)
+        shape = ShapeConfig("smoke", seq_len=64, global_batch=4, kind="train")
+        mesh = make_host_mesh()
+    else:
+        cfg = configs.get_config(args.arch)
+        shape = SHAPES[args.shape]
+        mesh = make_production_mesh(multi_pod=args.multi_pod)
+
+    oc = adamw.OptConfig(lr=args.lr, total_steps=args.steps)
+    tc = trainer.TrainerConfig(total_steps=args.steps, ckpt_every=25,
+                               ckpt_dir=args.ckpt_dir,
+                               remat="none" if args.smoke else "full")
+    rules = {"batch": ("data",)} if not args.multi_pod else {}
+    with shd.use_mesh(mesh, rules), mesh:
+        state, hist = trainer.run(cfg, shape, oc, tc, resume=args.resume)
+    if hist["loss"]:
+        print(f"steps={len(hist['loss'])} "
+              f"loss {hist['loss'][0]:.4f} -> {hist['loss'][-1]:.4f} "
+              f"stragglers={len(hist['stragglers'])}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,189 @@
+"""Multi-head attention with GQA/MQA, RoPE/M-RoPE, and a KV cache.
+
+Sharding strategy (annotated via logical axes, DESIGN.md §5):
+  * projections: weights (d -> heads*hd) sharded fsdp x heads-TP;
+  * attention core: heads sharded over the model axis when the head count
+    divides it; otherwise the *query sequence* is sharded (the divisibility
+    fallback in parallel.sharding handles GQA head counts like 20 or 24
+    that don't divide a 16-way model axis);
+  * decode KV cache: sequence dim sharded over the model axis
+    (flash-decode style) so a 32k-token cache for 128 sequences fits.
+
+The cache layout is (B, KV, S_max, hd); `pos` is a per-sequence int32
+write index, enabling batched continuous decoding in the serving engine.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.layers import rotary
+from repro.layers.common import wx
+from repro.models.base import ArchConfig, ParamInfo
+from repro.parallel.sharding import shard
+
+NEG_INF = -2.0e38
+FLASH_MIN_SEQ = 2048   # dense path below this (smoke tests, short prompts)
+
+
+def attn_params(cfg: ArchConfig, n_layers: int | None = None) -> dict:
+    """Abstract attention params; leading n_layers dim when stacked."""
+    H, KV, hd, d = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim, cfg.d_model
+    L = () if n_layers is None else (n_layers,)
+    nl = (None,) * len(L)
+    fan = len(L)
+    p = {
+        "wq": ParamInfo(L + (d, H, hd), jnp.float32, nl + ("fsdp", "heads", None), fan=fan),
+        "wk": ParamInfo(L + (d, KV, hd), jnp.float32, nl + ("fsdp", "kv_heads", None), fan=fan),
+        "wv": ParamInfo(L + (d, KV, hd), jnp.float32, nl + ("fsdp", "kv_heads", None), fan=fan),
+        "wo": ParamInfo(L + (H, hd, d), jnp.float32, nl + ("heads", None, "fsdp"), fan=fan),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = ParamInfo(L + (H, hd), jnp.float32, nl + ("heads", None), init="zeros")
+        p["bk"] = ParamInfo(L + (KV, hd), jnp.float32, nl + ("kv_heads", None), init="zeros")
+        p["bv"] = ParamInfo(L + (KV, hd), jnp.float32, nl + ("kv_heads", None), init="zeros")
+    return p
+
+
+def init_cache_info(cfg: ArchConfig, batch: int, max_len: int) -> dict:
+    """Abstract KV cache for one attention site (stacked over sites by the
+    caller). Sequence dim sharded over the model axis (kv_seq)."""
+    KV, hd = cfg.n_kv_heads, cfg.head_dim
+    dt = cfg.cdtype()
+    return {
+        "k": ParamInfo((batch, KV, max_len, hd), dt,
+                       ("batch", "kv_heads", "kv_seq", None), init="zeros"),
+        "v": ParamInfo((batch, KV, max_len, hd), dt,
+                       ("batch", "kv_heads", "kv_seq", None), init="zeros"),
+    }
+
+
+def _project(x, w, b=None):
+    """(B, S, D) x (D, H, hd) -> (B, S, H, hd) in compute dtype."""
+    y = jnp.einsum("bsd,dhk->bshk", x, wx(w, x.dtype))
+    if b is not None:
+        y = y + b.astype(x.dtype)
+    return y
+
+
+def _repeat_kv(k: jnp.ndarray, n_heads: int) -> jnp.ndarray:
+    """(B, KV, S, hd) -> (B, H, S, hd) by repeating each kv head."""
+    kv = k.shape[1]
+    if kv == n_heads:
+        return k
+    return jnp.repeat(k, n_heads // kv, axis=1)
+
+
+def attention(
+    cfg: ArchConfig,
+    p: dict,
+    x: jnp.ndarray,                 # (B, S, D)
+    positions: jnp.ndarray,         # (B, S) int32, or (3, B, S) for mrope
+    *,
+    cache: dict | None = None,      # {"k","v"} (B, KV, S_max, hd)
+    cache_pos: jnp.ndarray | None = None,  # (B,) write index for decode
+    causal: bool = True,
+) -> tuple[jnp.ndarray, dict | None]:
+    """Returns (out (B, S, D), updated cache or None)."""
+    B, S, D = x.shape
+    H, KV, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+
+    q = _project(x, p["wq"], p.get("bq"))            # (B, S, H, hd)
+    k = _project(x, p["wk"], p.get("bk"))            # (B, S, KV, hd)
+    v = _project(x, p["wv"], p.get("bv"))
+
+    if cfg.pos == "rope":
+        pos2d = positions
+        q = rotary.rope(q, pos2d, cfg.rope_theta)
+        k = rotary.rope(k, pos2d, cfg.rope_theta)
+    elif cfg.pos == "mrope":
+        q = rotary.mrope(q, positions, cfg.rope_theta, cfg.mrope_sections)
+        k = rotary.mrope(k, positions, cfg.rope_theta, cfg.mrope_sections)
+    # cfg.pos == "sin": absolute embeddings added at the input; nothing here.
+
+    q = q.transpose(0, 2, 1, 3)                      # (B, H, S, hd)
+    k = k.transpose(0, 2, 1, 3)                      # (B, KV, S, hd)
+    v = v.transpose(0, 2, 1, 3)
+
+    new_cache = None
+    if cache is not None:
+        if cache_pos is not None:
+            # decode: scatter this step's K/V at each sequence's position
+            if S != 1:
+                raise ValueError("cache_pos decode expects S == 1")
+            ck, cv = cache["k"], cache["v"]
+            from repro.models import runtime
+            if runtime.flag("cache_update", "where") == "scatter":
+                # hillclimb variant: true scatter touches only the written
+                # row (the `where` select streams the whole cache twice)
+                bidx = jnp.arange(B)
+                ck = ck.at[bidx, :, cache_pos, :].set(k[:, :, 0, :].astype(ck.dtype))
+                cv = cv.at[bidx, :, cache_pos, :].set(v[:, :, 0, :].astype(cv.dtype))
+            else:
+                idx = cache_pos[:, None, None, None]     # (B,1,1,1)
+                seq_iota = jax.lax.broadcasted_iota(jnp.int32, ck.shape, 2)
+                ck = jnp.where(seq_iota == idx, k.astype(ck.dtype), ck)
+                cv = jnp.where(seq_iota == idx, v.astype(cv.dtype), cv)
+            k_full, v_full = ck, cv
+            kv_len = ck.shape[2]
+            new_cache = {"k": ck, "v": cv}
+            # attention mask: only positions <= cache_pos are valid
+            valid = jax.lax.broadcasted_iota(jnp.int32, (B, 1, 1, kv_len), 3) <= (
+                cache_pos[:, None, None, None])
+        else:
+            # prefill: write the computed K/V into the cache buffer
+            ck = jnp.zeros_like(cache["k"]).at[:, :, :S, :].set(k.astype(cache["k"].dtype))
+            cv = jnp.zeros_like(cache["v"]).at[:, :, :S, :].set(v.astype(cache["v"].dtype))
+            new_cache = {"k": ck, "v": cv}
+            k_full, v_full, kv_len, valid = k, v, S, None
+    else:
+        k_full, v_full, kv_len, valid = k, v, S, None
+
+    q = shard(q, "batch", "heads", "seq", None)
+    k_full = shard(k_full, "batch", "kv_heads", "kv_seq" if cache is not None else "seq", None)
+    v_full = shard(v_full, "batch", "kv_heads", "kv_seq" if cache is not None else "seq", None)
+
+    if valid is None and causal and S >= FLASH_MIN_SEQ:
+        # long-sequence path: flash-style chunked attention — a dense
+        # (B, H, S, S) score tensor at the assigned shapes is petabytes.
+        from repro.layers.flash import flash_attention
+        ctx = flash_attention(q, k_full, v_full, causal=True)
+    else:
+        from repro.models import runtime as _rt
+        if _rt.flag("attn_impl", "grouped") == "repeat":
+            # legacy path (hillclimb A/B): materializing the GQA head
+            # repeat makes GSPMD replicate the seq-sharded KV cache —
+            # see EXPERIMENTS.md §Perf (qwen2-72b decode).
+            kr = _repeat_kv(k_full, H)               # (B, H, T, hd)
+            vr = _repeat_kv(v_full, H)
+            scale = hd ** -0.5
+            scores = jnp.einsum("bhsk,bhtk->bhst", q, kr).astype(jnp.float32) * scale
+            if valid is not None:
+                scores = jnp.where(valid, scores, NEG_INF)
+            elif causal and S > 1:
+                qi = jax.lax.broadcasted_iota(jnp.int32, (S, kv_len), 0)
+                ki = jax.lax.broadcasted_iota(jnp.int32, (S, kv_len), 1)
+                scores = jnp.where((ki <= qi)[None, None], scores, NEG_INF)
+            probs = jax.nn.softmax(scores, axis=-1).astype(x.dtype)
+            ctx = jnp.einsum("bhst,bhtk->bhsk", probs, vr)
+        else:
+            # grouped GQA: query heads reshaped (KV, rep); K/V consumed in
+            # their stored layout — no repeat, cache stays seq-sharded and
+            # the softmax/PV contractions reduce over the model axis.
+            rep = H // KV
+            qg = q.reshape(B, KV, rep, S, hd)
+            scale = hd ** -0.5
+            scores = jnp.einsum("bgrsk,bgtk->bgrst", qg, k_full)
+            scores = scores.astype(jnp.float32) * scale   # (B,KV,rep,S,T)
+            if valid is not None:
+                scores = jnp.where(valid[:, :, None], scores, NEG_INF)
+            elif causal and S > 1:
+                qi = jax.lax.broadcasted_iota(jnp.int32, (S, kv_len), 0)
+                ki = jax.lax.broadcasted_iota(jnp.int32, (S, kv_len), 1)
+                scores = jnp.where((ki <= qi)[None, None, None], scores, NEG_INF)
+            probs = jax.nn.softmax(scores, axis=-1).astype(x.dtype)
+            ctx = jnp.einsum("bgrst,bgtk->bgrsk", probs, v_full)
+            ctx = ctx.reshape(B, H, S, hd)
+    ctx = ctx.transpose(0, 2, 1, 3)                  # (B, S, H, hd)
+    out = jnp.einsum("bshk,hkd->bsd", ctx, wx(p["wo"], x.dtype))
+    return out, new_cache

@@ -1,0 +1,24 @@
+"""Weight-access helper supporting quantized (int8 + per-channel scale)
+parameter leaves — the paper's integer-weight specialization threaded
+through the LM serving path.
+
+A parameter leaf is either a plain array or `{"q": int8, "s": fp32}`
+(per-output-channel scales over the LAST dim). `wx(w, dtype)` returns the
+compute-dtype weight either way; on the quantized path the int8 tensor is
+what streams from HBM (half of bf16, quarter of fp32), and XLA fuses the
+convert+scale into the consuming matmul on TPU.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def is_q(w) -> bool:
+    return isinstance(w, dict) and set(w.keys()) == {"q", "s"}
+
+
+def wx(w, dtype) -> jnp.ndarray:
+    """Materialize a weight in compute dtype (dequantizing if needed)."""
+    if is_q(w):
+        return (w["q"].astype(jnp.float32) * w["s"]).astype(dtype)
+    return w.astype(dtype)

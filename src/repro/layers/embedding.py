@@ -1,0 +1,82 @@
+"""Token embedding, LM head, and input assembly for text/vlm/audio."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.layers import rotary
+from repro.layers.common import is_q
+from repro.models.base import ArchConfig, ParamInfo
+from repro.parallel.sharding import shard
+
+
+def embed_params(cfg: ArchConfig) -> dict:
+    p = {
+        "tok": ParamInfo((cfg.vocab, cfg.d_model), jnp.float32,
+                         ("vocab", "fsdp"), scale=1.0),
+    }
+    if not cfg.tie_embeddings:
+        p["head"] = ParamInfo((cfg.d_model, cfg.vocab), jnp.float32,
+                              ("fsdp", "vocab"))
+    return p
+
+
+def embed(cfg: ArchConfig, p: dict, tokens: jnp.ndarray) -> jnp.ndarray:
+    """tokens (B, S) -> (B, S, D) in compute dtype."""
+    tok = p["tok"]
+    if is_q(tok):
+        rows = jnp.take(tok["q"], tokens, axis=0).astype(jnp.float32)
+        h = (rows * tok["s"]).astype(cfg.cdtype())
+    else:
+        h = jnp.take(tok.astype(cfg.cdtype()), tokens, axis=0)
+    if cfg.scale_embedding:
+        h = h * jnp.asarray(cfg.d_model ** 0.5, h.dtype)
+    return h
+
+
+def lm_head(cfg: ArchConfig, p: dict, h: jnp.ndarray) -> jnp.ndarray:
+    """h (B, S, D) -> logits (B, S, V) (vocab-sharded)."""
+    w = p["tok"] if cfg.tie_embeddings else p["head"]
+    if is_q(w):
+        if cfg.tie_embeddings:
+            # w = q * s with per-d_model scales: fold s into h, matmul int8^T
+            logits = jnp.einsum("bsd,vd->bsv", h * w["s"].astype(h.dtype),
+                                w["q"].astype(h.dtype))
+        else:
+            logits = jnp.einsum(
+                "bsd,dv->bsv", h,
+                (w["q"].astype(jnp.float32) * w["s"]).astype(h.dtype))
+    else:
+        wm = w.T if cfg.tie_embeddings else w
+        logits = jnp.einsum("bsd,dv->bsv", h, wm.astype(h.dtype))
+    return shard(logits, "batch", "seq", "vocab")
+
+
+def assemble_inputs(cfg: ArchConfig, p: dict, batch: dict) -> jnp.ndarray:
+    """Build the backbone input (B, S, D) per modality.
+
+    text : embed(tokens)
+    vlm  : embed(tokens) with image-position slots overwritten by the stub
+           frontend's precomputed patch embeddings (`pixel_embeds`,
+           `pixel_mask`), per spec ([vlm] = backbone only)
+    audio: precomputed EnCodec frame embeddings from the stub frontend are
+           added to the (coarse) token embedding, plus sinusoidal positions
+    """
+    if cfg.modality == "text":
+        return embed(cfg, p, batch["tokens"])
+    if cfg.modality == "vlm":
+        h = embed(cfg, p, batch["tokens"])
+        pe = batch["pixel_embeds"].astype(h.dtype)          # (B, S, D) stub
+        mask = batch["pixel_mask"][:, :, None]              # (B, S, 1) bool
+        return jnp.where(mask, pe, h)
+    if cfg.modality == "audio":
+        h = embed(cfg, p, batch["tokens"])
+        h = h + batch["frame_embeds"].astype(h.dtype)       # stub frontend
+        if cfg.pos == "sin":
+            B, S = batch["tokens"].shape
+            pos = batch.get("positions")
+            if pos is None:
+                pos = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+            h = h + rotary.sinusoidal_embedding(pos, cfg.d_model).astype(h.dtype)
+        return h
+    raise ValueError(cfg.modality)

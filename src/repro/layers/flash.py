@@ -1,0 +1,209 @@
+"""Flash-style chunked causal attention (online softmax) with a
+memory-efficient custom VJP, pure JAX.
+
+Why: a materialized (B, H, S, S) score tensor at the assigned shapes is
+petabytes (qwen2-72b @ 32k: 32x64x32768^2 fp32 ~ 8.8 PB), and plain
+autodiff through a scanned flash forward would save per-block
+probabilities — S^2 memory again. So:
+
+  * forward: q/k tiles with running (max, sum, acc) carries — the standard
+    FlashAttention recurrence as lax.scan; saves only (q, k, v, out, lse).
+  * backward: two recomputation passes (dk/dv: outer scan over KV blocks;
+    dq: outer scan over query blocks), each emitting stacked block results
+    — no indexed accumulation, no S^2 residuals.
+
+GQA-aware: K/V stay (B, KV, T, hd); query heads are grouped (KV, rep) and
+the repeat happens inside block einsums — expanded K/V never exist.
+
+The dry-run lowers THIS path (XLA ops are visible to cost_analysis; a
+Pallas kernel would be opaque to the roofline extraction — DESIGN.md).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -2.0e38
+
+
+def flash_attention(q, k, v, *, causal: bool = True,
+                    q_blk: int = 512, k_blk: int = 1024):
+    """q: (B, H, S, hd); k/v: (B, KV, T, hd) -> (B, H, S, hd)."""
+    B, H, S, hd = q.shape
+    T = k.shape[2]
+    q_blk = min(q_blk, S)
+    k_blk = min(k_blk, T)
+    assert S % q_blk == 0 and T % k_blk == 0, (S, q_blk, T, k_blk)
+    return _flash(causal, q_blk, k_blk, q, k, v)
+
+
+# ---------------------------------------------------------------------------
+# forward
+# ---------------------------------------------------------------------------
+
+def _blocks(x, n, blk, axis_seq=3):
+    """(B, G, R, S, hd) -> (n, B, G, R, blk, hd) [or KV variants]."""
+    shp = x.shape
+    x = x.reshape(shp[:axis_seq] + (n, blk) + shp[axis_seq + 1:])
+    return jnp.moveaxis(x, axis_seq, 0)
+
+
+def _flash_fwd_impl(causal, q_blk, k_blk, q, k, v):
+    B, H, S, hd = q.shape
+    KV, T = k.shape[1], k.shape[2]
+    rep = H // KV
+    nq, nk = S // q_blk, T // k_blk
+    scale = hd ** -0.5
+
+    qg = q.reshape(B, KV, rep, S, hd)
+    qs = _blocks(qg, nq, q_blk)                     # (nq,B,KV,rep,Q,hd)
+    ks = _blocks(k, nk, k_blk, axis_seq=2)          # (nk,B,KV,K,hd)
+    vs = _blocks(v, nk, k_blk, axis_seq=2)
+
+    def q_step(_, qi_idx):
+        qi, iq = qi_idx
+
+        def kv_step(carry, kj_idx):
+            acc, m, l = carry
+            (kj, vj), jk = kj_idx
+            s = jnp.einsum("bgrqd,bgkd->bgrqk", qi, kj).astype(jnp.float32) * scale
+            if causal:
+                qpos = iq * q_blk + jax.lax.broadcasted_iota(
+                    jnp.int32, (q_blk, k_blk), 0)
+                kpos = jk * k_blk + jax.lax.broadcasted_iota(
+                    jnp.int32, (q_blk, k_blk), 1)
+                s = jnp.where((kpos <= qpos)[None, None, None], s, NEG_INF)
+            m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + jnp.sum(p, axis=-1)
+            pv = jnp.einsum("bgrqk,bgkd->bgrqd", p.astype(qi.dtype), vj)
+            acc_new = acc * corr[..., None].astype(acc.dtype) + pv
+            return (acc_new, m_new, l_new), None
+
+        acc0 = jnp.zeros(qi.shape, qi.dtype)
+        m0 = jnp.full(qi.shape[:-1], NEG_INF, jnp.float32)
+        l0 = jnp.zeros(qi.shape[:-1], jnp.float32)
+        (acc, m, l), _ = jax.lax.scan(kv_step, (acc0, m0, l0),
+                                      ((ks, vs), jnp.arange(nk)))
+        l = jnp.maximum(l, 1e-30)
+        out = acc / l[..., None].astype(acc.dtype)
+        lse = m + jnp.log(l)
+        return None, (out, lse)
+
+    _, (outs, lses) = jax.lax.scan(q_step, None, (qs, jnp.arange(nq)))
+    # outs: (nq,B,KV,rep,Q,hd) -> (B,H,S,hd); lse -> (B,KV,rep,S)
+    out = jnp.moveaxis(outs, 0, 3).reshape(B, KV, rep, S, hd).reshape(B, H, S, hd)
+    lse = jnp.moveaxis(lses, 0, 3).reshape(B, KV, rep, S)
+    return out, lse
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0, 1, 2))
+def _flash(causal, q_blk, k_blk, q, k, v):
+    out, _ = _flash_fwd_impl(causal, q_blk, k_blk, q, k, v)
+    return out
+
+
+def _flash_fwd(causal, q_blk, k_blk, q, k, v):
+    out, lse = _flash_fwd_impl(causal, q_blk, k_blk, q, k, v)
+    return out, (q, k, v, out, lse)
+
+
+def _flash_bwd(causal, q_blk, k_blk, res, dout):
+    q, k, v, out, lse = res
+    B, H, S, hd = q.shape
+    KV, T = k.shape[1], k.shape[2]
+    rep = H // KV
+    nq, nk = S // q_blk, T // k_blk
+    scale = hd ** -0.5
+
+    qg = q.reshape(B, KV, rep, S, hd)
+    dog = dout.reshape(B, KV, rep, S, hd)
+    og = out.reshape(B, KV, rep, S, hd)
+    # D_i = rowsum(dout * out)  (B,KV,rep,S)
+    delta = jnp.sum(dog.astype(jnp.float32) * og.astype(jnp.float32), axis=-1)
+
+    qs = _blocks(qg, nq, q_blk)
+    dos = _blocks(dog, nq, q_blk)
+    ks = _blocks(k, nk, k_blk, axis_seq=2)
+    vs = _blocks(v, nk, k_blk, axis_seq=2)
+    lses = _blocks(lse[..., None], nq, q_blk)[..., 0]    # (nq,B,KV,rep,Q)
+    deltas = _blocks(delta[..., None], nq, q_blk)[..., 0]
+
+    def mask_for(iq, jk):
+        qpos = iq * q_blk + jax.lax.broadcasted_iota(jnp.int32, (q_blk, k_blk), 0)
+        kpos = jk * k_blk + jax.lax.broadcasted_iota(jnp.int32, (q_blk, k_blk), 1)
+        return kpos <= qpos
+
+    def p_block(qi, kj, lse_i, iq, jk):
+        s = jnp.einsum("bgrqd,bgkd->bgrqk", qi, kj).astype(jnp.float32) * scale
+        if causal:
+            s = jnp.where(mask_for(iq, jk)[None, None, None], s, NEG_INF)
+        return jnp.exp(s - lse_i[..., None])             # (B,KV,rep,Q,K)
+
+    # ---- pass 1: dk/dv (outer over kv blocks, inner sums over q blocks)
+    def kv_outer(_, kj_idx):
+        (kj, vj), jk = kj_idx
+
+        def q_inner(carry, qi_idx):
+            dk_j, dv_j = carry
+            (qi, doi, lse_i, dl_i), iq = qi_idx
+            p = p_block(qi, kj, lse_i, iq, jk)
+            dv_j = dv_j + jnp.einsum("bgrqk,bgrqd->bgkd",
+                                     p.astype(doi.dtype), doi)
+            dp = jnp.einsum("bgrqd,bgkd->bgrqk", doi, vj).astype(jnp.float32)
+            ds = p * (dp - dl_i[..., None]) * scale
+            dk_j = dk_j + jnp.einsum("bgrqk,bgrqd->bgkd",
+                                     ds.astype(qi.dtype), qi)
+            return (dk_j, dv_j), None
+
+        z = jnp.zeros(kj.shape, kj.dtype)
+        (dk_j, dv_j), _ = jax.lax.scan(
+            q_inner, (z, jnp.zeros(vj.shape, vj.dtype)),
+            ((qs, dos, lses, deltas), jnp.arange(nq)))
+        return None, (dk_j, dv_j)
+
+    _, (dks, dvs) = jax.lax.scan(kv_outer, None, ((ks, vs), jnp.arange(nk)))
+    dk = jnp.moveaxis(dks, 0, 2).reshape(B, KV, T, hd)
+    dv = jnp.moveaxis(dvs, 0, 2).reshape(B, KV, T, hd)
+
+    # ---- pass 2: dq (outer over q blocks, inner sums over kv blocks)
+    def q_outer(_, qi_idx):
+        (qi, doi, lse_i, dl_i), iq = qi_idx
+
+        def kv_inner(dq_i, kj_idx):
+            (kj, vj), jk = kj_idx
+            p = p_block(qi, kj, lse_i, iq, jk)
+            dp = jnp.einsum("bgrqd,bgkd->bgrqk", doi, vj).astype(jnp.float32)
+            ds = p * (dp - dl_i[..., None]) * scale
+            dq_i = dq_i + jnp.einsum("bgrqk,bgkd->bgrqd",
+                                     ds.astype(kj.dtype), kj)
+            return dq_i, None
+
+        dq_i, _ = jax.lax.scan(kv_inner, jnp.zeros(qi.shape, qi.dtype),
+                               ((ks, vs), jnp.arange(nk)))
+        return None, dq_i
+
+    _, dqs = jax.lax.scan(q_outer, None, ((qs, dos, lses, deltas), jnp.arange(nq)))
+    dq = jnp.moveaxis(dqs, 0, 3).reshape(B, KV, rep, S, hd).reshape(B, H, S, hd)
+    return dq, dk, dv
+
+
+_flash.defvjp(_flash_fwd, _flash_bwd)
+
+
+def flash_attention_ref(q, k, v, *, causal=True):
+    """Dense oracle for tests (small shapes only)."""
+    B, H, S, hd = q.shape
+    KV, T = k.shape[1], k.shape[2]
+    kr = jnp.repeat(k, H // KV, axis=1)
+    vr = jnp.repeat(v, H // KV, axis=1)
+    s = jnp.einsum("bhqd,bhkd->bhqk", q, kr).astype(jnp.float32) * hd ** -0.5
+    if causal:
+        qi = jax.lax.broadcasted_iota(jnp.int32, (S, T), 0)
+        ki = jax.lax.broadcasted_iota(jnp.int32, (S, T), 1)
+        s = jnp.where((ki <= qi)[None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1).astype(q.dtype)
+    return jnp.einsum("bhqk,bhkd->bhqd", p, vr)

@@ -1,0 +1,233 @@
+"""Mamba2 mixer (SSD — state-space duality), train and decode paths.
+
+Block structure (arXiv:2405.21060):
+  in_proj: d -> [z (d_inner), x (d_inner), B (G*N), C (G*N), dt (H)]
+  causal conv1d (width 4) over [x, B, C]; silu
+  SSD scan over chunks (Pallas kernel / chunked jnp ref)
+  gated RMSNorm: norm(y * silu(z)); out_proj: d_inner -> d
+
+Decode keeps (conv_state (B, conv_dim, W-1), ssm_state (B, H, N, P)) and
+advances the recurrence one token at a time — O(1) per token, which is why
+the long_500k cell runs only for this family.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.layers.common import wx
+from repro.models.base import ArchConfig, ParamInfo
+from repro.parallel.sharding import shard
+
+
+def mamba_params(cfg: ArchConfig, n_layers: int | None = None) -> dict:
+    d = cfg.d_model
+    di, G, N, H = cfg.d_inner, cfg.ssm_groups, cfg.ssm_state, cfg.ssm_heads
+    conv_dim = cfg.conv_dim
+    proj_out = 2 * di + 2 * G * N + H
+    L = () if n_layers is None else (n_layers,)
+    nl = (None,) * len(L)
+    fan = len(L)
+    return {
+        "in_proj": ParamInfo(L + (d, proj_out), jnp.float32, nl + ("fsdp", "ffn"), fan=fan),
+        "conv_w": ParamInfo(L + (cfg.conv_width, conv_dim), jnp.float32,
+                            nl + (None, "ffn"), scale=0.5, fan=fan),
+        "conv_b": ParamInfo(L + (conv_dim,), jnp.float32, nl + ("ffn",), init="zeros"),
+        # A stored as log(-A): a = -exp(a_log); dt bias for softplus
+        "a_log": ParamInfo(L + (H,), jnp.float32, nl + (None,), init="zeros"),
+        "dt_bias": ParamInfo(L + (H,), jnp.float32, nl + (None,), init="zeros"),
+        "d_skip": ParamInfo(L + (H,), jnp.float32, nl + (None,), init="ones"),
+        "norm_scale": ParamInfo(L + (di,), jnp.float32, nl + (None,), init="ones"),
+        "out_proj": ParamInfo(L + (di, d), jnp.float32, nl + ("ffn", "fsdp"), fan=fan),
+    }
+
+
+def ssm_cache_info(cfg: ArchConfig, batch: int) -> dict:
+    H, N, P = cfg.ssm_heads, cfg.ssm_state, cfg.ssm_headdim
+    return {
+        "conv": ParamInfo((batch, cfg.conv_width - 1, cfg.conv_dim), jnp.float32,
+                          ("batch", None, "ffn"), init="zeros"),
+        "ssm": ParamInfo((batch, H, N, P), jnp.float32,
+                         ("batch", "heads", None, None), init="zeros"),
+    }
+
+
+def shard_hidden(h: jnp.ndarray) -> jnp.ndarray:
+    """Layer-boundary hidden annotation for SSM stacks, respecting the
+    ssm_shard flag (seq-SP by default; replicated-d under heads mode so
+    the mixer's channel sharding doesn't bounce layouts every layer)."""
+    from repro.models import runtime as _rt
+    if _rt.flag("ssm_shard", "mixed") == "heads":
+        return shard(h, "batch", None, None)
+    # "mixed": seq-sharded hidden between layers (SP activation savings),
+    # heads/channels inside the mixer (one resharding per layer boundary).
+    return shard(h, "batch", "seq", None)
+
+
+def _split_proj(cfg: ArchConfig, zxbcdt: jnp.ndarray):
+    di, G, N, H = cfg.d_inner, cfg.ssm_groups, cfg.ssm_state, cfg.ssm_heads
+    z, x, b, c, dt = jnp.split(
+        zxbcdt, [di, 2 * di, 2 * di + G * N, 2 * di + 2 * G * N], axis=-1)
+    return z, x, b, c, dt
+
+
+def _gated_norm(p, y: jnp.ndarray, z: jnp.ndarray, eps: float) -> jnp.ndarray:
+    g = y * jax.nn.silu(z.astype(jnp.float32)).astype(y.dtype)
+    gf = g.astype(jnp.float32)
+    var = jnp.mean(gf * gf, axis=-1, keepdims=True)
+    return (gf * (var + eps) ** -0.5 * p["norm_scale"]).astype(y.dtype)
+
+
+def mamba_mixer(
+    cfg: ArchConfig, p: dict, xin: jnp.ndarray, *, chunk: int = 128,
+    use_kernel: bool = False, return_state: bool = False,
+):
+    """Training/prefill path. xin: (B, S, D) -> (B, S, D).
+    With return_state=True also returns the decode cache {conv, ssm}
+    advanced through the whole sequence (used by prefill)."""
+    B, S, D = xin.shape
+    di, G, N, H, P = (cfg.d_inner, cfg.ssm_groups, cfg.ssm_state,
+                      cfg.ssm_heads, cfg.ssm_headdim)
+    dt_ = xin.dtype
+
+    zxbcdt = jnp.einsum("bsd,de->bse", xin, wx(p["in_proj"], dt_))
+    z, xbc_x, bmat, cmat, dt_raw = _split_proj(cfg, zxbcdt)
+
+    # causal conv over [x, B, C] channels
+    xbc = jnp.concatenate([xbc_x, bmat, cmat], axis=-1)          # (B, S, conv_dim)
+    # sharding choice (hillclimb flag "ssm_shard"): the SSD recurrence is
+    # SEQUENTIAL over seq but fully parallel over channels/heads — sharding
+    # channels over the model axis keeps the chunk scan local to a device;
+    # seq sharding forces per-chunk gathers (see EXPERIMENTS.md §Perf).
+    from repro.models import runtime as _rt
+    _heads_mode = _rt.flag("ssm_shard", "mixed") in ("heads", "mixed")
+    xbc = (shard(xbc, "batch", None, "ffn") if _heads_mode
+           else shard(xbc, "batch", "seq", None))
+    conv_w = p["conv_w"].astype(dt_)                             # (W, conv_dim)
+    W = conv_w.shape[0]
+    pads = jnp.pad(xbc, ((0, 0), (W - 1, 0), (0, 0)))
+    conv = sum(pads[:, i : i + S, :] * conv_w[i][None, None, :] for i in range(W))
+    conv = conv + p["conv_b"].astype(dt_)
+    conv = jax.nn.silu(conv.astype(jnp.float32)).astype(dt_)
+    x, bmat, cmat = jnp.split(conv, [di, di + G * N], axis=-1)
+
+    xh = x.reshape(B, S, H, P)
+    bh = bmat.reshape(B, S, G, N)
+    ch = cmat.reshape(B, S, G, N)
+    if _heads_mode:
+        xh = shard(xh, "batch", None, "heads", None)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])  # (B, S, H)
+    a = -jnp.exp(p["a_log"].astype(jnp.float32))                     # (H,)
+
+    if use_kernel:
+        from repro.kernels.ssd_scan import ops as ssd_ops
+        y, s_fin = ssd_ops.ssd(xh, dt.astype(dt_), a, bh, ch, chunk=chunk)
+    else:
+        y, s_fin = _ssd_chunked_batch(
+            xh.astype(jnp.float32), dt, a,
+            bh.astype(jnp.float32), ch.astype(jnp.float32), chunk=chunk)
+        y = y.astype(dt_)
+    y = y + xh * p["d_skip"].astype(dt_)[None, None, :, None]
+    y = y.reshape(B, S, di)
+    y = _gated_norm(p, y, z, cfg.norm_eps)
+    out = jnp.einsum("bse,ed->bsd", y, wx(p["out_proj"], dt_))
+    if not return_state:
+        return out
+    W = cfg.conv_width
+    conv_state = xbc[:, S - (W - 1):, :].astype(jnp.float32)    # (B, W-1, C)
+    return out, {"conv": conv_state, "ssm": s_fin}
+
+
+def _ssd_chunked_batch(x, dt, a, b, c, *, chunk: int):
+    """Chunk-sequential SSD (fp32). x: (B,S,H,P); dt: (B,S,H); a: (H,);
+    b/c: (B,S,G,N). Returns (y (B,S,H,P), s_final (B,H,N,P)).
+
+    Chunks are processed by a lax.scan with a CHECKPOINTED body: the
+    quadratic intra-chunk tensors (Q x Q per head) exist for one chunk at
+    a time in both forward and backward (autodiff residuals are the chunk
+    inputs only, recomputed blockwise in the backward pass). A fully
+    batched-over-chunks einsum would materialize B*S*Q*H floats
+    (terabytes at the assigned shapes). Pure jnp (XLA path); the Pallas
+    kernel implements the same decomposition for TPU."""
+    B, S, H, P = x.shape
+    G, N = b.shape[2], b.shape[3]
+    rep = H // G
+    bh = jnp.repeat(b, rep, axis=2)                  # (B,S,H,N)
+    ch = jnp.repeat(c, rep, axis=2)
+    if S % chunk != 0:
+        pad = chunk - S % chunk
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        bh = jnp.pad(bh, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        ch = jnp.pad(ch, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    Sp = x.shape[1]
+    nc = Sp // chunk
+    # (nc, B, Q, ...) scan layout
+    xq = jnp.moveaxis(x.reshape(B, nc, chunk, H, P), 1, 0)
+    dq = jnp.moveaxis(dt.reshape(B, nc, chunk, H), 1, 0)
+    bq = jnp.moveaxis(bh.reshape(B, nc, chunk, H, N), 1, 0)
+    cq = jnp.moveaxis(ch.reshape(B, nc, chunk, H, N), 1, 0)
+    tri = jnp.tril(jnp.ones((chunk, chunk), bool))
+
+    def chunk_body(s_prev, inp):
+        xc, dc, bc, cc = inp                          # (B,Q,H,P) (B,Q,H) ...
+        da = dc * a[None, None, :]                    # (B,Q,H)
+        cum = jnp.cumsum(da, axis=1)
+        lmat = jnp.where(tri[None, :, :, None],
+                         jnp.exp(cum[:, :, None, :] - cum[:, None, :, :]), 0.0)
+        scores = jnp.einsum("bqhs,bkhs->bqkh", cc, bc) * lmat   # (B,Q,Q,H)
+        y = jnp.einsum("bqkh,bkhp->bqhp", scores, xc * dc[..., None])
+        y = y + jnp.einsum("bqhs,bhsp->bqhp",
+                           cc * jnp.exp(cum)[..., None], s_prev)
+        decay_end = jnp.exp(cum[:, -1:, :] - cum)               # (B,Q,H)
+        s_new = s_prev * jnp.exp(cum[:, -1, :])[:, :, None, None] + jnp.einsum(
+            "bqhs,bqhp->bhsp", bc * (dc * decay_end)[..., None], xc)
+        return s_new, y
+
+    body = jax.checkpoint(chunk_body,
+                          policy=jax.checkpoint_policies.nothing_saveable)
+    s0 = jnp.zeros((B, H, N, P), jnp.float32)
+    s_final, ys = jax.lax.scan(body, s0, (xq, dq, bq, cq))
+    y = jnp.moveaxis(ys, 0, 1).reshape(B, Sp, H, P)
+    return y[:, :S], s_final
+
+
+def mamba_decode_step(
+    cfg: ArchConfig, p: dict, xin: jnp.ndarray, cache: dict,
+) -> tuple[jnp.ndarray, dict]:
+    """Single-token decode. xin: (B, 1, D); cache: {conv (B,W-1,C), ssm
+    (B,H,N,P)}. Returns (out (B, 1, D), new cache). O(1) in sequence."""
+    B, S, D = xin.shape
+    assert S == 1
+    di, G, N, H, P = (cfg.d_inner, cfg.ssm_groups, cfg.ssm_state,
+                      cfg.ssm_heads, cfg.ssm_headdim)
+    dt_ = xin.dtype
+
+    zxbcdt = jnp.einsum("bsd,de->bse", xin, wx(p["in_proj"], dt_))
+    z, xbc_x, bmat, cmat, dt_raw = _split_proj(cfg, zxbcdt)
+    xbc = jnp.concatenate([xbc_x, bmat, cmat], axis=-1)[:, 0]   # (B, conv_dim)
+
+    conv_state = cache["conv"].astype(dt_)                      # (B, W-1, C)
+    window = jnp.concatenate([conv_state, xbc[:, None, :]], axis=1)  # (B, W, C)
+    conv_w = p["conv_w"].astype(dt_)                            # (W, C)
+    conv = jnp.einsum("bwc,wc->bc", window, conv_w) + p["conv_b"].astype(dt_)
+    conv = jax.nn.silu(conv.astype(jnp.float32)).astype(dt_)
+    new_conv_state = window[:, 1:, :]
+
+    x, bmat, cmat = jnp.split(conv, [di, di + G * N], axis=-1)
+    xh = x.reshape(B, H, P).astype(jnp.float32)
+    bh = jnp.repeat(bmat.reshape(B, G, N), H // G, axis=1).astype(jnp.float32)
+    ch = jnp.repeat(cmat.reshape(B, G, N), H // G, axis=1).astype(jnp.float32)
+    dt = jax.nn.softplus(dt_raw[:, 0].astype(jnp.float32) + p["dt_bias"])  # (B,H)
+    a = -jnp.exp(p["a_log"].astype(jnp.float32))
+
+    s = cache["ssm"]                                            # (B,H,N,P) fp32
+    decay = jnp.exp(dt * a[None, :])                            # (B,H)
+    s_new = s * decay[:, :, None, None] + jnp.einsum(
+        "bhn,bh,bhp->bhnp", bh, dt, xh)
+    y = jnp.einsum("bhn,bhnp->bhp", ch, s_new)                  # (B,H,P)
+    y = y + xh * p["d_skip"][None, :, None]
+    y = y.reshape(B, 1, di).astype(dt_)
+    y = _gated_norm(p, y, z, cfg.norm_eps)
+    out = jnp.einsum("bse,ed->bsd", y, wx(p["out_proj"], dt_))
+    return out, {"conv": new_conv_state.astype(cache["conv"].dtype), "ssm": s_new}

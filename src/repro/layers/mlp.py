@@ -1,0 +1,43 @@
+"""Feed-forward blocks: SwiGLU (llama/qwen), GeGLU (gemma), GELU (musicgen)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.layers.common import wx
+from repro.models.base import ArchConfig, ParamInfo
+from repro.parallel.sharding import shard
+
+
+def mlp_params(cfg: ArchConfig, n_layers: int | None = None) -> dict:
+    d, f = cfg.d_model, cfg.d_ff
+    L = () if n_layers is None else (n_layers,)
+    nl = (None,) * len(L)
+    fan = len(L)
+    p = {
+        "wi": ParamInfo(L + (d, f), jnp.float32, nl + ("fsdp", "ffn"), fan=fan),
+        "wo": ParamInfo(L + (f, d), jnp.float32, nl + ("ffn", "fsdp"), fan=fan),
+    }
+    if cfg.act in ("swiglu", "geglu"):
+        p["wg"] = ParamInfo(L + (d, f), jnp.float32, nl + ("fsdp", "ffn"), fan=fan)
+    return p
+
+
+def mlp(cfg: ArchConfig, p: dict, x: jnp.ndarray) -> jnp.ndarray:
+    """x: (B, S, D) -> (B, S, D)."""
+    dt = x.dtype
+    h = jnp.einsum("bsd,df->bsf", x, wx(p["wi"], dt))
+    if cfg.act == "swiglu":
+        g = jnp.einsum("bsd,df->bsf", x, wx(p["wg"], dt))
+        h = jax.nn.silu(g.astype(jnp.float32)).astype(dt) * h
+    elif cfg.act == "geglu":
+        g = jnp.einsum("bsd,df->bsf", x, wx(p["wg"], dt))
+        h = jax.nn.gelu(g.astype(jnp.float32), approximate=True).astype(dt) * h
+    elif cfg.act == "gelu":
+        h = jax.nn.gelu(h.astype(jnp.float32), approximate=True).astype(dt)
+    else:
+        raise ValueError(cfg.act)
+    # TP: the ffn dim owns the model axis inside the block (seq is re-sharded
+    # at layer boundaries by the caller — Megatron-style SP <-> TP handoff).
+    h = shard(h, "batch", None, "ffn")
+    return jnp.einsum("bsf,fd->bsd", h, wx(p["wo"], dt))

@@ -1,0 +1,128 @@
+"""Mixture-of-Experts block: top-k router + sort-based dispatch + EP.
+
+Dispatch is gather/scatter based (argsort by expert id, capacity-bounded),
+not one-hot einsum: at train_4k scale (1M tokens) a dense dispatch tensor
+(tokens x experts x capacity) would be ~100s of GB, while sort-dispatch is
+O(tokens * k). Experts are sharded over the model axis (EP); token->expert
+routing crosses shards as an all-to-all inserted by GSPMD at the sharding
+boundary between token-sharded and expert-sharded tensors.
+
+Aux losses: load-balancing (Switch-style) + router z-loss, returned for the
+trainer to weight.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.base import ArchConfig, ParamInfo
+from repro.parallel.sharding import shard
+
+
+def moe_params(cfg: ArchConfig, n_layers: int | None = None) -> dict:
+    d, f, E = cfg.d_model, cfg.d_ff, cfg.n_experts
+    L = () if n_layers is None else (n_layers,)
+    nl = (None,) * len(L)
+    fan = len(L)
+    return {
+        "router": ParamInfo(L + (d, E), jnp.float32, nl + ("fsdp", None), fan=fan),
+        "wi": ParamInfo(L + (E, d, f), jnp.float32, nl + ("experts", "fsdp", None),
+                        fan=fan + 1),
+        "wg": ParamInfo(L + (E, d, f), jnp.float32, nl + ("experts", "fsdp", None),
+                        fan=fan + 1),
+        "wo": ParamInfo(L + (E, f, d), jnp.float32, nl + ("experts", None, "fsdp"),
+                        fan=fan + 1),
+    }
+
+
+def moe(cfg: ArchConfig, p: dict, x: jnp.ndarray,
+        *, capacity_factor: float = 1.25) -> tuple[jnp.ndarray, dict]:
+    """x: (B, S, D) -> (out (B, S, D), aux losses dict)."""
+    B, S, D = x.shape
+    E, K = cfg.n_experts, cfg.experts_per_token
+    T = B * S
+    dt = x.dtype
+    from repro.models import runtime as _rt0
+    if _rt0.flag("moe_impl") == "shardmap":
+        from repro.layers.moe_shardmap import moe_shardmap
+        from repro.parallel import sharding as _shd
+        if _shd.active_mesh() is not None:
+            return moe_shardmap(cfg, p, x, capacity_factor=capacity_factor)
+    xt = x.reshape(T, D)
+    # hillclimb flag "moe_token_shard": spread routing/sort/dispatch over
+    # ALL mesh axes (tokens % (data*model) == 0 at the assigned shapes);
+    # default leaves tokens batch-sharded (data only) and the dispatch
+    # work gets replicated across the model axis by GSPMD.
+    from repro.models import runtime as _rt
+    _tok_all = _rt.flag("moe_token_shard", False)
+    if _tok_all:
+        xt = shard(xt, "tokens", None)
+
+    # ---- router (fp32) ----
+    logits = (xt.astype(jnp.float32) @ p["router"].astype(jnp.float32))  # (T, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, expert_ids = jax.lax.top_k(probs, K)              # (T, K)
+    if cfg.moe_norm_topk:
+        gate_vals = gate_vals / jnp.sum(gate_vals, axis=-1, keepdims=True)
+
+    # aux: load-balance (mean prob * mean assignment fraction) + z-loss.
+    # NOTE: assignment counts via scatter-add, NOT a (T, K, E) one-hot —
+    # the one-hot materializes T*K*E floats (134 GB/device at train_4k
+    # shapes; see EXPERIMENTS.md §Perf, moe hillclimb).
+    me = jnp.mean(probs, axis=0)                                  # (E,)
+    counts = jnp.zeros((E,), jnp.float32).at[expert_ids.reshape(-1)].add(1.0)
+    ce = counts / T                                               # (E,)
+    lb_loss = E * jnp.sum(me * ce)
+    z_loss = jnp.mean(jax.nn.logsumexp(logits, axis=-1) ** 2)
+
+    # ---- sort-based dispatch ----
+    capacity = int(max(1, capacity_factor * T * K / E))
+    capacity = min(capacity, T)
+    flat_expert = expert_ids.reshape(-1)                          # (T*K,)
+    flat_token = jnp.repeat(jnp.arange(T, dtype=jnp.int32), K)    # (T*K,)
+    flat_gate = gate_vals.reshape(-1).astype(jnp.float32)
+
+    if _tok_all:
+        flat_expert = shard(flat_expert, "tokens")
+        flat_token = shard(flat_token, "tokens")
+        flat_gate = shard(flat_gate, "tokens")
+    order = jnp.argsort(flat_expert, stable=True)                 # group by expert
+    se, stok, sgate = flat_expert[order], flat_token[order], flat_gate[order]
+    # position of each routed pair within its expert's queue
+    ones = jnp.ones_like(se, dtype=jnp.int32)
+    pos_in_expert = jnp.cumsum(ones) - 1
+    seg_start = jnp.searchsorted(se, jnp.arange(E, dtype=se.dtype), side="left")
+    pos_in_expert = pos_in_expert - seg_start[se]
+    keep = pos_in_expert < capacity
+
+    slot = se.astype(jnp.int32) * capacity + pos_in_expert        # (T*K,)
+    slot = jnp.where(keep, slot, E * capacity)                    # overflow bin
+    # gather tokens into expert buffers (E*capacity(+1 overflow), D)
+    buf_tok = jnp.zeros((E * capacity + 1,), jnp.int32).at[slot].set(
+        stok, mode="drop")
+    buf_tok_used = buf_tok[: E * capacity]
+    if _rt.flag("moe_expert_aligned", False):
+        # hillclimb: align the gather's INDEX operand with the expert
+        # sharding (contiguous expert blocks on the flat dim) so each
+        # device gathers only its experts' rows; GSPMD then moves the
+        # (T, D) source (all-gather, ~1 GB) instead of all-reducing the
+        # (E*cap, D) result (~10.7 GB) — see EXPERIMENTS.md §Perf.
+        buf_tok_used = shard(buf_tok_used.reshape(E, capacity),
+                             "experts", None).reshape(E * capacity)
+    xe = jnp.take(xt, buf_tok_used, axis=0).reshape(E, capacity, D)
+    xe = shard(xe, "experts", None, None)
+
+    # ---- expert FFN (swiglu) ----
+    h = jnp.einsum("ecd,edf->ecf", xe, p["wi"].astype(dt))
+    g = jnp.einsum("ecd,edf->ecf", xe, p["wg"].astype(dt))
+    h = jax.nn.silu(g.astype(jnp.float32)).astype(dt) * h
+    ye = jnp.einsum("ecf,efd->ecd", h, p["wo"].astype(dt))        # (E, cap, D)
+    ye = shard(ye, "experts", None, None)
+
+    # ---- combine: scatter-add back to tokens, weighted by gates ----
+    yflat = ye.reshape(E * capacity, D)
+    contrib = yflat[jnp.where(keep, slot, 0)] * (
+        sgate * keep.astype(jnp.float32))[:, None].astype(dt)     # (T*K, D)
+    out = jnp.zeros((T, D), dt).at[stok].add(contrib, mode="drop")
+    out = out.reshape(B, S, D)
+    return out, {"lb_loss": lb_loss, "z_loss": z_loss}

@@ -1,0 +1,46 @@
+"""Normalization layers (fp32 statistics regardless of compute dtype)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.models.base import ParamInfo
+
+
+def rmsnorm_params(d: int, n_layers: int | None = None, *, plus_one: bool = False):
+    shape = (d,) if n_layers is None else (n_layers, d)
+    # gemma parameterizes scale as (1 + w) with w init 0; others init 1.
+    return {"scale": ParamInfo(shape, jnp.float32,
+                               (None,) * len(shape),
+                               init="zeros" if plus_one else "ones")}
+
+
+def layernorm_params(d: int, n_layers: int | None = None):
+    shape = (d,) if n_layers is None else (n_layers, d)
+    return {
+        "scale": ParamInfo(shape, jnp.float32, (None,) * len(shape), init="ones"),
+        "bias": ParamInfo(shape, jnp.float32, (None,) * len(shape), init="zeros"),
+    }
+
+
+def norm_params(kind: str, d: int, n_layers: int | None = None, *, plus_one=False):
+    if kind == "rmsnorm":
+        return rmsnorm_params(d, n_layers, plus_one=plus_one)
+    if kind == "layernorm":
+        return layernorm_params(d, n_layers)
+    raise ValueError(kind)
+
+
+def apply_norm(kind: str, p: dict, x: jnp.ndarray, *, eps: float,
+               plus_one: bool = False) -> jnp.ndarray:
+    xf = x.astype(jnp.float32)
+    if kind == "rmsnorm":
+        var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+        xn = xf * (var + eps) ** -0.5
+        scale = p["scale"] + 1.0 if plus_one else p["scale"]
+        return (xn * scale).astype(x.dtype)
+    if kind == "layernorm":
+        mu = jnp.mean(xf, axis=-1, keepdims=True)
+        var = jnp.var(xf, axis=-1, keepdims=True)
+        xn = (xf - mu) * (var + eps) ** -0.5
+        return (xn * p["scale"] + p["bias"]).astype(x.dtype)
+    raise ValueError(kind)

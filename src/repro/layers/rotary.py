@@ -1,0 +1,59 @@
+"""Rotary position embeddings: standard RoPE, multimodal M-RoPE (Qwen2-VL),
+and sinusoidal absolute embeddings (MusicGen-style)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def _freqs(head_dim: int, theta: float) -> jnp.ndarray:
+    half = head_dim // 2
+    return 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+
+
+def rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float) -> jnp.ndarray:
+    """Apply RoPE. x: (B, S, H, hd); positions: (B, S) int32."""
+    half = x.shape[-1] // 2
+    freqs = _freqs(x.shape[-1], theta)                       # (half,)
+    ang = positions[:, :, None].astype(jnp.float32) * freqs  # (B, S, half)
+    cos = jnp.cos(ang)[:, :, None, :]                        # (B, S, 1, half)
+    sin = jnp.sin(ang)[:, :, None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    xf1, xf2 = x1.astype(jnp.float32), x2.astype(jnp.float32)
+    return jnp.concatenate(
+        [xf1 * cos - xf2 * sin, xf2 * cos + xf1 * sin], axis=-1
+    ).astype(x.dtype)
+
+
+def mrope(x: jnp.ndarray, positions: jnp.ndarray, theta: float,
+          sections: tuple) -> jnp.ndarray:
+    """Qwen2-VL multimodal RoPE. positions: (3, B, S) — (temporal, h, w)
+    indices; `sections` are half-dim section lengths summing to hd//2.
+    Each frequency band takes its angle from the section's position id."""
+    half = x.shape[-1] // 2
+    assert sum(sections) == half, (sections, half)
+    freqs = _freqs(x.shape[-1], theta)                       # (half,)
+    # Select, per frequency index, which of the 3 position streams drives it.
+    sec_id = jnp.repeat(
+        jnp.arange(len(sections)), jnp.asarray(sections), total_repeat_length=half
+    )                                                        # (half,)
+    pos = positions.astype(jnp.float32)                      # (3, B, S)
+    ang = jnp.zeros(pos.shape[1:] + (half,), jnp.float32)    # (B, S, half)
+    for k in range(len(sections)):
+        ang_k = pos[k][:, :, None] * freqs[None, None, :]
+        ang = jnp.where(sec_id[None, None, :] == k, ang_k, ang)
+    cos = jnp.cos(ang)[:, :, None, :]
+    sin = jnp.sin(ang)[:, :, None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    xf1, xf2 = x1.astype(jnp.float32), x2.astype(jnp.float32)
+    return jnp.concatenate(
+        [xf1 * cos - xf2 * sin, xf2 * cos + xf1 * sin], axis=-1
+    ).astype(x.dtype)
+
+
+def sinusoidal_embedding(positions: jnp.ndarray, d_model: int,
+                         max_scale: float = 10_000.0) -> jnp.ndarray:
+    """Absolute sinusoidal embeddings. positions: (B, S) -> (B, S, D)."""
+    half = d_model // 2
+    freqs = 1.0 / (max_scale ** (jnp.arange(half, dtype=jnp.float32) / half))
+    ang = positions[:, :, None].astype(jnp.float32) * freqs
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)

@@ -1,0 +1,73 @@
+"""Unified model API: family dispatch + losses.
+
+Every architecture exposes the same five entry points:
+  abstract_params(cfg)                  -> ParamInfo tree
+  abstract_cache(cfg, batch, max_len)   -> ParamInfo tree (decode state)
+  forward(cfg, params, batch)           -> (logits, aux)
+  prefill(cfg, params, batch, cache)    -> (last_logits, cache)
+  decode_step(cfg, params, tok, pos, c) -> (logits, cache)
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import mamba, transformer, zamba
+from repro.models.base import ArchConfig
+
+_FAMILY = {
+    "dense": transformer,
+    "moe": transformer,
+    "ssm": mamba,
+    "hybrid": zamba,
+}
+
+LB_WEIGHT = 0.01
+Z_WEIGHT = 1e-3
+
+
+def module_for(cfg: ArchConfig):
+    return _FAMILY[cfg.family]
+
+
+def abstract_params(cfg: ArchConfig):
+    return module_for(cfg).abstract_params(cfg)
+
+
+def abstract_cache(cfg: ArchConfig, batch: int, max_len: int):
+    return module_for(cfg).abstract_cache(cfg, batch, max_len)
+
+
+def forward(cfg: ArchConfig, params, batch, *, remat: str = "none"):
+    return module_for(cfg).forward(cfg, params, batch, remat=remat)
+
+
+def prefill(cfg: ArchConfig, params, batch, cache, *, remat: str = "none"):
+    return module_for(cfg).prefill(cfg, params, batch, cache, remat=remat)
+
+
+def decode_step(cfg: ArchConfig, params, tokens, pos, cache, extras=None):
+    return module_for(cfg).decode_step(cfg, params, tokens, pos, cache, extras)
+
+
+def loss_fn(cfg: ArchConfig, params, batch, *, remat: str = "none"):
+    """Next-token cross-entropy (+ MoE aux). Returns (loss, metrics)."""
+    logits, aux = forward(cfg, params, batch, remat=remat)
+    targets = batch["targets"]
+    mask = batch.get("loss_mask")
+    if mask is None:
+        mask = jnp.ones_like(targets, jnp.float32)
+    mask = mask.astype(jnp.float32)
+
+    lf = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(lf, axis=-1)                         # (B, S)
+    tgt = jnp.take_along_axis(lf, targets[..., None], axis=-1)[..., 0]
+    nll = (lse - tgt) * mask
+    denom = jnp.maximum(mask.sum(), 1.0)
+    loss = nll.sum() / denom
+    metrics = {"nll": loss}
+    if aux:
+        loss = loss + LB_WEIGHT * aux["lb_loss"] + Z_WEIGHT * aux["z_loss"]
+        metrics.update(aux)
+    metrics["loss"] = loss
+    return loss, metrics

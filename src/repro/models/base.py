@@ -1,0 +1,174 @@
+"""Model/config substrate shared by every architecture.
+
+Key abstraction: each model declares its parameters *abstractly* as a
+pytree of `ParamInfo(shape, dtype, logical, init)`. From that single
+declaration we derive:
+  * `init_params`   — materialized arrays (per-leaf folded RNG),
+  * `abstract_state`— ShapeDtypeStructs for allocation-free dry-runs,
+  * sharding specs  — via the logical axis names and the active mesh rules.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.parallel import sharding as shd
+
+
+# ---------------------------------------------------------------------------
+# Architecture / shape configs
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class ArchConfig:
+    name: str
+    family: str                 # dense | moe | ssm | hybrid
+    modality: str = "text"      # text | vlm | audio
+    n_layers: int = 0
+    d_model: int = 0
+    n_heads: int = 0
+    n_kv_heads: int = 0
+    head_dim: int = 0
+    d_ff: int = 0
+    vocab: int = 0
+    act: str = "swiglu"         # swiglu | geglu | gelu
+    norm: str = "rmsnorm"       # rmsnorm | layernorm
+    norm_eps: float = 1e-6
+    qkv_bias: bool = False
+    tie_embeddings: bool = False
+    scale_embedding: bool = False   # gemma: h *= sqrt(d_model)
+    pos: str = "rope"           # rope | mrope | sin
+    rope_theta: float = 1e6
+    mrope_sections: tuple = ()  # (t, h, w) half-dims, sum == head_dim // 2
+    # moe
+    n_experts: int = 0
+    experts_per_token: int = 0
+    moe_norm_topk: bool = True
+    # ssm (mamba2)
+    ssm_state: int = 0
+    ssm_headdim: int = 64
+    ssm_expand: int = 2
+    ssm_groups: int = 1
+    conv_width: int = 4
+    # hybrid (zamba2): one shared attention+MLP block applied every k layers
+    attn_every: int = 0
+    param_dtype: str = "float32"    # master params (optimizer works in fp32)
+    compute_dtype: str = "bfloat16"
+
+    @property
+    def d_inner(self) -> int:
+        return self.ssm_expand * self.d_model
+
+    @property
+    def ssm_heads(self) -> int:
+        return self.d_inner // self.ssm_headdim
+
+    @property
+    def conv_dim(self) -> int:
+        # channels passed through the causal conv: x, B, C
+        return self.d_inner + 2 * self.ssm_groups * self.ssm_state
+
+    def cdtype(self):
+        return jnp.dtype(self.compute_dtype)
+
+    def pdtype(self):
+        return jnp.dtype(self.param_dtype)
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeConfig:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str                    # train | prefill | decode
+    accum: int = 1               # gradient-accumulation microbatch steps
+
+
+SHAPES: dict[str, ShapeConfig] = {
+    "train_4k": ShapeConfig("train_4k", 4096, 256, "train", accum=8),
+    "prefill_32k": ShapeConfig("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": ShapeConfig("decode_32k", 32768, 128, "decode"),
+    "long_500k": ShapeConfig("long_500k", 524288, 1, "decode"),
+}
+
+
+def supports_shape(cfg: ArchConfig, shape: ShapeConfig) -> bool:
+    """long_500k needs a sub-quadratic sequence path: SSM/hybrid only
+    (DESIGN.md §6). Everything else runs everywhere (all archs are
+    decoder-style; none are encoder-only)."""
+    if shape.name == "long_500k":
+        return cfg.family in ("ssm", "hybrid")
+    return True
+
+
+# ---------------------------------------------------------------------------
+# Abstract parameter declaration
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class ParamInfo:
+    shape: tuple
+    dtype: Any = jnp.float32
+    logical: tuple = ()          # logical sharding per dim (None = replicated)
+    init: str = "normal"         # normal | zeros | ones | uniform | custom
+    scale: float = 1.0           # stddev multiplier for normal init
+    fan: int = 0                 # index of the fan-in dim (1 for stacked (L, in, out))
+
+    def sds(self) -> jax.ShapeDtypeStruct:
+        sh = shd.named_sharding(self.shape, self.logical)
+        return jax.ShapeDtypeStruct(self.shape, self.dtype, sharding=sh)
+
+
+def is_info(x) -> bool:
+    return isinstance(x, ParamInfo)
+
+
+def tree_sds(tree):
+    """Abstract tree -> ShapeDtypeStruct tree (with shardings if mesh active)."""
+    return jax.tree.map(lambda i: i.sds(), tree, is_leaf=is_info)
+
+
+def tree_specs(tree):
+    """Abstract tree -> PartitionSpec tree under the active rules."""
+    return jax.tree.map(
+        lambda i: shd.spec(i.shape, i.logical), tree, is_leaf=is_info
+    )
+
+
+def tree_init(tree, key: jax.Array):
+    """Materialize an abstract tree. Each leaf gets a path-folded key so the
+    result is independent of traversal order and stable across refactors."""
+    leaves, treedef = jax.tree.flatten_with_path(tree, is_leaf=is_info)
+
+    def mk(path, info: ParamInfo, k):
+        if info.init == "zeros":
+            return jnp.zeros(info.shape, info.dtype)
+        if info.init == "ones":
+            return jnp.ones(info.shape, info.dtype)
+        if info.init == "normal":
+            fan_in = info.shape[info.fan] if info.shape else 1
+            std = info.scale / np.sqrt(max(fan_in, 1))
+            return (jax.random.normal(k, info.shape) * std).astype(info.dtype)
+        if info.init == "uniform":
+            return jax.random.uniform(
+                k, info.shape, info.dtype, -info.scale, info.scale)
+        raise ValueError(info.init)
+
+    out = []
+    for i, (path, info) in enumerate(leaves):
+        kp = jax.random.fold_in(key, _path_hash(path))
+        out.append(mk(path, info, kp))
+    return jax.tree.unflatten(treedef, out)
+
+
+def _path_hash(path) -> int:
+    s = jax.tree_util.keystr(path)
+    return int(np.uint32(hash(s) & 0xFFFFFFFF))
+
+
+def count_params(tree) -> int:
+    return sum(int(np.prod(i.shape)) for i in jax.tree.leaves(tree, is_leaf=is_info))

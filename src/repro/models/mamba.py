@@ -1,0 +1,115 @@
+"""Mamba2 LM: embedding -> L x (norm -> SSD mixer) -> norm -> head.
+
+Attention-free; decode state is O(1) in sequence length, which is why the
+long_500k cell runs for this family (DESIGN.md §6).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.layers import embedding as emb_lib
+from repro.layers import mamba2 as m2
+from repro.layers import norms
+from repro.models import runtime
+from repro.models.base import ArchConfig, ParamInfo
+from repro.parallel.sharding import shard
+
+
+def abstract_params(cfg: ArchConfig) -> dict:
+    L = cfg.n_layers
+    return {
+        "embed": emb_lib.embed_params(cfg),
+        "layers": {
+            "ln": norms.norm_params(cfg.norm, cfg.d_model, L),
+            "mixer": m2.mamba_params(cfg, L),
+        },
+        "final_norm": norms.norm_params(cfg.norm, cfg.d_model),
+    }
+
+
+def abstract_cache(cfg: ArchConfig, batch: int, max_len: int) -> dict:
+    info = m2.ssm_cache_info(cfg, batch)
+
+    def stack(i: ParamInfo) -> ParamInfo:
+        return ParamInfo((cfg.n_layers,) + i.shape, i.dtype, (None,) + i.logical,
+                         init="zeros")
+
+    return jax.tree.map(stack, info, is_leaf=lambda x: isinstance(x, ParamInfo))
+
+
+def backbone(cfg: ArchConfig, params: dict, h: jnp.ndarray, *,
+             remat: str = "none", use_kernel: bool = False) -> jnp.ndarray:
+    def body(carry, lp):
+        h = carry
+        hn = norms.apply_norm(cfg.norm, lp["ln"], h, eps=cfg.norm_eps)
+        h = h + m2.mamba_mixer(cfg, lp["mixer"], hn, use_kernel=use_kernel)
+        h = m2.shard_hidden(h)
+        return h, None
+
+    if remat == "full":
+        body = jax.checkpoint(body, policy=jax.checkpoint_policies.nothing_saveable)
+    h, _ = jax.lax.scan(body, h, params["layers"], **runtime.scan_kwargs())
+    return norms.apply_norm(cfg.norm, params["final_norm"], h, eps=cfg.norm_eps)
+
+
+def forward(cfg: ArchConfig, params: dict, batch: dict, *, remat: str = "none",
+            return_full_logits: bool = True) -> tuple[jnp.ndarray, dict]:
+    h = emb_lib.assemble_inputs(cfg, params["embed"], batch)
+    h = shard(h, "batch", "seq", None)
+    h = backbone(cfg, params, h, remat=remat)
+    logits = emb_lib.lm_head(cfg, params["embed"], h)
+    return logits, {}
+
+
+def prefill(cfg: ArchConfig, params: dict, batch: dict, cache: dict,
+            *, remat: str = "none") -> tuple[jnp.ndarray, dict]:
+    """Prefill for SSM: run the chunked scan and (re)build decode state.
+
+    The decode state after prefill is obtained by running the mixers with
+    state emission; for the dry-run cells we return the last-position
+    logits and a cache advanced through the whole prompt."""
+    tokens = batch["tokens"]
+    h = emb_lib.assemble_inputs(cfg, params["embed"], batch)
+    h = shard(h, "batch", "seq", None)
+
+    def body(carry, xs):
+        h = carry
+        lp, cache_layer = xs
+        hn = norms.apply_norm(cfg.norm, lp["ln"], h, eps=cfg.norm_eps)
+        out, state = m2.mamba_mixer(cfg, lp["mixer"], hn, return_state=True)
+        h = h + out
+        h = m2.shard_hidden(h)
+        new_cache_layer = {
+            "conv": state["conv"].astype(cache_layer["conv"].dtype),
+            "ssm": state["ssm"].astype(cache_layer["ssm"].dtype),
+        }
+        return h, new_cache_layer
+
+    h, new_cache = jax.lax.scan(body, h, (params["layers"], cache),
+                                **runtime.scan_kwargs())
+    h = norms.apply_norm(cfg.norm, params["final_norm"], h, eps=cfg.norm_eps)
+    logits = emb_lib.lm_head(cfg, params["embed"], h[:, -1:, :])[:, 0]
+    return logits, new_cache
+
+
+def decode_step(cfg: ArchConfig, params: dict, tokens: jnp.ndarray,
+                pos: jnp.ndarray, cache: dict,
+                extras: dict | None = None) -> tuple[jnp.ndarray, dict]:
+    batch = {"tokens": tokens}
+    if extras:
+        batch.update(extras)
+    h = emb_lib.assemble_inputs(cfg, params["embed"], batch)
+
+    def body(carry, xs):
+        h = carry
+        lp, cache_layer = xs
+        hn = norms.apply_norm(cfg.norm, lp["ln"], h, eps=cfg.norm_eps)
+        out, new_cache_layer = m2.mamba_decode_step(cfg, lp["mixer"], hn, cache_layer)
+        return h + out, new_cache_layer
+
+    h, new_cache = jax.lax.scan(body, h, (params["layers"], cache),
+                                **runtime.scan_kwargs())
+    h = norms.apply_norm(cfg.norm, params["final_norm"], h, eps=cfg.norm_eps)
+    logits = emb_lib.lm_head(cfg, params["embed"], h)[:, 0]
+    return logits, new_cache

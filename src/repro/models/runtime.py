@@ -1,0 +1,54 @@
+"""Runtime flags threaded into model code (analysis-mode scan unrolling).
+
+XLA's HloCostAnalysis counts a while-loop body ONCE, not x trip-count, so
+the roofline's cost lowerings unroll the layer scans (on small-L configs)
+to make every layer's flops/bytes/collectives visible. Production
+lowerings keep scans rolled (small HLO, flat compile times).
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+
+_ctx = threading.local()
+
+
+def _on() -> bool:
+    return getattr(_ctx, "unroll", False)
+
+
+@contextlib.contextmanager
+def unrolled_scans():
+    prev = _on()
+    _ctx.unroll = True
+    try:
+        yield
+    finally:
+        _ctx.unroll = prev
+
+
+def scan_kwargs() -> dict:
+    """kwargs for LAYER scans (not flash/SSD inner scans)."""
+    return {"unroll": True} if _on() else {}
+
+
+# -- generic named flags (perf-variant switches used by the hillclimb) ------
+
+def _flags() -> dict:
+    if not hasattr(_ctx, "flags"):
+        _ctx.flags = {}
+    return _ctx.flags
+
+
+@contextlib.contextmanager
+def with_flags(**kw):
+    prev = dict(_flags())
+    _flags().update(kw)
+    try:
+        yield
+    finally:
+        _ctx.flags = prev
+
+
+def flag(name: str, default=None):
+    return _flags().get(name, default)

@@ -1,0 +1,196 @@
+"""Decoder-only transformer: dense (qwen/llama/gemma/musicgen), MoE
+(granite/qwen3-moe), VLM backbone (qwen2-vl) — one implementation,
+config-switched.
+
+Layers are stacked and iterated with `lax.scan` (keeps the HLO small and
+compile times flat in depth — essential for 80-layer dry-runs) with a
+configurable remat policy on the block body. Hidden states are re-annotated
+(batch x seq-SP) at every layer boundary.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.layers import attention as attn_lib
+from repro.layers import embedding as emb_lib
+from repro.layers import mlp as mlp_lib
+from repro.layers import moe as moe_lib
+from repro.layers import norms
+from repro.models import runtime
+from repro.models.base import ArchConfig, ParamInfo
+from repro.parallel.sharding import shard
+
+
+def abstract_params(cfg: ArchConfig) -> dict:
+    L = cfg.n_layers
+    plus_one = cfg.name.startswith("gemma")
+    p = {
+        "embed": emb_lib.embed_params(cfg),
+        "layers": {
+            "ln_attn": norms.norm_params(cfg.norm, cfg.d_model, L, plus_one=plus_one),
+            "attn": attn_lib.attn_params(cfg, L),
+            "ln_mlp": norms.norm_params(cfg.norm, cfg.d_model, L, plus_one=plus_one),
+        },
+        "final_norm": norms.norm_params(cfg.norm, cfg.d_model, plus_one=plus_one),
+    }
+    if cfg.family == "moe":
+        p["layers"]["moe"] = moe_lib.moe_params(cfg, L)
+    else:
+        p["layers"]["mlp"] = mlp_lib.mlp_params(cfg, L)
+    return p
+
+
+def abstract_cache(cfg: ArchConfig, batch: int, max_len: int) -> dict:
+    """KV cache stacked over layers: (L, B, KV, S, hd)."""
+    info = attn_lib.init_cache_info(cfg, batch, max_len)
+
+    def stack(i: ParamInfo) -> ParamInfo:
+        return ParamInfo((cfg.n_layers,) + i.shape, i.dtype, (None,) + i.logical,
+                         init="zeros")
+
+    return jax.tree.map(stack, info, is_leaf=lambda x: isinstance(x, ParamInfo))
+
+
+def _block(cfg: ArchConfig, lp: dict, h, positions, cache_layer, cache_pos,
+           causal: bool):
+    """One transformer block. Returns (h, new_cache_layer, aux)."""
+    plus_one = cfg.name.startswith("gemma")
+    hn = norms.apply_norm(cfg.norm, lp["ln_attn"], h, eps=cfg.norm_eps,
+                          plus_one=plus_one)
+    a, new_cache = attn_lib.attention(
+        cfg, lp["attn"], hn, positions, cache=cache_layer, cache_pos=cache_pos,
+        causal=causal)
+    h = h + a
+    h = shard(h, "batch", "seq", None)
+    hn = norms.apply_norm(cfg.norm, lp["ln_mlp"], h, eps=cfg.norm_eps,
+                          plus_one=plus_one)
+    aux = {"lb_loss": jnp.zeros((), jnp.float32), "z_loss": jnp.zeros((), jnp.float32)}
+    if cfg.family == "moe":
+        m, aux = moe_lib.moe(cfg, lp["moe"], hn)
+    else:
+        m = mlp_lib.mlp(cfg, lp["mlp"], hn)
+    h = h + m
+    h = shard(h, "batch", "seq", None)
+    return h, new_cache, aux
+
+
+def backbone(
+    cfg: ArchConfig,
+    params: dict,
+    h: jnp.ndarray,                  # (B, S, D) assembled input
+    positions: jnp.ndarray,
+    *,
+    cache: dict | None = None,
+    cache_pos: jnp.ndarray | None = None,
+    remat: str = "none",             # none | full
+) -> tuple[jnp.ndarray, dict | None, dict]:
+    """Run all layers. Returns (h, new_cache, aux_losses)."""
+    stacked = params["layers"]
+    causal = True
+
+    def body(carry, xs):
+        h, lb, zl = carry
+        lp, cache_layer = xs
+        h, new_cache, aux = _block(cfg, lp, h, positions, cache_layer,
+                                   cache_pos, causal)
+        return (h, lb + aux["lb_loss"], zl + aux["z_loss"]), new_cache
+
+    if remat == "full":
+        body = jax.checkpoint(
+            body, policy=jax.checkpoint_policies.nothing_saveable)
+
+    xs = (stacked, cache)
+    if cache is None:
+        # scan needs a pytree with a leading L dim for every leaf; feed a
+        # dummy zeros tree shaped (L,) when there is no cache.
+        xs = (stacked, jnp.zeros((cfg.n_layers,), jnp.float32))
+
+        def body_nocache(carry, xs):
+            lp, _ = xs
+            new_carry, _ = body(carry, (lp, None))
+            return new_carry, None
+
+        init = (h, jnp.zeros((), jnp.float32), jnp.zeros((), jnp.float32))
+        (h, lb, zl), _ = jax.lax.scan(body_nocache, init, xs, **runtime.scan_kwargs())
+        new_cache = None
+    else:
+        init = (h, jnp.zeros((), jnp.float32), jnp.zeros((), jnp.float32))
+        (h, lb, zl), new_cache = jax.lax.scan(body, init, xs, **runtime.scan_kwargs())
+
+    h = norms.apply_norm(cfg.norm, params["final_norm"], h, eps=cfg.norm_eps,
+                         plus_one=cfg.name.startswith("gemma"))
+    return h, new_cache, {"lb_loss": lb / cfg.n_layers, "z_loss": zl / cfg.n_layers}
+
+
+def _positions_for(cfg: ArchConfig, batch: dict, B: int, S: int):
+    if cfg.pos == "mrope":
+        pos = batch.get("positions")
+        if pos is None:
+            base = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+            return jnp.stack([base] * 3)               # (3, B, S)
+        return pos.transpose(1, 0, 2)                  # (B, 3, S) -> (3, B, S)
+    pos = batch.get("positions")
+    if pos is None:
+        pos = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+    return pos
+
+
+def forward(cfg: ArchConfig, params: dict, batch: dict, *, remat: str = "none",
+            return_full_logits: bool = True) -> tuple[jnp.ndarray, dict]:
+    """Training/eval forward. Returns (logits, aux)."""
+    tokens = batch["tokens"]
+    B, S = tokens.shape
+    h = emb_lib.assemble_inputs(cfg, params["embed"], batch)
+    h = shard(h, "batch", "seq", None)
+    positions = _positions_for(cfg, batch, B, S)
+    h, _, aux = backbone(cfg, params, h, positions, remat=remat)
+    logits = emb_lib.lm_head(cfg, params["embed"], h)
+    return logits, aux
+
+
+def prefill(cfg: ArchConfig, params: dict, batch: dict, cache: dict,
+            *, remat: str = "none") -> tuple[jnp.ndarray, dict]:
+    """Prefill: full-sequence forward, fills `cache`, returns ONLY the
+    last-position logits (B, V) — full (B, S, V) logits for 32k x 152k
+    vocab would be ~300 GB and are never needed."""
+    tokens = batch["tokens"]
+    B, S = tokens.shape
+    h = emb_lib.assemble_inputs(cfg, params["embed"], batch)
+    h = shard(h, "batch", "seq", None)
+    positions = _positions_for(cfg, batch, B, S)
+    h, new_cache, _ = backbone(cfg, params, h, positions, cache=cache, remat=remat)
+    last = h[:, -1:, :]
+    logits = emb_lib.lm_head(cfg, params["embed"], last)[:, 0]
+    return logits, new_cache
+
+
+def decode_step(cfg: ArchConfig, params: dict, tokens: jnp.ndarray,
+                pos: jnp.ndarray, cache: dict,
+                extras: dict | None = None) -> tuple[jnp.ndarray, dict]:
+    """One decode step. tokens: (B, 1); pos: (B,) current write index.
+    Returns (logits (B, V), new cache)."""
+    B = tokens.shape[0]
+    batch = {"tokens": tokens}
+    if extras:
+        batch.update(extras)
+    if cfg.modality == "vlm":
+        batch.setdefault("pixel_embeds",
+                         jnp.zeros((B, 1, cfg.d_model), cfg.cdtype()))
+        batch.setdefault("pixel_mask", jnp.zeros((B, 1), bool))
+    if cfg.modality == "audio":
+        batch.setdefault("frame_embeds",
+                         jnp.zeros((B, 1, cfg.d_model), cfg.cdtype()))
+        batch.setdefault("positions", pos[:, None])
+    h = emb_lib.assemble_inputs(cfg, params["embed"], batch)
+    if cfg.pos == "mrope":
+        positions = jnp.stack([pos[:, None]] * 3)       # (3, B, 1)
+    else:
+        positions = pos[:, None]                        # (B, 1)
+    h, new_cache, _ = backbone(cfg, params, h, positions, cache=cache,
+                               cache_pos=pos)
+    logits = emb_lib.lm_head(cfg, params["embed"], h)[:, 0]
+    return logits, new_cache

@@ -1,0 +1,212 @@
+"""Zamba2-style hybrid: a Mamba2 backbone with a SHARED attention+MLP
+block applied every `attn_every` layers (arXiv:2411.15242).
+
+The shared block has ONE set of weights reused at every application site
+(the paper's parameter-efficiency trick); its input is the concatenation
+of the current hidden state with the original embedding, brought back to
+d_model by a learned projection. Per-site LoRA adapters from the paper are
+omitted (noted in DESIGN.md §7) — they do not change the distribution or
+roofline structure.
+
+Structure: n_layers mamba blocks in groups of `attn_every`; after each
+group, the shared transformer block runs. The mamba stack uses lax.scan
+per group (compile-time flat in depth); the shared-block applications are
+a short unrolled loop (n_layers / attn_every sites).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.layers import attention as attn_lib
+from repro.layers import embedding as emb_lib
+from repro.layers import mamba2 as m2
+from repro.layers import mlp as mlp_lib
+from repro.layers import norms
+from repro.layers.common import wx
+from repro.models import runtime
+from repro.models.base import ArchConfig, ParamInfo
+from repro.parallel.sharding import shard
+
+
+def n_sites(cfg: ArchConfig) -> int:
+    return cfg.n_layers // cfg.attn_every
+
+
+def abstract_params(cfg: ArchConfig) -> dict:
+    L = cfg.n_layers
+    return {
+        "embed": emb_lib.embed_params(cfg),
+        "layers": {
+            "ln": norms.norm_params(cfg.norm, cfg.d_model, L),
+            "mixer": m2.mamba_params(cfg, L),
+        },
+        "shared": {
+            "in_proj": ParamInfo((2 * cfg.d_model, cfg.d_model), jnp.float32,
+                                 ("fsdp", None)),
+            "ln_attn": norms.norm_params(cfg.norm, cfg.d_model),
+            "attn": attn_lib.attn_params(cfg),
+            "ln_mlp": norms.norm_params(cfg.norm, cfg.d_model),
+            "mlp": mlp_lib.mlp_params(cfg),
+        },
+        "final_norm": norms.norm_params(cfg.norm, cfg.d_model),
+    }
+
+
+def abstract_cache(cfg: ArchConfig, batch: int, max_len: int) -> dict:
+    """SSM cache stacked over layers + KV cache stacked over shared sites."""
+    ssm = m2.ssm_cache_info(cfg, batch)
+    kv = attn_lib.init_cache_info(cfg, batch, max_len)
+    S = n_sites(cfg)
+
+    def stack(n):
+        def f(i: ParamInfo) -> ParamInfo:
+            return ParamInfo((n,) + i.shape, i.dtype, (None,) + i.logical,
+                             init="zeros")
+        return f
+
+    return {
+        "ssm": jax.tree.map(stack(cfg.n_layers), ssm,
+                            is_leaf=lambda x: isinstance(x, ParamInfo)),
+        "kv": jax.tree.map(stack(S), kv,
+                           is_leaf=lambda x: isinstance(x, ParamInfo)),
+    }
+
+
+def _shared_block(cfg, sp, h, emb0, positions, cache_kv, cache_pos):
+    """The shared attention+MLP block. Returns (h, new_kv_cache)."""
+    x = jnp.concatenate([h, emb0], axis=-1)
+    x = jnp.einsum("bse,ed->bsd", x, wx(sp["in_proj"], h.dtype))
+    xn = norms.apply_norm(cfg.norm, sp["ln_attn"], x, eps=cfg.norm_eps)
+    a, new_kv = attn_lib.attention(cfg, sp["attn"], xn, positions,
+                                   cache=cache_kv, cache_pos=cache_pos)
+    x = x + a
+    xn = norms.apply_norm(cfg.norm, sp["ln_mlp"], x, eps=cfg.norm_eps)
+    x = x + mlp_lib.mlp(cfg, sp["mlp"], xn)
+    h = h + x
+    return shard(h, "batch", "seq", None), new_kv
+
+
+def _mamba_group(cfg, group_params, h, *, remat, group_cache=None,
+                 decode=False, want_state=False):
+    """Scan over `attn_every` mamba layers. Returns (h, new_group_cache)."""
+    def body(carry, xs):
+        h = carry
+        lp, cache_layer = xs
+        hn = norms.apply_norm(cfg.norm, lp["ln"], h, eps=cfg.norm_eps)
+        if decode:
+            out, new_cache = m2.mamba_decode_step(cfg, lp["mixer"], hn, cache_layer)
+        elif want_state:
+            out, state = m2.mamba_mixer(cfg, lp["mixer"], hn, return_state=True)
+            new_cache = {
+                "conv": state["conv"].astype(cache_layer["conv"].dtype),
+                "ssm": state["ssm"].astype(cache_layer["ssm"].dtype),
+            }
+        else:
+            out, new_cache = m2.mamba_mixer(cfg, lp["mixer"], hn), None
+        h = h + out
+        h = m2.shard_hidden(h)
+        return h, new_cache
+
+    if remat == "full":
+        body = jax.checkpoint(body, policy=jax.checkpoint_policies.nothing_saveable)
+    if group_cache is None:
+        dummy = jnp.zeros((cfg.attn_every,), jnp.float32)
+
+        def body2(c, xs):
+            lp, _ = xs
+            h, _ = body(c, (lp, None))
+            return h, None
+        h, _ = jax.lax.scan(body2, h, (group_params, dummy),
+                            **runtime.scan_kwargs())
+        return h, None
+    h, new_cache = jax.lax.scan(body, h, (group_params, group_cache),
+                                **runtime.scan_kwargs())
+    return h, new_cache
+
+
+def _grouped(tree, n_groups: int):
+    """Reshape stacked (L, ...) leaves to (n_groups, L/n_groups, ...)."""
+    return jax.tree.map(
+        lambda a: a.reshape((n_groups, a.shape[0] // n_groups) + a.shape[1:]), tree)
+
+
+def forward(cfg: ArchConfig, params: dict, batch: dict, *, remat: str = "none",
+            return_full_logits: bool = True) -> tuple[jnp.ndarray, dict]:
+    tokens = batch["tokens"]
+    B, S = tokens.shape
+    h = emb_lib.assemble_inputs(cfg, params["embed"], batch)
+    h = shard(h, "batch", "seq", None)
+    emb0 = h
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+    groups = _grouped(params["layers"], n_sites(cfg))
+    for g in range(n_sites(cfg)):
+        gp = jax.tree.map(lambda a: a[g], groups)
+        h, _ = _mamba_group(cfg, gp, h, remat=remat)
+        h, _ = _shared_block(cfg, params["shared"], h, emb0, positions, None, None)
+    h = norms.apply_norm(cfg.norm, params["final_norm"], h, eps=cfg.norm_eps)
+    logits = emb_lib.lm_head(cfg, params["embed"], h)
+    return logits, {}
+
+
+def prefill(cfg: ArchConfig, params: dict, batch: dict, cache: dict,
+            *, remat: str = "none") -> tuple[jnp.ndarray, dict]:
+    tokens = batch["tokens"]
+    B, S = tokens.shape
+    h = emb_lib.assemble_inputs(cfg, params["embed"], batch)
+    h = shard(h, "batch", "seq", None)
+    emb0 = h
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+    groups = _grouped(params["layers"], n_sites(cfg))
+    ssm_grouped = _grouped(cache["ssm"], n_sites(cfg))
+    new_ssm, new_kv = [], []
+    for g in range(n_sites(cfg)):
+        gp = jax.tree.map(lambda a: a[g], groups)
+        gc = jax.tree.map(lambda a: a[g], ssm_grouped)
+        h, nc = _mamba_group(cfg, gp, h, remat=remat, group_cache=gc,
+                             want_state=True)
+        new_ssm.append(nc)
+        kv_site = jax.tree.map(lambda a: a[g], cache["kv"])
+        h, nkv = _shared_block(cfg, params["shared"], h, emb0, positions,
+                               kv_site, None)
+        new_kv.append(nkv)
+    h = norms.apply_norm(cfg.norm, params["final_norm"], h, eps=cfg.norm_eps)
+    logits = emb_lib.lm_head(cfg, params["embed"], h[:, -1:, :])[:, 0]
+    cache_out = {
+        "ssm": jax.tree.map(lambda *xs: jnp.concatenate([x for x in xs]), *new_ssm)
+        if len(new_ssm) > 1 else new_ssm[0],
+        "kv": jax.tree.map(lambda *xs: jnp.stack(list(xs)), *new_kv),
+    }
+    return logits, cache_out
+
+
+def decode_step(cfg: ArchConfig, params: dict, tokens: jnp.ndarray,
+                pos: jnp.ndarray, cache: dict,
+                extras: dict | None = None) -> tuple[jnp.ndarray, dict]:
+    batch = {"tokens": tokens}
+    if extras:
+        batch.update(extras)
+    B = tokens.shape[0]
+    h = emb_lib.assemble_inputs(cfg, params["embed"], batch)
+    emb0 = h
+    positions = pos[:, None]
+    groups = _grouped(params["layers"], n_sites(cfg))
+    ssm_grouped = _grouped(cache["ssm"], n_sites(cfg))
+    new_ssm, new_kv = [], []
+    for g in range(n_sites(cfg)):
+        gp = jax.tree.map(lambda a: a[g], groups)
+        gc = jax.tree.map(lambda a: a[g], ssm_grouped)
+        h, nc = _mamba_group(cfg, gp, h, remat="none", group_cache=gc, decode=True)
+        new_ssm.append(nc)
+        kv_site = jax.tree.map(lambda a: a[g], cache["kv"])
+        h, nkv = _shared_block(cfg, params["shared"], h, emb0, positions,
+                               kv_site, pos)
+        new_kv.append(nkv)
+    h = norms.apply_norm(cfg.norm, params["final_norm"], h, eps=cfg.norm_eps)
+    logits = emb_lib.lm_head(cfg, params["embed"], h)[:, 0]
+    cache_out = {
+        "ssm": jax.tree.map(lambda *xs: jnp.concatenate(list(xs)), *new_ssm)
+        if len(new_ssm) > 1 else new_ssm[0],
+        "kv": jax.tree.map(lambda *xs: jnp.stack(list(xs)), *new_kv),
+    }
+    return logits, cache_out

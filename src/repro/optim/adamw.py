@@ -1,0 +1,88 @@
+"""AdamW with fully-sharded optimizer state (ZeRO-3-equivalent under
+GSPMD: m/v/master inherit the parameters' fsdp x TP sharding specs), global
+gradient clipping, and a warmup-cosine schedule.
+
+fp32 master params + fp32 moments; the forward casts to bf16 at use sites
+(mixed precision, MaxText-style).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.base import ParamInfo, is_info
+
+
+@dataclasses.dataclass(frozen=True)
+class OptConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    min_lr_ratio: float = 0.1
+
+
+def abstract_opt_state(abstract_params) -> dict:
+    """m/v mirror the parameter tree (same shapes, logical axes)."""
+    def zero_like(i: ParamInfo) -> ParamInfo:
+        return ParamInfo(i.shape, jnp.float32, i.logical, init="zeros")
+
+    return {
+        "m": jax.tree.map(zero_like, abstract_params, is_leaf=is_info),
+        "v": jax.tree.map(zero_like, abstract_params, is_leaf=is_info),
+        "step": ParamInfo((), jnp.int32, (), init="zeros"),
+    }
+
+
+def schedule(oc: OptConfig, step: jnp.ndarray) -> jnp.ndarray:
+    s = step.astype(jnp.float32)
+    warm = s / jnp.maximum(oc.warmup_steps, 1)
+    prog = jnp.clip((s - oc.warmup_steps) /
+                    jnp.maximum(oc.total_steps - oc.warmup_steps, 1), 0.0, 1.0)
+    cos = 0.5 * (1 + jnp.cos(jnp.pi * prog))
+    decayed = oc.min_lr_ratio + (1 - oc.min_lr_ratio) * cos
+    return oc.lr * jnp.where(s < oc.warmup_steps, warm, decayed)
+
+
+def global_norm(tree) -> jnp.ndarray:
+    return jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                        for g in jax.tree.leaves(tree)))
+
+
+def apply_updates(params, grads, opt_state, oc: OptConfig):
+    """One AdamW step. Returns (new_params, new_opt_state, metrics)."""
+    step = opt_state["step"] + 1
+    lr = schedule(oc, step)
+
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, oc.clip_norm / (gnorm + 1e-9))
+    grads = jax.tree.map(lambda g: (g.astype(jnp.float32) * scale), grads)
+
+    b1, b2 = oc.b1, oc.b2
+    bc1 = 1 - b1 ** step.astype(jnp.float32)
+    bc2 = 1 - b2 ** step.astype(jnp.float32)
+
+    def upd(p, g, m, v):
+        m2 = b1 * m + (1 - b1) * g
+        v2 = b2 * v + (1 - b2) * g * g
+        mhat = m2 / bc1
+        vhat = v2 / bc2
+        delta = mhat / (jnp.sqrt(vhat) + oc.eps) + oc.weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * delta).astype(p.dtype), m2, v2
+
+    flat_p, tdef = jax.tree.flatten(params)
+    flat_g = jax.tree.leaves(grads)
+    flat_m = jax.tree.leaves(opt_state["m"])
+    flat_v = jax.tree.leaves(opt_state["v"])
+    out = [upd(p, g, m, v) for p, g, m, v in zip(flat_p, flat_g, flat_m, flat_v)]
+    new_p = jax.tree.unflatten(tdef, [o[0] for o in out])
+    new_m = jax.tree.unflatten(tdef, [o[1] for o in out])
+    new_v = jax.tree.unflatten(tdef, [o[2] for o in out])
+    return new_p, {"m": new_m, "v": new_v, "step": step}, {
+        "grad_norm": gnorm, "lr": lr}

@@ -1,0 +1,135 @@
+"""Logical-axis sharding rules (FSDP x TP x SP x EP x pod-DP).
+
+Model code annotates tensors with *logical* axis names; the active rule set
+maps those to physical mesh axes. Outside a `use_mesh` context every
+annotation is a no-op, so the same model code runs single-device tests and
+512-chip dry-runs unchanged.
+
+Rules (defaults; see DESIGN.md §5):
+
+  batch    -> ("pod", "data")   data parallel (pod axis joins on multi-pod)
+  seq      -> ("model",)        sequence parallelism between layers
+  vocab    -> ("model",)        vocab-sharded embedding / logits
+  heads    -> ("model",)        attention-head tensor parallelism
+  kv_heads -> ("model",)        (falls back to None when indivisible - GQA)
+  ffn      -> ("model",)        MLP tensor parallelism
+  fsdp     -> ("data",)         parameter FSDP axis
+  experts  -> ("model",)        expert parallelism
+  kv_seq   -> ("model",)        decode-time KV-cache sequence sharding
+
+Divisibility guard: a logical axis silently drops to replicated when the
+dimension is not divisible by the product of its mesh axes (e.g. 20 query
+heads on a 16-way model axis); the fallback is recorded so the roofline
+report can show where TP degraded.
+"""
+from __future__ import annotations
+
+import contextlib
+import math
+import threading
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+DEFAULT_RULES: dict[str, tuple[str, ...]] = {
+    "batch": ("pod", "data"),
+    "tokens": ("pod", "data", "model"),   # flattened token dim (MoE dispatch)
+    "seq": ("model",),
+    "vocab": ("model",),
+    "heads": ("model",),
+    "kv_heads": ("model",),
+    "ffn": ("model",),
+    "fsdp": ("data",),
+    "experts": ("model",),
+    "kv_seq": ("model",),
+    "state": (),
+    None: (),
+}
+
+_ctx = threading.local()
+
+
+def _state():
+    if not hasattr(_ctx, "mesh"):
+        _ctx.mesh, _ctx.rules, _ctx.fallbacks = None, dict(DEFAULT_RULES), []
+    return _ctx
+
+
+@contextlib.contextmanager
+def use_mesh(mesh: Mesh | None, rules: dict | None = None):
+    """Activate a mesh + logical rules for `shard`/`spec` calls within."""
+    st = _state()
+    prev = (st.mesh, st.rules, st.fallbacks)
+    st.mesh = mesh
+    st.rules = dict(DEFAULT_RULES)
+    if rules:
+        st.rules.update(rules)
+    st.fallbacks = []
+    try:
+        yield
+    finally:
+        st.mesh, st.rules, st.fallbacks = prev
+
+
+def active_mesh() -> Mesh | None:
+    return _state().mesh
+
+
+def fallbacks() -> list:
+    """Logical axes that degraded to replicated (for the perf report)."""
+    return list(_state().fallbacks)
+
+
+def _axes_for(logical: str | None, dim: int, mesh: Mesh) -> tuple[str, ...] | None:
+    st = _state()
+    axes = st.rules.get(logical, ())
+    axes = tuple(a for a in axes if a in mesh.shape)
+    if not axes:
+        return None
+    total = math.prod(mesh.shape[a] for a in axes)
+    if dim % total != 0:
+        # try a prefix of the axes (e.g. drop "pod" but keep "data")
+        for cut in range(len(axes) - 1, 0, -1):
+            sub = axes[:cut]
+            if dim % math.prod(mesh.shape[a] for a in sub) == 0:
+                st.fallbacks.append((logical, dim, axes, sub))
+                return sub
+        st.fallbacks.append((logical, dim, axes, None))
+        return None
+    return axes
+
+
+def spec(shape: tuple[int, ...], logical: tuple[str | None, ...]) -> P:
+    """PartitionSpec for `shape` under the active rules (None mesh -> P())."""
+    mesh = _state().mesh
+    if mesh is None:
+        return P()
+    assert len(shape) == len(logical), (shape, logical)
+    parts = []
+    used: set[str] = set()
+    for dim, name in zip(shape, logical):
+        axes = _axes_for(name, dim, mesh) if name else None
+        if axes and not (set(axes) & used):
+            used.update(axes)
+            parts.append(axes if len(axes) > 1 else axes[0])
+        else:
+            parts.append(None)
+    while parts and parts[-1] is None:
+        parts.pop()
+    return P(*parts)
+
+
+def shard(x: jax.Array, *logical: str | None) -> jax.Array:
+    """Annotate activation x with a logical sharding constraint."""
+    mesh = _state().mesh
+    if mesh is None:
+        return x
+    s = spec(x.shape, logical)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, s))
+
+
+def named_sharding(shape: tuple[int, ...], logical: tuple[str | None, ...]) -> NamedSharding | None:
+    mesh = _state().mesh
+    if mesh is None:
+        return None
+    return NamedSharding(mesh, spec(shape, logical))

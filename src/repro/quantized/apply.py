@@ -1,0 +1,160 @@
+"""The paper's technique at LM scale: post-training weight quantization +
+structural pruning of a trained checkpoint ("netgen for transformers").
+
+What transfers from the paper (DESIGN.md §6): the WEIGHT-side ladder —
+cast trained weights to integers (here: per-channel symmetric int8, the
+TPU-native generalization of the paper's +/-9 integer cast) and prune
+structurally-dead channels at specialization time. What does NOT transfer:
+1-bit activations (paper L1/L2) — fine for a 10-class MLP, destroys LMs.
+
+Two execution modes:
+  * `quantize_tree` / fake-quant — weights stored int8+scale, dequantized
+    at load: bit-exact accuracy evaluation of the quantized model on any
+    backend (this is how the quality ladder is measured).
+  * real int8 execution — `repro.kernels.quant_matmul` (MXU int8 path);
+    demonstrated end-to-end in examples/quantize_lm.py.
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+
+QUANT_MIN_SIZE = 1 << 14      # don't quantize tiny tensors (norms, biases)
+
+# serving-path quantization allowlist: the big matmul weights only
+import re as _re
+_QUANT_NAMES = _re.compile(
+    r"\['(wq|wk|wv|wo|wi|wg|in_proj|out_proj|head|tok)'\]$")
+
+
+def _is_weight(path: str, x, min_size: int = QUANT_MIN_SIZE) -> bool:
+    if x.ndim < 2 or x.size < min_size:
+        return False
+    # never quantize rotary/positional tables or optimizer state
+    return not any(s in path for s in ("norm", "scale", "bias"))
+
+
+def quantize_leaf(x: np.ndarray) -> tuple[np.ndarray, np.ndarray]:
+    """Per-output-channel (last dim) symmetric int8."""
+    amax = np.maximum(np.abs(x).reshape(-1, x.shape[-1]).max(axis=0), 1e-8)
+    s = (amax / 127.0).astype(np.float32)
+    q = np.clip(np.round(x / s), -127, 127).astype(np.int8)
+    return q, s
+
+
+def quantize_tree(params, *, min_size: int = QUANT_MIN_SIZE) -> tuple[dict, dict]:
+    """Returns (quantized storage tree, stats). Leaves are either raw
+    arrays (small tensors) or {"q": int8, "s": fp32 scales}."""
+    flat, treedef = jax.tree.flatten_with_path(params)
+    out = []
+    total_before = total_after = 0
+    n_quant = 0
+    for path, leaf in flat:
+        key = jax.tree_util.keystr(path)
+        arr = np.asarray(leaf)
+        total_before += arr.nbytes
+        if _is_weight(key, arr, min_size):
+            q, s = quantize_leaf(arr)
+            out.append({"q": q, "s": s})
+            total_after += q.nbytes + s.nbytes
+            n_quant += 1
+        else:
+            out.append(arr)
+            total_after += arr.nbytes
+    stats = {
+        "bytes_before": total_before,
+        "bytes_after": total_after,
+        "compression": total_before / max(total_after, 1),
+        "n_quantized": n_quant,
+        "n_leaves": len(flat),
+    }
+    return jax.tree.unflatten(treedef, out), stats
+
+
+def dequantize_tree(qtree, dtype=jnp.float32):
+    """Fake-quant materialization: int8 storage -> float weights carrying
+    the quantization error (the accuracy-evaluation path)."""
+    def deq(leaf):
+        if isinstance(leaf, dict) and set(leaf) == {"q", "s"}:
+            return jnp.asarray(leaf["q"], jnp.float32) * jnp.asarray(leaf["s"])
+        return jnp.asarray(leaf)
+
+    return jax.tree.map(deq, qtree,
+                        is_leaf=lambda l: isinstance(l, dict) and set(l) == {"q", "s"})
+
+
+def abstract_quantized_params(cfg, *, min_size: int = QUANT_MIN_SIZE):
+    """Abstract (ParamInfo) tree for the W8-specialized serving artifact:
+    big weights become {"q": int8 ParamInfo, "s": fp32 scales} with the
+    same logical sharding — drives allocation-free quantized dry-runs."""
+    import jax.numpy as jnp
+    from repro.models import api
+    from repro.models.base import ParamInfo, is_info
+
+    tree = api.abstract_params(cfg)
+    flat, treedef = jax.tree.flatten_with_path(tree, is_leaf=is_info)
+    out = []
+    for path, info in flat:
+        key = jax.tree_util.keystr(path)
+        size = int(np.prod(info.shape))
+        if (len(info.shape) >= 2 and size >= min_size
+                and _QUANT_NAMES.search(key)):
+            # per-(stack, out-channel) scales: (L, last) for stacked weights
+            sshape = ((info.shape[0], info.shape[-1])
+                      if len(info.shape) >= 3 else (info.shape[-1],))
+            slogical = ((info.logical[0], info.logical[-1])
+                        if len(info.shape) >= 3 else (info.logical[-1],))
+            out.append({
+                "q": ParamInfo(info.shape, jnp.int8, info.logical, init="zeros"),
+                "s": ParamInfo(sshape, jnp.float32, slogical, init="ones"),
+            })
+        else:
+            out.append(info)
+    return jax.tree.unflatten(treedef, out)
+
+
+def quantize_params_for_serving(cfg, params, *, min_size: int = QUANT_MIN_SIZE):
+    """Materialized version of abstract_quantized_params: real int8+scales
+    with per-(layer, out-channel) resolution for stacked weights."""
+    import jax.numpy as jnp
+
+    flat, treedef = jax.tree.flatten_with_path(params)
+    out = []
+    for path, leaf in flat:
+        key = jax.tree_util.keystr(path)
+        arr = np.asarray(leaf)
+        if (arr.ndim >= 2 and arr.size >= min_size
+                and _QUANT_NAMES.search(key)):
+            if arr.ndim >= 3:
+                flatw = arr.reshape(arr.shape[0], -1, arr.shape[-1])
+                amax = np.maximum(np.abs(flatw).max(axis=1), 1e-8)  # (L, last)
+                s = (amax / 127.0).astype(np.float32)
+                sb = s.reshape(arr.shape[0], *([1] * (arr.ndim - 2)), arr.shape[-1])
+            else:
+                amax = np.maximum(
+                    np.abs(arr).reshape(-1, arr.shape[-1]).max(axis=0), 1e-8)
+                s = (amax / 127.0).astype(np.float32)
+                sb = s
+            q = np.clip(np.round(arr / sb), -127, 127).astype(np.int8)
+            out.append({"q": jnp.asarray(q), "s": jnp.asarray(s)})
+        else:
+            out.append(jnp.asarray(arr))
+    return jax.tree.unflatten(treedef, out)
+
+
+def prune_stats(params, threshold: float = 0.0) -> dict:
+    """Structural zero analysis (paper L4 at LM scale): per weight matrix,
+    the fraction of output channels with max |w| <= threshold — channels a
+    specializing compiler deletes outright."""
+    dead = total = 0
+    for path, leaf in jax.tree.flatten_with_path(params)[0]:
+        arr = np.asarray(leaf)
+        if not _is_weight(jax.tree_util.keystr(path), arr):
+            continue
+        chan_max = np.abs(arr).reshape(-1, arr.shape[-1]).max(axis=0)
+        dead += int((chan_max <= threshold).sum())
+        total += arr.shape[-1]
+    return {"dead_channels": dead, "total_channels": total,
+            "dead_fraction": dead / max(total, 1)}

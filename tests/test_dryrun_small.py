@@ -1,0 +1,85 @@
+"""Dry-run machinery tests on a small faked-device mesh.
+
+The full 512-device sweep runs via `python -m repro.launch.dryrun` (see
+EXPERIMENTS.md). Here we exercise the same lowering path end-to-end in a
+SUBPROCESS with 8 fake host devices (tests themselves must keep seeing a
+single device), plus unit tests for the HLO collective parser.
+"""
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+from repro.launch import roofline as rl
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+
+def test_collective_parser():
+    hlo = """
+  %ar = f32[16,128]{1,0} all-reduce(f32[16,128]{1,0} %x), replica_groups={}
+  %ag = (bf16[4,8]{1,0}, bf16[4,8]{1,0}) all-gather(bf16[2,8]{1,0} %y, bf16[2,8]{1,0} %z), dimensions={0}
+  %p = f32[2,2]{1,0} add(f32[2,2]{1,0} %a, f32[2,2]{1,0} %b)
+  %rs = bf16[8]{0} reduce-scatter(bf16[64]{0} %w), dimensions={0}
+"""
+    st = rl.collective_stats(hlo)
+    assert st["_num_ops"] == 3
+    assert st["all-reduce"] == 16 * 128 * 4
+    assert st["all-gather"] == 2 * 4 * 8 * 2
+    assert st["reduce-scatter"] == 8 * 2
+
+
+def test_model_flops_sane():
+    from repro import configs
+    from repro.models.base import SHAPES
+    cfg = configs.get_config("llama3.2-3b")
+    f_train = rl.model_flops(cfg, SHAPES["train_4k"])
+    f_dec = rl.model_flops(cfg, SHAPES["decode_32k"])
+    # ~3.2B active params x ~1M tokens -> 6*N*D ~ 2e16
+    assert 1e16 < f_train < 1e17, f_train
+    assert f_dec < f_train / 1000
+
+
+def test_roofline_bottleneck_logic():
+    r = rl.Roofline(
+        arch="a", shape="s", mesh="m", chips=256,
+        flops_per_device=197e12,        # exactly 1s of compute
+        bytes_per_device=819e9 * 0.5,   # 0.5s of memory
+        collective_bytes=50e9 * 0.25,   # 0.25s of collective
+        collective_breakdown={}, model_flops=197e12 * 256 * 0.7,
+        peak_mem_per_device=1e9)
+    assert r.bottleneck == "compute"
+    assert abs(r.t_compute - 1.0) < 1e-9
+    assert abs(r.roofline_fraction - 0.7) < 1e-6
+
+
+@pytest.mark.slow
+def test_small_mesh_dryrun_subprocess(tmp_path):
+    """Lower+compile a smoke arch on a 2x4 fake mesh in a subprocess."""
+    script = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import json, sys
+import jax
+from repro import configs
+from repro.launch.dryrun import run_cell
+from repro.models.base import ShapeConfig
+
+mesh = jax.make_mesh((2, 4), ("data", "model"),
+                     axis_types=(jax.sharding.AxisType.Auto,) * 2)
+cfg = configs.smoke("llama3.2-3b")
+shape = ShapeConfig("t", seq_len=64, global_batch=8, kind="train", accum=2)
+record, meta = run_cell(cfg, shape, mesh, remat="full", verbose=False)
+print(json.dumps({"flops": record.flops_per_device,
+                  "coll": record.collective_bytes,
+                  "mem": record.peak_mem_per_device}))
+"""
+    env = dict(os.environ, PYTHONPATH=SRC)
+    out = subprocess.run([sys.executable, "-c", script], env=env,
+                         capture_output=True, text=True, timeout=600)
+    assert out.returncode == 0, out.stderr[-2000:]
+    rec = json.loads(out.stdout.strip().splitlines()[-1])
+    assert rec["flops"] > 0
+    assert rec["mem"] > 0

@@ -1,0 +1,76 @@
+"""binary_matvec kernel vs jnp oracle: shape/dtype sweeps + properties."""
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels.binary_matvec import ops, ref
+
+SHAPES = [
+    (1, 784, 500),     # the paper's layer-1 shape
+    (4, 500, 10),      # the paper's layer-2 shape
+    (8, 128, 128),
+    (3, 200, 77),      # ragged, forces padding
+    (16, 64, 256),
+    (2, 1024, 32),
+]
+
+
+@pytest.mark.parametrize("b,k,n", SHAPES)
+@pytest.mark.parametrize("wdtype", [jnp.int32, jnp.int8])
+def test_binary_matmul_matches_oracle(b, k, n, wdtype):
+    rng = np.random.default_rng(b * 1000 + k + n)
+    x = rng.integers(0, 2, size=(b, k)).astype(np.int8)
+    w = rng.integers(-9, 10, size=(k, n)).astype(np.int32)
+    got = ops.binary_matmul(jnp.asarray(x), jnp.asarray(w).astype(wdtype))
+    want = ref.binary_matmul_ref(jnp.asarray(x), jnp.asarray(w).astype(wdtype))
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@pytest.mark.parametrize("b,k,n", [(4, 256, 64), (2, 784, 500), (5, 96, 40)])
+def test_binary_matmul_packed_matches_oracle(b, k, n):
+    rng = np.random.default_rng(k + n)
+    x = rng.integers(0, 2, size=(b, k)).astype(np.int8)
+    w = rng.integers(-9, 10, size=(k, n)).astype(np.int32)
+    xp = ops.pack_bits(jnp.asarray(x))
+    kp = xp.shape[1] * 32
+    wp = jnp.zeros((kp, n), jnp.int32).at[:k].set(jnp.asarray(w))
+    got = ops.binary_matmul_packed(xp, wp)
+    want = np.asarray(x.astype(np.int64) @ w.astype(np.int64))
+    np.testing.assert_array_equal(np.asarray(got), want)
+
+
+def test_pack_unpack_roundtrip():
+    rng = np.random.default_rng(0)
+    x = rng.integers(0, 2, size=(7, 130)).astype(np.int8)
+    xp = ops.pack_bits(jnp.asarray(x))
+    back = ref.unpack_bits_ref(xp, 130)
+    np.testing.assert_array_equal(np.asarray(back)[:, :130], x)
+
+
+def test_masked_form_equals_matmul():
+    """The paper's L5 identity: masked column-sum == matmul for binary x."""
+    rng = np.random.default_rng(1)
+    x = jnp.asarray(rng.integers(0, 2, size=(9, 61)).astype(np.int8))
+    w = jnp.asarray(rng.integers(-5, 6, size=(61, 13)).astype(np.int32))
+    np.testing.assert_array_equal(
+        np.asarray(ref.binary_matmul_masked_ref(x, w)),
+        np.asarray(ref.binary_matmul_ref(x, w)),
+    )
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    b=st.integers(1, 8),
+    k=st.integers(1, 200),
+    n=st.integers(1, 64),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_binary_matmul_property(b, k, n, seed):
+    """Property: kernel == int matmul for any binary input / int weights."""
+    rng = np.random.default_rng(seed)
+    x = rng.integers(0, 2, size=(b, k)).astype(np.int8)
+    w = rng.integers(-9, 10, size=(k, n)).astype(np.int32)
+    got = np.asarray(ops.binary_matmul(jnp.asarray(x), jnp.asarray(w)))
+    np.testing.assert_array_equal(got, x.astype(np.int64) @ w.astype(np.int64))

@@ -1,0 +1,54 @@
+"""quant_matmul kernel vs oracle: exactness of int core + dequant epilogue."""
+import numpy as np
+import pytest
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels.quant_matmul import ops, ref
+
+SHAPES = [(1, 64, 64), (8, 256, 128), (3, 100, 50), (16, 512, 256), (2, 2048, 64)]
+
+
+@pytest.mark.parametrize("m,k,n", SHAPES)
+def test_quant_matmul_matches_oracle(m, k, n):
+    rng = np.random.default_rng(m * 7 + k + n)
+    xq = rng.integers(-127, 128, size=(m, k)).astype(np.int8)
+    wq = rng.integers(-127, 128, size=(k, n)).astype(np.int8)
+    sx = np.float32(0.013)
+    sw = rng.uniform(0.001, 0.1, size=(n,)).astype(np.float32)
+    got = ops.quant_matmul(jnp.asarray(xq), jnp.asarray(wq), sx, jnp.asarray(sw))
+    want = ref.quant_matmul_ref(jnp.asarray(xq), jnp.asarray(wq), sx, jnp.asarray(sw))
+    # int32 accumulation is exact; only the fp32 epilogue can differ by ulps.
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-6)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_qlinear_close_to_float(dtype):
+    """End-to-end W8A8 linear stays close to the fp matmul (the paper's
+    'integer weights cost little accuracy' claim, in relative-error form)."""
+    rng = np.random.default_rng(3)
+    x = jnp.asarray(rng.normal(size=(8, 256)), dtype)
+    w = jnp.asarray(rng.normal(size=(256, 64)).astype(np.float32))
+    wq, sw = ops.quantize_weight(w)
+    y = ops.qlinear(x, wq, sw)
+    want = x.astype(jnp.float32) @ w
+    err = np.linalg.norm(np.asarray(y, np.float32) - np.asarray(want)) / np.linalg.norm(
+        np.asarray(want)
+    )
+    assert err < 0.02, err
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    m=st.integers(1, 8), k=st.integers(8, 128), n=st.integers(1, 64),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_quant_matmul_property(m, k, n, seed):
+    """Property: integer core is exact for any int8 operands/shapes."""
+    rng = np.random.default_rng(seed)
+    xq = rng.integers(-127, 128, size=(m, k)).astype(np.int8)
+    wq = rng.integers(-127, 128, size=(k, n)).astype(np.int8)
+    sw = np.ones((n,), np.float32)
+    got = np.asarray(ops.quant_matmul(jnp.asarray(xq), jnp.asarray(wq), np.float32(1.0), jnp.asarray(sw)))
+    want = xq.astype(np.int64) @ wq.astype(np.int64)
+    np.testing.assert_array_equal(got.astype(np.int64), want)

@@ -1,0 +1,82 @@
+"""ssd_scan kernel vs sequential-recurrence oracle (Mamba2 SSD)."""
+import numpy as np
+import pytest
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels.ssd_scan import ops, ref
+
+
+def _inputs(b, l, h, g, p, n, seed, dtype=np.float32):
+    rng = np.random.default_rng(seed)
+    x = rng.normal(size=(b, l, h, p)).astype(dtype)
+    dt = rng.uniform(0.001, 0.1, size=(b, l, h)).astype(dtype)
+    a = -rng.uniform(0.5, 2.0, size=(h,)).astype(np.float32)
+    bb = rng.normal(size=(b, l, g, n)).astype(dtype) / np.sqrt(n)
+    cc = rng.normal(size=(b, l, g, n)).astype(dtype) / np.sqrt(n)
+    return x, dt, a, bb, cc
+
+
+def test_chunked_ref_matches_sequential():
+    """The SSD chunk decomposition is exact vs the recurrence."""
+    x, dt, a, b, c = _inputs(1, 128, 2, 1, 16, 32, seed=0)
+    y1, s1 = ref.ssd_sequential_ref(
+        jnp.asarray(x[0, :, 0]), jnp.asarray(dt[0, :, 0]), float(a[0]),
+        jnp.asarray(b[0, :, 0]), jnp.asarray(c[0, :, 0]))
+    y2, s2 = ref.ssd_chunked_ref(
+        jnp.asarray(x[0, :, 0]), jnp.asarray(dt[0, :, 0]), float(a[0]),
+        jnp.asarray(b[0, :, 0]), jnp.asarray(c[0, :, 0]), chunk=32)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2), rtol=2e-5, atol=2e-5)
+    np.testing.assert_allclose(np.asarray(s1), np.asarray(s2), rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.parametrize("b,l,h,g,p,n,chunk", [
+    (1, 64, 1, 1, 16, 32, 16),
+    (2, 128, 4, 2, 32, 64, 64),
+    (1, 256, 2, 1, 64, 128, 64),   # production-like head dims
+    (2, 64, 8, 8, 16, 16, 32),     # groups == heads
+])
+def test_ssd_kernel_matches_oracle(b, l, h, g, p, n, chunk):
+    x, dt, a, bb, cc = _inputs(b, l, h, g, p, n, seed=l + h)
+    y, s = ops.ssd(jnp.asarray(x), jnp.asarray(dt), jnp.asarray(a),
+                   jnp.asarray(bb), jnp.asarray(cc), chunk=chunk)
+    yref, sref = ref.ssd_batched_ref(jnp.asarray(x), jnp.asarray(dt), jnp.asarray(a),
+                                     jnp.asarray(bb), jnp.asarray(cc), chunk=chunk)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(yref), rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(np.asarray(s), np.asarray(sref), rtol=2e-4, atol=2e-4)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_ssd_kernel_dtypes(dtype):
+    x, dt, a, bb, cc = _inputs(1, 64, 2, 1, 16, 32, seed=9)
+    y, s = ops.ssd(jnp.asarray(x, dtype), jnp.asarray(dt, dtype), jnp.asarray(a),
+                   jnp.asarray(bb, dtype), jnp.asarray(cc, dtype), chunk=32)
+    assert y.dtype == dtype
+    yref, _ = ref.ssd_batched_ref(jnp.asarray(x), jnp.asarray(dt), jnp.asarray(a),
+                                  jnp.asarray(bb), jnp.asarray(cc), chunk=32)
+    tol = 5e-2 if dtype == jnp.bfloat16 else 2e-4
+    np.testing.assert_allclose(
+        np.asarray(y, np.float32), np.asarray(yref), rtol=tol, atol=tol)
+
+
+@settings(max_examples=10, deadline=None)
+@given(l_chunks=st.integers(1, 4), p=st.sampled_from([8, 16]),
+       n=st.sampled_from([16, 32]), seed=st.integers(0, 2**31 - 1))
+def test_ssd_property_state_consistency(l_chunks, p, n, seed):
+    """Property: running the scan over [0:L] equals running [0:L/2] then
+    [L/2:L] seeded with the midpoint state (checkpointable recurrence)."""
+    l = 64 * l_chunks
+    x, dt, a, bb, cc = _inputs(1, l, 1, 1, p, n, seed=seed)
+    args = (jnp.asarray(x[0, :, 0]), jnp.asarray(dt[0, :, 0]), float(a[0]),
+            jnp.asarray(bb[0, :, 0]), jnp.asarray(cc[0, :, 0]))
+    y_full, s_full = ref.ssd_chunked_ref(*args, chunk=32)
+    half = l // 2
+    if half % 32 != 0:
+        return
+    y1, s1 = ref.ssd_chunked_ref(args[0][:half], args[1][:half], args[2],
+                                 args[3][:half], args[4][:half], chunk=32)
+    y2, s2 = ref.ssd_chunked_ref(args[0][half:], args[1][half:], args[2],
+                                 args[3][half:], args[4][half:], chunk=32, s_init=s1)
+    np.testing.assert_allclose(np.asarray(s2), np.asarray(s_full), rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(
+        np.asarray(jnp.concatenate([y1, y2])), np.asarray(y_full), rtol=1e-4, atol=1e-4)

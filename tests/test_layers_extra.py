@@ -1,0 +1,94 @@
+"""Additional layer-level correctness tests: rotary embeddings vs naive
+references, norms, and W8-specialized serving equivalence."""
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from repro.layers import norms, rotary
+
+
+def _naive_rope(x, positions, theta):
+    """Literal per-element RoPE reference."""
+    B, S, H, hd = x.shape
+    half = hd // 2
+    out = np.array(x, np.float32)
+    for b in range(B):
+        for s in range(S):
+            pos = float(positions[b, s])
+            for i in range(half):
+                freq = 1.0 / (theta ** (i / half))
+                ang = pos * freq
+                c, sn = np.cos(ang), np.sin(ang)
+                x1 = np.array(x[b, s, :, i], np.float32)
+                x2 = np.array(x[b, s, :, i + half], np.float32)
+                out[b, s, :, i] = x1 * c - x2 * sn
+                out[b, s, :, i + half] = x2 * c + x1 * sn
+    return out
+
+
+def test_rope_matches_naive():
+    rng = np.random.default_rng(0)
+    x = rng.normal(size=(2, 5, 3, 8)).astype(np.float32)
+    pos = rng.integers(0, 100, size=(2, 5)).astype(np.int32)
+    got = rotary.rope(jnp.asarray(x), jnp.asarray(pos), theta=10_000.0)
+    want = _naive_rope(x, pos, 10_000.0)
+    np.testing.assert_allclose(np.asarray(got), want, rtol=1e-5, atol=1e-5)
+
+
+def test_rope_relative_property():
+    """RoPE inner products depend only on relative position."""
+    rng = np.random.default_rng(1)
+    q = jnp.asarray(rng.normal(size=(1, 1, 1, 16)).astype(np.float32))
+    k = jnp.asarray(rng.normal(size=(1, 1, 1, 16)).astype(np.float32))
+
+    def score(pq, pk):
+        qr = rotary.rope(q, jnp.asarray([[pq]], jnp.int32), 1e4)
+        kr = rotary.rope(k, jnp.asarray([[pk]], jnp.int32), 1e4)
+        return float(jnp.sum(qr * kr))
+
+    assert abs(score(7, 3) - score(14, 10)) < 1e-4      # same delta = 4
+    assert abs(score(7, 3) - score(8, 3)) > 1e-6        # different delta
+
+
+def test_mrope_reduces_to_rope_when_positions_equal():
+    """With identical t/h/w position streams, M-RoPE == RoPE."""
+    rng = np.random.default_rng(2)
+    x = jnp.asarray(rng.normal(size=(2, 6, 4, 16)).astype(np.float32))
+    pos = jnp.asarray(rng.integers(0, 50, size=(2, 6)).astype(np.int32))
+    pos3 = jnp.stack([pos] * 3)
+    got = rotary.mrope(x, pos3, 1e4, sections=(3, 3, 2))
+    want = rotary.rope(x, pos, 1e4)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_sinusoidal_shapes_and_range():
+    emb = rotary.sinusoidal_embedding(
+        jnp.arange(8, dtype=jnp.int32)[None], 32)
+    assert emb.shape == (1, 8, 32)
+    assert float(jnp.max(jnp.abs(emb))) <= 1.0 + 1e-6
+
+
+@settings(max_examples=15, deadline=None)
+@given(d=st.sampled_from([8, 32, 64]), seed=st.integers(0, 10_000))
+def test_rmsnorm_property_unit_rms(d, seed):
+    """Post-norm RMS (with unit scale) is ~1 for any input."""
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(size=(3, d)).astype(np.float32) * 10)
+    p = {"scale": jnp.ones((d,))}
+    y = norms.apply_norm("rmsnorm", p, x, eps=1e-6)
+    rms = np.sqrt(np.mean(np.asarray(y) ** 2, axis=-1))
+    np.testing.assert_allclose(rms, 1.0, rtol=1e-3)
+
+
+def test_layernorm_matches_numpy():
+    rng = np.random.default_rng(3)
+    x = rng.normal(size=(4, 16)).astype(np.float32)
+    p = {"scale": jnp.full((16,), 2.0), "bias": jnp.full((16,), 0.5)}
+    got = norms.apply_norm("layernorm", p, jnp.asarray(x), eps=1e-5)
+    mu = x.mean(-1, keepdims=True)
+    var = x.var(-1, keepdims=True)
+    want = (x - mu) / np.sqrt(var + 1e-5) * 2.0 + 0.5
+    np.testing.assert_allclose(np.asarray(got), want, rtol=1e-4, atol=1e-4)
