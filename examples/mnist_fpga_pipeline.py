@@ -1,8 +1,13 @@
 """The paper's full pipeline at full size: train 784-500-10, apply the
-ladder, generate the full-network Verilog artifact, and compare software
+ladder, compile through the `repro.netgen` IR (frontend -> passes ->
+backends), emit the full-network Verilog artifact, and compare software
 vs specialized throughput — everything in paper §II-§V.
 
-  PYTHONPATH=src python examples/mnist_fpga_pipeline.py [--fast]
+  PYTHONPATH=src python examples/mnist_fpga_pipeline.py [--fast] [--deep]
+
+--deep swaps in a 3-layer hidden stack, which the paper's hardwired
+script could not express — the IR compiles it through the same passes
+and backends.
 """
 import argparse
 import time
@@ -10,15 +15,21 @@ import time
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import dataset, mlp, netgen, quantize
+from repro.core import dataset, mlp, quantize
+from repro import netgen
 
 
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--fast", action="store_true")
+    ap.add_argument("--deep", action="store_true",
+                    help="3-layer hidden stack instead of the paper's one")
     ap.add_argument("--verilog-out", default="/tmp/nn_inference_full.v")
     args = ap.parse_args()
-    n_hidden = 128 if args.fast else 500
+    if args.deep:
+        n_hidden = (128, 64) if args.fast else (500, 128)
+    else:
+        n_hidden = 128 if args.fast else 500
     epochs = 25 if args.fast else 60
 
     print("== train (paper §II.A: 1000 imgs, backprop) ==")
@@ -26,7 +37,7 @@ def main():
     cfg = mlp.MLPConfig(n_hidden=n_hidden, epochs=epochs, lr=2.0, seed=42)
     t0 = time.time()
     params = mlp.train(cfg, xtr, ytr)
-    print(f"trained in {time.time()-t0:.0f}s")
+    print(f"trained in {time.time()-t0:.0f}s (layers: {mlp.layer_sizes(cfg)})")
 
     accs = {
         "L0 sigmoid fp32 (paper 98%)": mlp.predict_l0(params),
@@ -37,18 +48,27 @@ def main():
     for name, fn in accs.items():
         print(f"  {name}: {mlp.accuracy(fn, xte, yte):.1%}")
 
-    print("\n== netgen (paper §IV-§V) ==")
+    print("\n== netgen compile (paper §IV-§V as IR passes) ==")
     qnet = quantize.quantize(params)
-    qp, pinfo = netgen.prune(qnet)
-    st = netgen.stats(qnet)
-    print(f"  zero weights deleted at generation: {st.zero_fraction:.1%} "
-          f"(paper: ~50%)")
-    print(f"  multiplies: {st.mults_dense} -> 0 (addend form); "
-          f"adds: {st.adds_addend}")
-    print(f"  dead hidden units removed: {pinfo.hidden_removed}")
+    compiled = netgen.compile_net(qnet, backend="jnp")
+    for s in compiled.pass_stats:
+        print(f"  {s.row()}")
+    zero_del = compiled.pass_stats[0]          # delete_zero_terms
+    final = compiled.pass_stats[-1].after
+    print(f"  zero weights deleted at generation: "
+          f"{1 - zero_del.after.terms / zero_del.before.terms:.1%} (paper: ~50%)")
+    print(f"  multiplies: {zero_del.before.terms} -> 0 (addend form); "
+          f"adds: {final.addend_units}")
 
+    # emit from the dead-unit-pruned circuit (the paper's L4), with the L5
+    # addend rewrite unless --fast (it inflates the text ~5x)
+    hw_passes = (netgen.delete_zero_terms, netgen.prune_dead_units)
+    if not args.fast:
+        hw_passes += (netgen.addend_rewrite,)
     t0 = time.time()
-    v = netgen.emit_verilog(qp, addend=not args.fast)
+    v = netgen.compile_net(
+        qnet, backend="verilog", passes=hw_passes,
+        addend=not args.fast).artifact
     with open(args.verilog_out, "w") as f:
         f.write(v)
     print(f"  full Verilog artifact: {len(v)/1e6:.1f} MB, "
@@ -57,7 +77,8 @@ def main():
 
     print("\n== specialized inference (exactness + throughput) ==")
     l3 = quantize.predict_l3(params)(jnp.asarray(xte))
-    for backend in ("jnp", "pallas", "fused"):
+    backends = ("jnp", "pallas") if args.deep else ("jnp", "pallas", "fused")
+    for backend in backends:
         fn = netgen.specialize(qnet, backend=backend)
         n = 1000 if backend == "jnp" else 64
         preds = fn(jnp.asarray(xte[:n]))

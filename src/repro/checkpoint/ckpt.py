@@ -30,7 +30,7 @@ from repro.models.base import is_info, tree_sds
 
 
 def _paths(tree):
-    leaves, treedef = jax.tree.flatten_with_path(tree)
+    leaves, treedef = jax.tree_util.tree_flatten_with_path(tree)
     return [(jax.tree_util.keystr(p), v) for p, v in leaves], treedef
 
 

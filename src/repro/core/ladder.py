@@ -42,9 +42,13 @@ def run_ladder(
     epochs: int = 60,
     seed: int = 0,
     backends: tuple = ("jnp",),
+    n_hidden: int | tuple = 500,
 ) -> LadderResult:
+    """Train, quantize, and check every ladder stage. `n_hidden` may be a
+    tuple of layer sizes — the whole ladder (and the netgen rewrites it
+    feeds) runs on deeper stacks too; "fused" is 2-layer only."""
     xtr, ytr, xte, yte = dataset.train_test_split(n_train, n_test, seed=seed)
-    cfg = mlp.MLPConfig(epochs=epochs, seed=seed + 1)
+    cfg = mlp.MLPConfig(epochs=epochs, seed=seed + 1, n_hidden=n_hidden)
     params = mlp.train(cfg, xtr, ytr)
 
     acc = {}

@@ -14,6 +14,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+import re
 
 import jax
 import jax.numpy as jnp
@@ -23,7 +24,10 @@ import numpy as np
 @dataclasses.dataclass(frozen=True)
 class MLPConfig:
     n_in: int = 784
-    n_hidden: int = 500
+    # One int reproduces the paper's single hidden layer; a tuple of ints
+    # builds a deeper stack (e.g. (256, 64)) — the netgen compiler lowers
+    # either through the same ladder.
+    n_hidden: int | tuple = 500
     n_out: int = 10
     lr: float = 2.0
     # The paper trains 5 epochs on 1000 MNIST images for 98%. On our
@@ -34,13 +38,26 @@ class MLPConfig:
     seed: int = 42
 
 
+def layer_sizes(cfg: MLPConfig) -> tuple[int, ...]:
+    hidden = (cfg.n_hidden,) if isinstance(cfg.n_hidden, int) else tuple(cfg.n_hidden)
+    return (cfg.n_in, *hidden, cfg.n_out)
+
+
+def _weight_keys(params: dict) -> list[str]:
+    return sorted((k for k in params if re.fullmatch(r"w\d+", k)),
+                  key=lambda k: int(k[1:]))
+
+
 def init_params(cfg: MLPConfig) -> dict:
     """Rashid-style init: normal(0, 1/sqrt(fan_in)). No biases (as in the
-    book's network and the paper's Verilog, which has no bias addends)."""
-    k1, k2 = jax.random.split(jax.random.PRNGKey(cfg.seed))
-    w1 = jax.random.normal(k1, (cfg.n_in, cfg.n_hidden)) * (cfg.n_in ** -0.5)
-    w2 = jax.random.normal(k2, (cfg.n_hidden, cfg.n_out)) * (cfg.n_hidden ** -0.5)
-    return {"w1": w1.astype(jnp.float32), "w2": w2.astype(jnp.float32)}
+    book's network and the paper's Verilog, which has no bias addends).
+    Returns {"w1": ..., "wN": ...}, one matrix per layer."""
+    sizes = layer_sizes(cfg)
+    keys = jax.random.split(jax.random.PRNGKey(cfg.seed), len(sizes) - 1)
+    return {
+        f"w{i+1}": (jax.random.normal(k, (m, n)) * (m ** -0.5)).astype(jnp.float32)
+        for i, (k, m, n) in enumerate(zip(keys, sizes, sizes[1:]))
+    }
 
 
 def scale_inputs(x_uint8: jnp.ndarray) -> jnp.ndarray:
@@ -49,9 +66,11 @@ def scale_inputs(x_uint8: jnp.ndarray) -> jnp.ndarray:
 
 
 def forward(params: dict, x: jnp.ndarray) -> jnp.ndarray:
-    """Full-precision forward pass (ladder stage L0). x: scaled floats."""
-    h = jax.nn.sigmoid(x @ params["w1"])
-    return jax.nn.sigmoid(h @ params["w2"])
+    """Full-precision forward pass (ladder stage L0), any depth. x: scaled
+    floats; sigmoid after every layer, as in the book's network."""
+    for k in _weight_keys(params):
+        x = jax.nn.sigmoid(x @ params[k])
+    return x
 
 
 def _targets(y: jnp.ndarray, n_out: int) -> jnp.ndarray:
@@ -95,12 +114,11 @@ def accuracy(predict_fn, x_uint8: np.ndarray, y: np.ndarray) -> float:
 
 def predict_l0(params: dict):
     """Baseline predictor (L0): float sigmoid net on scaled inputs."""
-    w1 = jnp.asarray(params["w1"])
-    w2 = jnp.asarray(params["w2"])
+    frozen = {k: jnp.asarray(v) for k, v in params.items()}
 
     @jax.jit
     def f(x_uint8):
-        out = forward({"w1": w1, "w2": w2}, scale_inputs(x_uint8))
+        out = forward(frozen, scale_inputs(x_uint8))
         return jnp.argmax(out, axis=-1)
 
     return f

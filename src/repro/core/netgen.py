@@ -1,37 +1,30 @@
-"""netgen — the paper's "hardware generation" step, adapted to TPU.
+"""netgen — compatibility shim over the `repro.netgen` compiler.
 
-The paper's Python script walks the trained weight matrices and emits a
-clockless Verilog netlist (one `assign` per node), applying two purely
-structural rewrites on the way:
+The paper's "hardware generation" step (walk the trained weight
+matrices, apply the L4/L5 structural rewrites, print a clockless Verilog
+netlist) used to live here as a hardwired 2-layer implementation. It is
+now a real compiler in `repro.netgen`: a typed circuit IR, a pass
+pipeline with per-pass statistics, and pluggable backends (verilog /
+jnp / pallas / fused). See that package's docstring for the
+paper-section map.
 
-  L4  zero-weight pruning      — terms with w == 0 are deleted from the
-                                 generated program (paper: ~50% cell cut)
-  L5  multiplication-free form — `w*x` with x in {0,1} becomes |w| repeated
-                                 addends of x (paper: 38k -> <16k cells)
+This module keeps the original entry points working, now for nets of any
+depth:
 
-This module reproduces that step twice over:
-
-  * `emit_verilog`  — the faithful artifact: a Verilog module in the exact
-    style of the paper's Figure 6 (wires, comparator assigns, weight sums,
-    priority-mux argmax), with pruning and the addend rewrite applied.
-  * `specialize`    — the TPU-native artifact: a jitted inference function
-    in which the integer weights are *constants of the program* (XLA sees
-    them as literals, the analogue of weights-as-wiring), dead hidden units
-    are structurally removed, and the arithmetic is the masked column-sum
-    (adds only — no multiplies) via the Pallas `binary_matvec` kernel or a
-    jnp reference path.
-  * `stats`         — the resource model: the paper counts logic cells; we
-    count multiplies / adds / addend terms before and after each rewrite,
-    which is the quantity the paper's cell counts are proportional to.
+  * `emit_verilog`  — the faithful artifact: paper Figure-6 style module,
+    byte-identical to the old emitter for the 2-layer paper net.
+  * `specialize`    — the TPU-native artifact: a jitted adds-only
+    inference function with the integer weights as program constants.
+  * `prune`/`stats` — the old flat resource model, computed by running
+    the IR passes (use `repro.netgen.run_pipeline` for per-pass stats).
 """
 from __future__ import annotations
 
 import dataclasses
 
-import jax
-import jax.numpy as jnp
 import numpy as np
 
+from repro import netgen as _ng
 from repro.core.quantize import QuantizedNet
 
 
@@ -44,37 +37,37 @@ class PruneInfo:
     n_hidden_before: int
     n_hidden_after: int
     dead_inputs: int            # input pixels ignored by every hidden node
-    zero_w1: int
-    zero_w2: int
+    zero_w1: int                # zeros left inside the first weight matrix
+    zero_w2: int                # zeros left inside the last weight matrix
 
     @property
     def hidden_removed(self) -> int:
         return self.n_hidden_before - self.n_hidden_after
 
+def _n_hidden(circuit: _ng.Circuit) -> int:
+    depth = circuit.depth
+    return sum(1 for n in circuit.by_kind(_ng.WeightedSum) if n.layer < depth)
+
 
 def prune(net: QuantizedNet) -> tuple[QuantizedNet, PruneInfo]:
-    """Remove structurally dead hidden units. Exact rewrite:
-
-    * hidden unit j with w1[:, j] all zero: hi_j = 0, step(0) = 0, so it
-      contributes nothing downstream -> delete column j and row j of w2.
-    * hidden unit j with w2[j, :] all zero: its output is multiplied by
-      zero everywhere -> delete likewise.
-
-    Per-entry zeros inside surviving rows/cols are counted (they are what
-    the paper deletes term-by-term in the generated netlist) and skipped
-    by the generated program; the dense arrays keep them as zeros.
-    """
-    w1, w2 = net.w1, net.w2
-    alive = ~((np.all(w1 == 0, axis=0)) | (np.all(w2 == 0, axis=1)))
-    w1p, w2p = w1[:, alive], w2[alive, :]
+    """Remove structurally dead hidden units (any depth). Exact rewrite:
+    a unit with no nonzero input weights is constant 0 and vanishes
+    downstream; a unit with no nonzero output weights is never read.
+    Per-entry zeros inside surviving rows/cols stay as zeros in the dense
+    arrays (the generated programs skip them term by term)."""
+    circuit = _ng.lower(net)
+    before = _n_hidden(circuit)
+    circuit, _ = _ng.run_pipeline(circuit, _ng.DEFAULT_PASSES)
+    ws = _ng.as_layered_weights(circuit)
     info = PruneInfo(
-        n_hidden_before=w1.shape[1],
-        n_hidden_after=int(alive.sum()),
-        dead_inputs=int(np.sum(np.all(w1p == 0, axis=1))),
-        zero_w1=int(np.sum(w1p == 0)),
-        zero_w2=int(np.sum(w2p == 0)),
+        n_hidden_before=before,
+        n_hidden_after=_n_hidden(circuit),
+        dead_inputs=int(np.sum(np.all(ws[0] == 0, axis=1))),
+        zero_w1=int(np.sum(ws[0] == 0)),
+        zero_w2=int(np.sum(ws[-1] == 0)),
     )
-    return QuantizedNet(w1=w1p, w2=w2p, input_threshold=net.input_threshold), info
+    pruned = QuantizedNet(weights=ws, input_threshold=circuit.input_threshold)
+    return pruned, info
 
 
 # ---------------------------------------------------------------------------
@@ -83,7 +76,8 @@ def prune(net: QuantizedNet) -> tuple[QuantizedNet, PruneInfo]:
 
 @dataclasses.dataclass(frozen=True)
 class NetgenStats:
-    """Op counts for one generated network, per prediction."""
+    """Flat op counts for one generated network, per prediction. The
+    pass-pipeline successor is `repro.netgen.PassStats` (per-pass)."""
     mults_dense: int        # naive: one multiply per weight
     adds_dense: int
     mults_pruned: int       # after zero-weight deletion (still multiplying)
@@ -97,18 +91,17 @@ class NetgenStats:
 
 
 def stats(net: QuantizedNet) -> NetgenStats:
-    ws = [net.w1, net.w2]
-    total = sum(w.size for w in ws)
-    nnz = sum(int(np.count_nonzero(w)) for w in ws)
-    addends = sum(int(np.abs(w).sum()) for w in ws)
+    circuit = _ng.lower(net)
+    dense = _ng.ops(circuit)
+    nz = _ng.ops(_ng.delete_zero_terms(circuit))
     return NetgenStats(
-        mults_dense=total,
-        adds_dense=total,                # accumulator adds
-        mults_pruned=nnz,
-        adds_pruned=nnz,
+        mults_dense=dense.terms,
+        adds_dense=dense.terms,          # accumulator adds
+        mults_pruned=nz.terms,
+        adds_pruned=nz.terms,
         mults_addend=0,                  # the point of L5
-        adds_addend=addends,
-        zero_fraction=1.0 - nnz / total,
+        adds_addend=nz.addend_units,
+        zero_fraction=1.0 - nz.terms / dense.terms,
     )
 
 
@@ -116,98 +109,16 @@ def stats(net: QuantizedNet) -> NetgenStats:
 # Faithful artifact: Verilog emission (paper Figures 6/7)
 # ---------------------------------------------------------------------------
 
-def _acc_width(w: np.ndarray) -> int:
-    """Bit width for a signed accumulator of one output node."""
-    bound = int(np.abs(w).sum(axis=0).max()) + 1
-    return max(int(np.ceil(np.log2(bound + 1))) + 1, 2)
-
-
-def _sum_expr(col: np.ndarray, names: list[str], addend: bool) -> str:
-    """Expression for one node: sum of weighted inputs, pruned, optionally
-    in multiplication-free addend form (w=3 -> x+x+x; negatives subtract)."""
-    units: list[tuple[int, str]] = []  # (sign, name-or-term)
-    for i, w in enumerate(col):
-        w = int(w)
-        if w == 0:
-            continue  # L4: pruned at generation time
-        name = names[i]
-        if addend:
-            units.extend((1 if w > 0 else -1, name) for _ in range(abs(w)))
-        else:
-            term = f"{abs(w)}*{name}" if abs(w) != 1 else name
-            units.append((1 if w > 0 else -1, term))
-    if not units:
-        return "0"
-    parts = [units[0][1] if units[0][0] > 0 else f"-{units[0][1]}"]
-    for sign, term in units[1:]:
-        parts.append(("+ " if sign > 0 else "- ") + term)
-    return " ".join(parts)
-
-
 def emit_verilog(net: QuantizedNet, *, addend: bool = True,
                  module_name: str = "nn_inference") -> str:
     """Emit a clockless combinational Verilog module for the whole net.
 
-    Structure mirrors the paper's Figure 6 exactly:
-      wires -> input comparators -> hidden-input sums -> MSB step ->
-      final-input sums -> priority-mux argmax prediction.
-    The MSB trick from §V.D is applied: the step activation is the negated
-    sign bit of the signed accumulator, not a LUT.
+    For 2-layer nets this reproduces the paper's Figure 6 byte-for-byte
+    (wires, comparator assigns, weight sums, MSB step, priority-mux
+    argmax); deeper or CSE-rewritten nets use the generic style of
+    `repro.netgen.backends.verilog`.
     """
-    w1, w2 = net.w1, net.w2
-    n_in, n_h = w1.shape
-    n_out = w2.shape[1]
-    bw1, bw2 = _acc_width(w1), _acc_width(w2)
-    pw = max(int(np.ceil(np.log2(n_out))), 1)
-
-    L: list[str] = []
-    L.append(f"// Auto-generated by repro.core.netgen — do not edit.")
-    L.append(f"// {n_in}-{n_h}-{n_out} feed-forward classifier, clockless.")
-    L.append(f"module {module_name} (")
-    L.append("    input  wire [7:0] " + ", ".join(f"px{i}" for i in range(n_in)) + ",")
-    L.append(f"    output wire [{pw-1}:0] prediction")
-    L.append(");")
-    L.append(f"  wire " + ", ".join(f"in{i}" for i in range(n_in)) + ";")
-    L.append(f"  wire signed [{bw1-1}:0] " + ", ".join(f"hi{j}" for j in range(n_h)) + ";")
-    L.append(f"  wire " + ", ".join(f"ho{j}" for j in range(n_h)) + ";")
-    L.append(f"  wire signed [{bw2-1}:0] " + ", ".join(f"fi{k}" for k in range(n_out)) + ";")
-    L.append("")
-    L.append("  // input comparators (paper L2: pixel > threshold)")
-    for i in range(n_in):
-        L.append(f"  assign in{i} = (px{i} > {net.input_threshold}) ? 1'b1 : 1'b0;")
-    L.append("")
-    L.append("  // hidden-input sums (L4 pruned" + (", L5 addend form)" if addend else ")"))
-    in_names = [f"in{i}" for i in range(n_in)]
-    for j in range(n_h):
-        L.append(f"  assign hi{j} = {_sum_expr(w1[:, j], in_names, addend)};")
-    L.append("")
-    L.append("  // step activation via sign bit (paper §V.D MSB trick)")
-    for j in range(n_h):
-        L.append(f"  assign ho{j} = ~hi{j}[{bw1-1}];")
-    L.append("")
-    L.append("  // final-input sums")
-    ho_names = [f"ho{j}" for j in range(n_h)]
-    for k in range(n_out):
-        L.append(f"  assign fi{k} = {_sum_expr(w2[:, k], ho_names, addend)};")
-    L.append("")
-    L.append("  // prediction: index of the maximum final input (paper Figure 6 line 15)")
-    expr = _argmax_mux(n_out, pw)
-    L.append(f"  assign prediction = {expr};")
-    L.append("endmodule")
-    return "\n".join(L) + "\n"
-
-
-def _argmax_mux(n_out: int, pw: int) -> str:
-    """Priority chain of comparators computing argmax(fi_0..fi_{n-1}).
-
-    The paper encodes this comparison network in a single wide LUT
-    (18 inputs for its 3x6-bit example); we emit the equivalent flat
-    nested-ternary chain, generalized to n_out outputs."""
-    expr = f"{pw}'d{n_out-1}"
-    for k in range(n_out - 2, -1, -1):
-        conds = " && ".join(f"fi{k} >= fi{m}" for m in range(k + 1, n_out))
-        expr = f"(({conds}) ? {pw}'d{k} : {expr})"
-    return expr
+    return _ng.emit_verilog(net, addend=addend, module_name=module_name)
 
 
 # ---------------------------------------------------------------------------
@@ -218,48 +129,11 @@ def specialize(net: QuantizedNet, *, backend: str = "jnp"):
     """Generate the specialized inference function for a frozen net.
 
     The weights are embedded as program constants (XLA literals) — the
-    analogue of the paper's weights-as-wiring. Arithmetic is adds-only:
-    with x in {0,1}, `x @ W == sum of W rows where x==1`, realized as a
-    masked accumulate (jnp `where`+sum) or the Pallas binary_matvec kernel.
+    analogue of the paper's weights-as-wiring — after the exact pruning
+    passes. Arithmetic is adds-only.
 
-    backend: "jnp" (oracle), "pallas" (TPU kernel, interpret-mode on CPU),
-             "fused" (whole-net single Pallas launch — the combinational-
-             circuit analogue).
+    backend: "jnp" (oracle), "pallas" (TPU kernel chain, interpret-mode
+             on CPU), "fused" (whole-net single Pallas launch — the
+             combinational-circuit analogue; 2-layer nets only).
     """
-    netp, _ = prune(net)
-    w1 = jnp.asarray(netp.w1, jnp.int32)
-    w2 = jnp.asarray(netp.w2, jnp.int32)
-    thr = netp.input_threshold
-
-    if backend == "jnp":
-        @jax.jit
-        def predict(x_uint8):
-            x = (x_uint8.astype(jnp.int32) > thr)
-            # masked column-sum: adds only, no multiplies
-            hi = jnp.sum(jnp.where(x[:, :, None], w1[None], 0), axis=1)
-            ho = hi > 0
-            fi = jnp.sum(jnp.where(ho[:, :, None], w2[None], 0), axis=1)
-            return jnp.argmax(fi, axis=-1)
-        return predict
-
-    if backend == "pallas":
-        from repro.kernels.binary_matvec import ops as bmv
-
-        @jax.jit
-        def predict(x_uint8):
-            x = (x_uint8.astype(jnp.int32) > thr).astype(jnp.int8)
-            hi = bmv.binary_matmul(x, w1)
-            ho = (hi > 0).astype(jnp.int8)
-            fi = bmv.binary_matmul(ho, w2)
-            return jnp.argmax(fi, axis=-1)
-        return predict
-
-    if backend == "fused":
-        from repro.kernels.fused_mlp import ops as fused
-
-        @jax.jit
-        def predict(x_uint8):
-            return fused.fused_mlp_predict(x_uint8, w1, w2, threshold=thr)
-        return predict
-
-    raise ValueError(f"unknown backend {backend!r}")
+    return _ng.specialize(net, backend=backend)

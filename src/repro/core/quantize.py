@@ -12,7 +12,13 @@ Stages (cumulative, exactly as the paper applies them):
 
 L4 (zero pruning) and L5 (multiplication-free addend form) are *exact
 rewrites* of the L3 network — they change resources, not accuracy — and
-live in `repro.core.netgen`.
+live in `repro.netgen` (compat shim: `repro.core.netgen`).
+
+The ladder generalizes past the paper's 784-500-10 topology: every
+predictor accepts a params dict with any number of weight matrices
+("w1".."wN", see `param_weights`), applying the step activation between
+all layers and argmax at the output, and `QuantizedNet` holds the full
+integer stack. The 2-layer construction (`w1=`/`w2=`) keeps working.
 
 A note on L3 faithfulness: the paper's Verilog comments bound weights as
 -10 < w < 10, i.e. the float weights are affinely scaled into a small
@@ -57,38 +63,44 @@ def int_cast_weights(w: np.ndarray, bound: int = WEIGHT_BOUND) -> np.ndarray:
     return np.round(w * s).astype(np.int32)
 
 
+def param_weights(params: dict) -> list:
+    """Ordered weight matrices of a params dict: keys "w1".."wN"."""
+    keys = mlp_lib._weight_keys(params)
+    if not keys:
+        raise ValueError(f"no w<i> keys in params: {sorted(params)}")
+    return [params[k] for k in keys]
+
+
 # ---------------------------------------------------------------------------
 # Ladder predictors. Each returns a jitted fn: uint8 images -> int predictions.
 # ---------------------------------------------------------------------------
 
+def _step_chain(x, ws, dtype):
+    """Shared ladder arithmetic: step between layers, argmax at the end."""
+    for w in ws[:-1]:
+        x = step(x @ w).astype(dtype)
+    return jnp.argmax(x @ ws[-1], axis=-1)
+
+
 def predict_l1(params: dict):
-    """L1: step hidden activation, float weights, scaled float input."""
-    w1 = jnp.asarray(params["w1"], jnp.float32)
-    w2 = jnp.asarray(params["w2"], jnp.float32)
+    """L1: step hidden activations, float weights, scaled float input."""
+    ws = [jnp.asarray(w, jnp.float32) for w in param_weights(params)]
 
     @jax.jit
     def f(x_uint8):
-        x = mlp_lib.scale_inputs(x_uint8)
-        hi = x @ w1
-        ho = step(hi).astype(jnp.float32)
-        fi = ho @ w2
-        return jnp.argmax(fi, axis=-1)
+        return _step_chain(mlp_lib.scale_inputs(x_uint8), ws, jnp.float32)
 
     return f
 
 
 def predict_l2(params: dict):
     """L2: + binary inputs (pixel > 128)."""
-    w1 = jnp.asarray(params["w1"], jnp.float32)
-    w2 = jnp.asarray(params["w2"], jnp.float32)
+    ws = [jnp.asarray(w, jnp.float32) for w in param_weights(params)]
 
     @jax.jit
     def f(x_uint8):
-        x = binarize_input(x_uint8).astype(jnp.float32)
-        hi = x @ w1
-        ho = step(hi).astype(jnp.float32)
-        fi = ho @ w2
-        return jnp.argmax(fi, axis=-1)
+        return _step_chain(binarize_input(x_uint8).astype(jnp.float32), ws,
+                           jnp.float32)
 
     return f
 
@@ -97,34 +109,78 @@ def predict_l3(params: dict):
     """L3: + integer weights. The whole network is now integer arithmetic:
     binary inputs, int weights, int accumulators, sign-bit activations —
     exactly the arithmetic the paper's Verilog implements."""
-    w1 = jnp.asarray(int_cast_weights(params["w1"]), jnp.int32)
-    w2 = jnp.asarray(int_cast_weights(params["w2"]), jnp.int32)
+    ws = [jnp.asarray(int_cast_weights(w), jnp.int32)
+          for w in param_weights(params)]
 
     @jax.jit
     def f(x_uint8):
-        x = binarize_input(x_uint8)                 # {0,1} int32
-        hi = x @ w1                                 # int32 accumulate
-        ho = step(hi)                               # {0,1} int32
-        fi = ho @ w2
-        return jnp.argmax(fi, axis=-1)
+        return _step_chain(binarize_input(x_uint8), ws, jnp.int32)
 
     return f
 
 
-@dataclasses.dataclass(frozen=True)
+@dataclasses.dataclass(frozen=True, init=False)
 class QuantizedNet:
-    """Frozen integer network produced by the ladder (input to netgen)."""
-    w1: np.ndarray  # int32 (n_in, n_hidden)
-    w2: np.ndarray  # int32 (n_hidden, n_out)
-    input_threshold: int = INPUT_THRESHOLD
+    """Frozen integer network produced by the ladder (input to netgen).
+
+    Holds any number of layers in `weights`; the original 2-layer
+    construction `QuantizedNet(w1=..., w2=...)` and the `.w1`/`.w2`
+    accessors keep working (and `.w2` means *the second of two* — it
+    raises on deeper stacks rather than silently aliasing a layer).
+    """
+    weights: tuple            # int32 matrices, (fan_in, fan_out) each
+    input_threshold: int
+
+    def __init__(self, w1=None, w2=None, *, weights=None,
+                 input_threshold: int = INPUT_THRESHOLD):
+        if weights is None:
+            if w1 is None or w2 is None:
+                raise TypeError("pass w1= and w2=, or weights=[...]")
+            weights = (w1, w2)
+        elif w1 is not None or w2 is not None:
+            raise TypeError("pass either w1/w2 or weights=, not both")
+        object.__setattr__(
+            self, "weights", tuple(np.asarray(w) for w in weights))
+        object.__setattr__(self, "input_threshold", int(input_threshold))
+
+    @property
+    def depth(self) -> int:
+        return len(self.weights)
+
+    def _pair(self) -> tuple:
+        if self.depth != 2:
+            raise AttributeError(
+                f".w1/.w2 are 2-layer accessors; this net has depth "
+                f"{self.depth} — use .weights")
+        return self.weights
+
+    @property
+    def w1(self) -> np.ndarray:
+        return self._pair()[0]
+
+    @property
+    def w2(self) -> np.ndarray:
+        return self._pair()[1]
 
     @property
     def shapes(self) -> tuple:
-        return (self.w1.shape, self.w2.shape)
+        return tuple(w.shape for w in self.weights)
 
 
 def quantize(params: dict) -> QuantizedNet:
+    """Cast a trained float stack (any depth) to the frozen integer net."""
     return QuantizedNet(
-        w1=int_cast_weights(params["w1"]),
-        w2=int_cast_weights(params["w2"]),
-    )
+        weights=[int_cast_weights(w) for w in param_weights(params)])
+
+
+def predict_quantized(net: QuantizedNet):
+    """Reference L3 arithmetic for an already-quantized net: the dense
+    (matmul-based) path the compiled netgen backends must match bit-exactly."""
+    ws = [jnp.asarray(w, jnp.int32) for w in net.weights]
+    thr = net.input_threshold
+
+    @jax.jit
+    def f(x_uint8):
+        return _step_chain(binarize_input(x_uint8, thr), ws, jnp.int32)
+
+    return f

@@ -153,12 +153,16 @@ def moe_shardmap(cfg: ArchConfig, p: dict, x: jnp.ndarray,
 
     data_axes = tuple(a for a in ("pod", "data") if a in mesh.shape)
     xspec = P(data_axes if len(data_axes) > 1 else data_axes[0], None, None)
-    out, lb, zl = jax.shard_map(
-        body,
-        mesh=mesh,
-        in_specs=(xspec, P(None, None), P("model", None, None),
-                  P("model", None, None), P("model", None, None)),
-        out_specs=(xspec, P(), P()),
-        check_vma=False,
-    )(x, p["router"].astype(jnp.float32), p["wi"], p["wg"], p["wo"])
+    in_specs = (xspec, P(None, None), P("model", None, None),
+                P("model", None, None), P("model", None, None))
+    out_specs = (xspec, P(), P())
+    if hasattr(jax, "shard_map"):
+        mapped = jax.shard_map(body, mesh=mesh, in_specs=in_specs,
+                               out_specs=out_specs, check_vma=False)
+    else:  # jax <= 0.4.x: experimental home, replication check named check_rep
+        from jax.experimental.shard_map import shard_map as _shard_map
+        mapped = _shard_map(body, mesh=mesh, in_specs=in_specs,
+                            out_specs=out_specs, check_rep=False)
+    out, lb, zl = mapped(x, p["router"].astype(jnp.float32),
+                         p["wi"], p["wg"], p["wo"])
     return out, {"lb_loss": lb, "z_loss": zl}

@@ -142,7 +142,7 @@ def tree_specs(tree):
 def tree_init(tree, key: jax.Array):
     """Materialize an abstract tree. Each leaf gets a path-folded key so the
     result is independent of traversal order and stable across refactors."""
-    leaves, treedef = jax.tree.flatten_with_path(tree, is_leaf=is_info)
+    leaves, treedef = jax.tree_util.tree_flatten_with_path(tree, is_leaf=is_info)
 
     def mk(path, info: ParamInfo, k):
         if info.init == "zeros":

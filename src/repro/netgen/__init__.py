@@ -1,0 +1,134 @@
+"""`repro.netgen` — the paper's net-to-hardware step as a real compiler.
+
+The source paper's central artifact (§IV-§V) is a Python script that
+walks a trained 784-500-10 net and prints a clockless Verilog module,
+applying structural optimizations on the way. This package generalizes
+that script into a small compiler over a typed circuit IR, so the same
+rewrites serve arbitrary-depth nets and multiple execution targets:
+
+    frontend.lower          quantized N-layer stack -> circuit IR
+    passes.run_pipeline     exact structural rewrites + per-pass stats
+    backends.compile_circuit  IR -> artifact (jitted fn or Verilog text)
+
+Paper-section map
+-----------------
+  §III.B / Fig. 6 line 5   -> graph.InputCompare (pixel > threshold)
+  §III.A step activation   -> graph.SignStep
+  §V.D MSB sign-bit trick  -> SignStep emission in backends/verilog.py
+                              (and the strict-vs-msb semantics note in
+                              graph.evaluate)
+  §V.B zero-weight pruning -> passes.delete_zero_terms (per-term) and
+     (L4, ~50% cell cut)      passes.prune_dead_units (per-unit)
+  §V.C multiplication-free -> passes.addend_rewrite (w*x -> |w| addends;
+     (L5, 38k -> <16k cells)  after it, ops().mults == 0)
+  beyond the paper         -> passes.share_common_addends (adder CSE,
+                              the natural post-L5 hardware rewrite)
+  Fig. 6 line 15 argmax    -> graph.Argmax, emitted as a priority mux
+  Fig. 6/7 module shape    -> backends/verilog.py "legacy" style
+                              (byte-compatible with the seed emitter)
+
+Quick use
+---------
+    from repro.core.quantize import quantize
+    from repro import netgen
+
+    compiled = netgen.compile_net(quantize(params), backend="jnp")
+    preds = compiled(images_uint8)          # bit-exact vs predict_l3
+    print(compiled.report())                # per-pass savings
+    v = netgen.compile_net(qnet, backend="verilog",
+                           passes=netgen.HW_PASSES).artifact
+
+`repro.core.netgen` remains as a thin compatibility shim with the old
+`specialize` / `emit_verilog` / `prune` / `stats` names.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+from repro.netgen import backends
+from repro.netgen.frontend import lower
+from repro.netgen.graph import (
+    Argmax, Circuit, InputCompare, IrregularCircuitError, SignStep, Term,
+    WeightedSum, as_layered_weights, evaluate, node_widths,
+)
+from repro.netgen.passes import (
+    DEFAULT_PASSES, HW_PASSES, CircuitOps, Pass, PassStats, addend_rewrite,
+    delete_zero_terms, ops, prune_dead_units, run_pipeline,
+    share_common_addends,
+)
+
+__all__ = [
+    "Argmax", "Circuit", "CircuitOps", "CompiledNet", "DEFAULT_PASSES",
+    "HW_PASSES", "InputCompare", "IrregularCircuitError", "Pass",
+    "PassStats", "SignStep", "Term", "WeightedSum", "addend_rewrite",
+    "as_layered_weights", "backends", "compile_net", "delete_zero_terms",
+    "emit_verilog", "evaluate", "lower", "node_widths", "ops",
+    "prune_dead_units", "run_pipeline", "share_common_addends",
+    "specialize",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class CompiledNet:
+    """Result of one end-to-end compilation: the optimized circuit, the
+    per-pass statistics, and the backend artifact (a jitted callable for
+    jnp/pallas/fused, the module source string for verilog)."""
+    circuit: Circuit
+    pass_stats: tuple[PassStats, ...]
+    backend: str
+    artifact: object
+
+    def __call__(self, x_uint8):
+        if not callable(self.artifact):
+            raise TypeError(
+                f"{self.backend} artifact is not callable (use .artifact)")
+        return self.artifact(x_uint8)
+
+    def report(self) -> str:
+        """Human-readable per-pass savings table."""
+        return "\n".join(s.row() for s in self.pass_stats)
+
+
+def compile_net(
+    net,
+    *,
+    backend: str = "jnp",
+    passes: Sequence[Pass] | None = None,
+    input_threshold: int | None = None,
+    **backend_opts,
+) -> CompiledNet:
+    """Frontend -> pass pipeline -> backend, in one call.
+
+    `net` is anything `frontend.lower` accepts (a QuantizedNet of any
+    depth, an object with `.weights`, or a list of integer matrices).
+    `passes` defaults to DEFAULT_PASSES (exact rewrites that keep the
+    layered form every backend supports); pass HW_PASSES for the full
+    multiplication-free + adder-sharing hardware pipeline (verilog only).
+    """
+    circuit = lower(net, input_threshold=input_threshold)
+    circuit, stats = run_pipeline(
+        circuit, DEFAULT_PASSES if passes is None else passes)
+    artifact = backends.compile_circuit(circuit, backend, **backend_opts)
+    return CompiledNet(
+        circuit=circuit, pass_stats=stats, backend=backend, artifact=artifact)
+
+
+def specialize(net, *, backend: str = "jnp", **kw):
+    """Compile and return just the jitted predictor (old netgen name)."""
+    return compile_net(net, backend=backend, **kw).artifact
+
+
+def emit_verilog(net, *, addend: bool = True, module_name: str = "nn_inference",
+                 passes: Sequence[Pass] | None = None) -> str:
+    """Compile and return just the Verilog source (old netgen name).
+
+    Matches the seed emitter's behavior: zero terms are always dropped at
+    generation time; `addend=True` additionally applies the L5 rewrite.
+    """
+    if passes is None:
+        passes = (delete_zero_terms, addend_rewrite) if addend \
+            else (delete_zero_terms,)
+    return compile_net(
+        net, backend="verilog", passes=passes,
+        module_name=module_name, addend=addend).artifact

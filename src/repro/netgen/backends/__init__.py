@@ -1,0 +1,33 @@
+"""Pluggable netgen backends.
+
+A backend turns an optimized circuit into an artifact:
+
+  jnp      — jitted adds-only predictor, weights as XLA literals (oracle)
+  pallas   — per-layer binary_matvec TPU kernel chain
+  fused    — single-launch whole-net Pallas kernel (2-layer only)
+  verilog  — the paper's combinational module source (string)
+
+`compile_circuit(circuit, backend)` dispatches by name; callable
+artifacts map uint8 image batches to predicted class indices.
+"""
+from __future__ import annotations
+
+from repro.netgen.backends.jnp import compile_jnp
+from repro.netgen.backends.pallas import compile_fused, compile_pallas
+from repro.netgen.backends.verilog import emit_verilog
+
+BACKENDS = ("jnp", "pallas", "fused", "verilog")
+
+
+def compile_circuit(circuit, backend: str = "jnp", **opts):
+    """Compile an IR circuit with the named backend. Extra options are
+    backend-specific (e.g. module_name/style/addend for verilog)."""
+    if backend == "jnp":
+        return compile_jnp(circuit, **opts)
+    if backend == "pallas":
+        return compile_pallas(circuit, **opts)
+    if backend == "fused":
+        return compile_fused(circuit, **opts)
+    if backend == "verilog":
+        return emit_verilog(circuit, **opts)
+    raise ValueError(f"unknown backend {backend!r} (have {BACKENDS})")

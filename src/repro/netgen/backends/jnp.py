@@ -1,0 +1,37 @@
+"""jnp backend: compile a regular circuit into a jitted adds-only predictor.
+
+The TPU analogue of the paper's weights-as-wiring: the integer weight
+matrices reconstructed from the (pruned) circuit are embedded as XLA
+literals, and every layer is the masked column-sum identity
+
+    x @ W  ==  sum of W rows where x == 1      (x in {0,1})
+
+realized as `where` + `sum` — adds only, no multiplies, no MXU. Works
+for any depth. This is the oracle backend the pallas kernels are
+checked against.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.netgen.graph import Circuit, as_layered_weights
+
+__all__ = ["compile_jnp"]
+
+
+def compile_jnp(circuit: Circuit):
+    """Return a jitted fn: uint8 images (B, n_in) -> int predictions (B,)."""
+    ws = [jnp.asarray(w, jnp.int32) for w in as_layered_weights(circuit)]
+    thr = circuit.input_threshold
+
+    @jax.jit
+    def predict(x_uint8):
+        a = x_uint8.astype(jnp.int32) > thr
+        for w in ws[:-1]:
+            hi = jnp.sum(jnp.where(a[:, :, None], w[None], 0), axis=1)
+            a = hi > 0
+        fi = jnp.sum(jnp.where(a[:, :, None], ws[-1][None], 0), axis=1)
+        return jnp.argmax(fi, axis=-1)
+
+    return predict

@@ -1,0 +1,61 @@
+"""Pallas backend: compile a regular circuit onto the TPU kernels.
+
+Per-layer path (any depth) chains the `binary_matvec` masked-accumulate
+kernel — the VPU select/add realization of the paper's L5 rewrite — with
+a sign-bit step between layers. The `fused` variant lowers the whole
+2-layer paper net into the single-launch `fused_mlp` kernel, the
+combinational-circuit analogue (one "net" per prediction, intermediate
+activations never leaving VMEM).
+
+Kernels run in interpret mode on CPU containers (see kernels/*/ops.py);
+on a real TPU the same code path compiles to Mosaic.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.netgen.graph import Circuit, IrregularCircuitError, as_layered_weights
+
+__all__ = ["compile_pallas", "compile_fused"]
+
+
+def compile_pallas(circuit: Circuit):
+    """Return a jitted fn chaining one binary_matmul launch per layer."""
+    from repro.kernels.binary_matvec import ops as bmv
+
+    ws = [jnp.asarray(w, jnp.int32) for w in as_layered_weights(circuit)]
+    thr = circuit.input_threshold
+
+    def matmul(a, w):
+        if w.shape[0] == 0:  # fully-pruned predecessor layer: constant 0
+            return jnp.zeros((a.shape[0], w.shape[1]), jnp.int32)
+        return bmv.binary_matmul(a, w)
+
+    @jax.jit
+    def predict(x_uint8):
+        a = (x_uint8.astype(jnp.int32) > thr).astype(jnp.int8)
+        for w in ws[:-1]:
+            a = (matmul(a, w) > 0).astype(jnp.int8)
+        return jnp.argmax(matmul(a, ws[-1]), axis=-1)
+
+    return predict
+
+
+def compile_fused(circuit: Circuit):
+    """Whole-net single Pallas launch; 2-layer circuits only."""
+    from repro.kernels.fused_mlp import ops as fused
+
+    ws = as_layered_weights(circuit)
+    if len(ws) != 2:
+        raise IrregularCircuitError(
+            f"fused backend supports exactly 2 layers, got {len(ws)}")
+    w1 = jnp.asarray(ws[0], jnp.int32)
+    w2 = jnp.asarray(ws[1], jnp.int32)
+    thr = circuit.input_threshold
+
+    @jax.jit
+    def predict(x_uint8):
+        return fused.fused_mlp_predict(x_uint8, w1, w2, threshold=thr)
+
+    return predict

@@ -1,0 +1,102 @@
+"""Frontend: lower a quantized feed-forward stack into the circuit IR.
+
+Accepts any of:
+  * a `repro.core.quantize.QuantizedNet` (any depth — the class holds a
+    tuple of integer weight matrices),
+  * any object with `.weights` (sequence of 2-D int arrays) and
+    `.input_threshold`,
+  * a bare sequence of 2-D integer arrays (threshold passed separately).
+
+Lowering mirrors the paper's network shape (Fig. 6) generalized to N
+layers: one InputCompare per input component, then per dense layer one
+WeightedSum per unit, with a SignStep after every layer except the last,
+and a single Argmax over the last layer's accumulators. No optimization
+happens here — zero weights become zero-weight terms, dead units become
+empty consumers — so the pass pipeline's statistics see the true dense
+cost. Run `repro.netgen.passes` to optimize.
+"""
+from __future__ import annotations
+
+from typing import Sequence
+
+import numpy as np
+
+from repro.netgen.graph import (
+    Argmax, Circuit, InputCompare, SignStep, Term, WeightedSum,
+)
+
+DEFAULT_INPUT_THRESHOLD = 128  # paper §III.B pixel cutoff
+
+
+def _extract_weights(net, input_threshold):
+    if hasattr(net, "weights"):
+        ws = [np.asarray(w) for w in net.weights]
+    elif hasattr(net, "w1") and hasattr(net, "w2"):
+        ws = [np.asarray(net.w1), np.asarray(net.w2)]
+    else:
+        ws = [np.asarray(w) for w in net]
+    # explicit caller threshold wins over the net's attribute
+    thr = input_threshold
+    if thr is None:
+        thr = getattr(net, "input_threshold", None)
+    if thr is None:
+        thr = DEFAULT_INPUT_THRESHOLD
+    if not ws:
+        raise ValueError("no weight matrices to lower")
+    for w in ws:
+        if w.ndim != 2:
+            raise ValueError(f"weights must be 2-D, got {w.shape}")
+        if not np.issubdtype(w.dtype, np.integer):
+            raise ValueError(
+                f"netgen lowers *quantized* nets; got dtype {w.dtype} "
+                "(run repro.core.quantize first)")
+    for a, b in zip(ws, ws[1:]):
+        if a.shape[1] != b.shape[0]:
+            raise ValueError(f"layer shape mismatch: {a.shape} -> {b.shape}")
+    return ws, int(thr)
+
+
+def lower(net, *, input_threshold: int | None = None) -> Circuit:
+    """Lower a quantized N-layer stack into a Circuit. See module doc."""
+    ws, thr = _extract_weights(net, input_threshold)
+    n_in = ws[0].shape[0]
+
+    nodes: list = []
+    nid = 0
+
+    def fresh() -> int:
+        nonlocal nid
+        nid += 1
+        return nid - 1
+
+    acts: list[int] = []  # node ids of the current activation vector
+    for i in range(n_in):
+        node = InputCompare(id=fresh(), pixel=i, threshold=thr)
+        nodes.append(node)
+        acts.append(node.id)
+
+    depth = len(ws)
+    for layer, w in enumerate(ws, start=1):
+        sums: list[int] = []
+        for j in range(w.shape[1]):
+            terms = tuple(
+                Term(weight=int(w[i, j]), src=acts[i]) for i in range(w.shape[0]))
+            node = WeightedSum(id=fresh(), terms=terms, layer=layer)
+            nodes.append(node)
+            sums.append(node.id)
+        if layer < depth:
+            steps: list[int] = []
+            for s in sums:
+                node = SignStep(id=fresh(), src=s)
+                nodes.append(node)
+                steps.append(node.id)
+            acts = steps
+        else:
+            acts = sums
+
+    out = Argmax(id=fresh(), srcs=tuple(acts))
+    nodes.append(out)
+    circuit = Circuit(
+        n_inputs=n_in, input_threshold=thr, nodes=tuple(nodes), output=out.id)
+    circuit.validate()
+    return circuit

@@ -1,0 +1,255 @@
+"""Optimization passes over the circuit IR, with per-pass statistics.
+
+Each pass is a pure function `Circuit -> Circuit` performing an *exact*
+rewrite (predictions are unchanged under the strict step semantics; see
+`graph.evaluate`). The paper's structural tricks map onto them:
+
+  delete_zero_terms     — paper L4, per-term: a `0 * x` addend is deleted
+                          from the generated program (~50% of terms).
+  prune_dead_units      — paper L4, per-unit: a hidden unit with no inputs
+                          is constant 0 and vanishes downstream; a hidden
+                          unit nothing reads is deleted outright.
+  addend_rewrite        — paper L5: `w * x` with x in {0,1} becomes |w|
+                          repeated ±x addends — multiplication-free form.
+  share_common_addends  — CSE over addends: a (w_a·a + w_b·b) pair that
+                          occurs in several accumulators is computed once
+                          in a shared sub-sum node (adder sharing; the
+                          natural next rewrite after L5, cf. common-
+                          subexpression elimination in multiple-constant-
+                          multiplication synthesis). Makes the circuit an
+                          irregular DAG: fine for the Verilog backend and
+                          the interpreter, rejected by the dense jnp /
+                          pallas backends.
+
+`run_pipeline` threads a circuit through a pass list and records a
+`PassStats` entry per pass (the successor of the old flat `NetgenStats`):
+node / term / multiply / add counts before and after, so benchmarks can
+attribute savings to individual rewrites instead of one lump figure.
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import Counter
+from typing import Callable, Sequence
+
+from repro.netgen.graph import (
+    Argmax, Circuit, InputCompare, SignStep, Term, WeightedSum,
+)
+
+Pass = Callable[[Circuit], Circuit]
+
+
+# ---------------------------------------------------------------------------
+# Cost model (the paper counts logic cells; we count the arithmetic the
+# cell counts are proportional to)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class CircuitOps:
+    """Arithmetic cost of one circuit, per prediction."""
+    nodes: int          # all IR nodes
+    sum_nodes: int      # accumulators (the paper's hi/fi wires)
+    terms: int          # weighted addends across all accumulators
+    mults: int          # terms needing a real multiplier (|w| > 1)
+    adds: int           # two-input adders: sum over nodes of (terms - 1)
+    addend_units: int   # adders after full L5 expansion: sum of |w|
+
+    def as_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+def ops(circuit: Circuit) -> CircuitOps:
+    sums = circuit.by_kind(WeightedSum)
+    terms = sum(len(n.terms) for n in sums)
+    return CircuitOps(
+        nodes=len(circuit.nodes),
+        sum_nodes=len(sums),
+        terms=terms,
+        mults=sum(1 for n in sums for t in n.terms if abs(t.weight) > 1),
+        adds=sum(max(len(n.terms) - 1, 0) for n in sums),
+        addend_units=sum(abs(t.weight) for n in sums for t in n.terms),
+    )
+
+
+@dataclasses.dataclass(frozen=True)
+class PassStats:
+    """Before/after cost of one pass application."""
+    name: str
+    before: CircuitOps
+    after: CircuitOps
+
+    @property
+    def terms_deleted(self) -> int:
+        return self.before.terms - self.after.terms
+
+    @property
+    def adds_saved(self) -> int:
+        return self.before.adds - self.after.adds
+
+    def row(self) -> str:
+        b, a = self.before, self.after
+        return (f"{self.name}: terms {b.terms}->{a.terms}, "
+                f"mults {b.mults}->{a.mults}, adds {b.adds}->{a.adds}, "
+                f"nodes {b.nodes}->{a.nodes}")
+
+
+# ---------------------------------------------------------------------------
+# Passes
+# ---------------------------------------------------------------------------
+
+def delete_zero_terms(circuit: Circuit) -> Circuit:
+    """Drop `0 * x` addends (paper L4 term deletion). Exact trivially."""
+    nodes = tuple(
+        dataclasses.replace(
+            n, terms=tuple(t for t in n.terms if t.weight != 0))
+        if isinstance(n, WeightedSum) else n
+        for n in circuit.nodes)
+    return dataclasses.replace(circuit, nodes=nodes)
+
+
+def prune_dead_units(circuit: Circuit) -> Circuit:
+    """Remove structurally dead hidden units (paper L4 unit deletion).
+
+    * empty accumulator: value is constant 0, step(0) = 0 under the
+      strict semantics, so every downstream term that reads its step
+      contributes nothing — delete those terms, then the unit.
+    * unread unit: a hidden step no accumulator reads (its output weights
+      were all zero) is deleted with its accumulator.
+
+    Final-layer accumulators and InputCompare nodes are never removed:
+    the argmax needs every class score, and the input comparators are
+    part of the module interface (the paper's Verilog keeps unused `in`
+    wires too). Runs to fixpoint — removing one unit can strand another.
+    """
+    by_id = {n.id: n for n in circuit.nodes}
+    final = set(by_id[circuit.output].srcs)
+
+    while True:
+        # steps whose accumulator is empty -> their value is constant 0
+        zero_steps = {
+            n.id for n in by_id.values()
+            if isinstance(n, SignStep) and not by_id[n.src].terms}
+        if zero_steps:
+            for nid, n in list(by_id.items()):
+                if isinstance(n, WeightedSum):
+                    kept = tuple(t for t in n.terms if t.src not in zero_steps)
+                    if len(kept) != len(n.terms):
+                        by_id[nid] = dataclasses.replace(n, terms=kept)
+
+        consumers: Counter = Counter()
+        for n in by_id.values():
+            if isinstance(n, WeightedSum):
+                consumers.update(t.src for t in n.terms)
+            elif isinstance(n, SignStep):
+                consumers.update((n.src,))
+            elif isinstance(n, Argmax):
+                consumers.update(n.srcs)
+
+        dead = {
+            nid for nid, n in by_id.items()
+            if consumers[nid] == 0
+            and (isinstance(n, SignStep)
+                 or (isinstance(n, WeightedSum) and nid not in final))}
+        if not dead:
+            break
+        for nid in dead:
+            del by_id[nid]
+
+    nodes = tuple(by_id[n.id] for n in circuit.nodes if n.id in by_id)
+    return dataclasses.replace(circuit, nodes=nodes)
+
+
+def addend_rewrite(circuit: Circuit) -> Circuit:
+    """Paper L5: expand `w * x` into |w| repeated ±1 addends. Exact; after
+    this pass no accumulator needs a multiplier (`ops().mults == 0`)."""
+    def expand(n: WeightedSum) -> WeightedSum:
+        units = tuple(
+            Term(weight=1 if t.weight > 0 else -1, src=t.src)
+            for t in n.terms for _ in range(abs(t.weight)))
+        return dataclasses.replace(n, terms=units)
+
+    nodes = tuple(
+        expand(n) if isinstance(n, WeightedSum) else n for n in circuit.nodes)
+    return dataclasses.replace(circuit, nodes=nodes)
+
+
+def share_common_addends(circuit: Circuit, *, max_new_nodes: int = 4096) -> Circuit:
+    """Greedy two-term CSE: extract the most frequent addend pair into a
+    shared sub-sum until no pair repeats (or max_new_nodes is hit).
+
+    A pair key is the unordered combination of two distinct (weight, src)
+    terms; a node counts each key at most once per round. Every extraction
+    strictly reduces total adds (k co-occurrences save k adders and spend
+    one in the shared node), so the loop terminates. Exact: the shared
+    node computes precisely the sub-sum it replaces.
+
+    Cost is O(sum_nodes * terms^2) per round — intended for post-addend
+    hardware circuits of moderate size, not the raw 784-input net.
+    The result is an irregular DAG (see graph.IrregularCircuitError).
+    """
+    nodes = list(circuit.nodes)
+    next_id = max(n.id for n in nodes) + 1
+    created = 0
+
+    while created < max_new_nodes:
+        counts: Counter = Counter()
+        for n in nodes:
+            if isinstance(n, WeightedSum):
+                distinct = sorted(set(n.terms), key=lambda t: (t.src, t.weight))
+                for i in range(len(distinct)):
+                    for j in range(i + 1, len(distinct)):
+                        counts[(distinct[i], distinct[j])] += 1
+        if not counts:
+            break
+        (ta, tb), k = counts.most_common(1)[0]
+        if k < 2:
+            break
+
+        hosts = [
+            i for i, n in enumerate(nodes)
+            if isinstance(n, WeightedSum) and ta in n.terms and tb in n.terms]
+        shared = WeightedSum(
+            id=next_id, terms=(ta, tb),
+            layer=min(nodes[i].layer for i in hosts))
+        next_id += 1
+        created += 1
+
+        for i in hosts:
+            n = nodes[i]
+            kept = list(n.terms)
+            kept.remove(ta)
+            kept.remove(tb)
+            kept.append(Term(weight=1, src=shared.id))
+            nodes[i] = dataclasses.replace(n, terms=tuple(kept))
+        nodes.insert(min(hosts), shared)
+
+    out = dataclasses.replace(circuit, nodes=tuple(nodes))
+    out.validate()
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Pipeline driver
+# ---------------------------------------------------------------------------
+
+# Exact rewrites safe for every backend (dense layered form preserved).
+DEFAULT_PASSES: tuple[Pass, ...] = (delete_zero_terms, prune_dead_units)
+
+# Full hardware pipeline: multiplication-free form plus adder sharing.
+# Produces an irregular DAG — Verilog / interpreter only.
+HW_PASSES: tuple[Pass, ...] = (
+    delete_zero_terms, prune_dead_units, addend_rewrite, share_common_addends)
+
+
+def run_pipeline(
+    circuit: Circuit, passes: Sequence[Pass] = DEFAULT_PASSES,
+) -> tuple[Circuit, tuple[PassStats, ...]]:
+    """Apply `passes` in order, recording per-pass cost deltas."""
+    stats = []
+    for p in passes:
+        before = ops(circuit)
+        circuit = p(circuit)
+        stats.append(PassStats(
+            name=getattr(p, "__name__", str(p)), before=before,
+            after=ops(circuit)))
+    return circuit, tuple(stats)

@@ -47,7 +47,7 @@ def quantize_leaf(x: np.ndarray) -> tuple[np.ndarray, np.ndarray]:
 def quantize_tree(params, *, min_size: int = QUANT_MIN_SIZE) -> tuple[dict, dict]:
     """Returns (quantized storage tree, stats). Leaves are either raw
     arrays (small tensors) or {"q": int8, "s": fp32 scales}."""
-    flat, treedef = jax.tree.flatten_with_path(params)
+    flat, treedef = jax.tree_util.tree_flatten_with_path(params)
     out = []
     total_before = total_after = 0
     n_quant = 0
@@ -94,7 +94,7 @@ def abstract_quantized_params(cfg, *, min_size: int = QUANT_MIN_SIZE):
     from repro.models.base import ParamInfo, is_info
 
     tree = api.abstract_params(cfg)
-    flat, treedef = jax.tree.flatten_with_path(tree, is_leaf=is_info)
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree, is_leaf=is_info)
     out = []
     for path, info in flat:
         key = jax.tree_util.keystr(path)
@@ -120,7 +120,7 @@ def quantize_params_for_serving(cfg, params, *, min_size: int = QUANT_MIN_SIZE):
     with per-(layer, out-channel) resolution for stacked weights."""
     import jax.numpy as jnp
 
-    flat, treedef = jax.tree.flatten_with_path(params)
+    flat, treedef = jax.tree_util.tree_flatten_with_path(params)
     out = []
     for path, leaf in flat:
         key = jax.tree_util.keystr(path)
@@ -149,7 +149,7 @@ def prune_stats(params, threshold: float = 0.0) -> dict:
     the fraction of output channels with max |w| <= threshold — channels a
     specializing compiler deletes outright."""
     dead = total = 0
-    for path, leaf in jax.tree.flatten_with_path(params)[0]:
+    for path, leaf in jax.tree_util.tree_flatten_with_path(params)[0]:
         arr = np.asarray(leaf)
         if not _is_weight(jax.tree_util.keystr(path), arr):
             continue

@@ -67,8 +67,8 @@ from repro import configs
 from repro.launch.dryrun import run_cell
 from repro.models.base import ShapeConfig
 
-mesh = jax.make_mesh((2, 4), ("data", "model"),
-                     axis_types=(jax.sharding.AxisType.Auto,) * 2)
+from repro.launch.mesh import make_mesh_compat
+mesh = make_mesh_compat((2, 4), ("data", "model"))
 cfg = configs.smoke("llama3.2-3b")
 shape = ShapeConfig("t", seq_len=64, global_batch=8, kind="train", accum=2)
 record, meta = run_cell(cfg, shape, mesh, remat="full", verbose=False)

@@ -16,10 +16,10 @@ from repro import configs
 from repro.layers import moe as moe_lib
 from repro.models import base, runtime
 from repro.parallel import sharding as shd
+from repro.launch.mesh import make_mesh_compat
 
 cfg = configs.smoke("granite-moe-1b-a400m")   # 8 experts top-2
-mesh = jax.make_mesh((2, 4), ("data", "model"),
-                     axis_types=(jax.sharding.AxisType.Auto,)*2)
+mesh = make_mesh_compat((2, 4), ("data", "model"))
 p = base.tree_init(moe_lib.moe_params(cfg), jax.random.PRNGKey(0))
 x = jax.random.normal(jax.random.PRNGKey(1), (4, 16, cfg.d_model))
 

@@ -2,7 +2,10 @@
 import numpy as np
 import jax
 import jax.numpy as jnp
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # optional dep (requirements.txt); stub keeps suite collectable
+    from _hypothesis_stub import given, settings, strategies as st
 
 from repro import configs
 from repro.data import pipeline

@@ -4,7 +4,10 @@ import pytest
 import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # optional dep (requirements.txt); stub keeps suite collectable
+    from _hypothesis_stub import given, settings, strategies as st
 
 from repro import configs
 from repro.layers import moe as moe_lib
@@ -48,7 +51,10 @@ def test_spec_multi_pod_batch():
         assert s == P(("pod", "data"))
         # batch=8 can't take 32-way -> falls back to prefix ("pod",)... 8%2==0
         s2 = shd.spec((8, 128), ("batch", None))
-        assert s2 == P(("pod",))
+        # spec() collapses a single-axis group to the bare name; on older
+        # jax P("pod") and P(("pod",)) don't compare equal, so pin the
+        # collapsed form both spellings mean.
+        assert s2 == P("pod")
 
 
 def test_no_mesh_is_noop():

@@ -51,10 +51,10 @@ def test_quantize_tree_roundtrip_and_compression(small_model):
     assert stats["compression"] > 2.0, stats      # fp32 -> int8 ~ 4x on weights
     deq = qapply.dequantize_tree(qt)
     # quantization error per channel bounded by scale/2
-    flat_q = jax.tree.flatten_with_path(qt)[0]
+    flat_q = jax.tree_util.tree_flatten_with_path(qt)[0]
     for (path, orig), (_, back) in zip(
-            jax.tree.flatten_with_path(params)[0],
-            jax.tree.flatten_with_path(deq)[0]):
+            jax.tree_util.tree_flatten_with_path(params)[0],
+            jax.tree_util.tree_flatten_with_path(deq)[0]):
         err = np.abs(np.asarray(orig, np.float32) - np.asarray(back, np.float32))
         assert err.max() <= np.abs(np.asarray(orig)).max() / 127.0 + 1e-6
 
