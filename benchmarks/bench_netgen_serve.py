@@ -1,0 +1,137 @@
+"""Compile-cache serving benchmark (the paper's compile-per-model economics).
+
+Measures, in the `bench_throughput` CSV idiom:
+
+  * cold compile (cache miss + first-trace warmup) vs warm predictor
+    acquisition (cache hit) — ISSUE 2 acceptance: warm >= 100x faster
+  * multi-version stacked dispatch (M versions, ONE jitted call) vs
+    serving each CompiledNet individually, for M in 1..8 and batch
+    sizes 1..1024, with a bit-exactness check on every configuration
+
+The full measurement set is also written as JSON (CI uploads it as an
+artifact):
+
+  PYTHONPATH=src python benchmarks/bench_netgen_serve.py [--full] \\
+      [--json bench_netgen_serve.json]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import numpy as np
+
+
+def _nets(m: int, sizes, seed: int = 0):
+    from repro.core import quantize
+    out = []
+    for i in range(m):
+        rng = np.random.default_rng(seed + i)
+        out.append(quantize.QuantizedNet(weights=[
+            rng.integers(-5, 6, size=s).astype(np.int32)
+            for s in zip(sizes, sizes[1:])]))
+    return out
+
+
+def _images(b: int, n_in: int, seed: int = 9) -> np.ndarray:
+    return np.random.default_rng(seed).integers(
+        0, 256, size=(b, n_in)).astype(np.uint8)
+
+
+def run(full: bool = False, json_path: str | None = None) -> list[str]:
+    from repro import netgen
+
+    sizes = (784, 128, 10) if full else (96, 48, 10)
+    m_versions = (1, 2, 4, 8) if full else (1, 2, 4)
+    batches = (1, 32, 1024) if full else (1, 32, 256)
+    reps = 5 if full else 3
+    warm_reps = 1000
+
+    rows: list[str] = []
+    results: dict = {"sizes": list(sizes), "backend": "jnp",
+                     "cold_ms": [], "multi": []}
+    nets = _nets(max(m_versions), sizes)
+
+    # -- cold compile vs warm acquisition -----------------------------------
+    cache = netgen.CompileCache(capacity=64)
+    warm_batch = _images(32, sizes[0])
+    for net in nets:
+        t0 = time.perf_counter()
+        compiled = cache.get_or_compile(net)
+        np.asarray(compiled(warm_batch))     # includes first-trace jit cost
+        results["cold_ms"].append((time.perf_counter() - t0) * 1e3)
+    cold_s = float(np.mean(results["cold_ms"])) / 1e3
+
+    t0 = time.perf_counter()
+    for _ in range(warm_reps):
+        for net in nets:
+            cache.get_or_compile(net)
+    warm_s = (time.perf_counter() - t0) / (warm_reps * len(nets))
+    speedup = cold_s / warm_s
+    results["warm_us"] = warm_s * 1e6
+    results["warm_vs_cold_speedup"] = speedup
+    results["cache_stats"] = vars(cache.stats())
+    rows.append(f"netgen_serve_cold_compile,{cold_s*1e6:.0f},{1.0/cold_s:.1f}")
+    rows.append(f"netgen_serve_warm_acquire,{warm_s*1e6:.2f},{1.0/warm_s:.0f}")
+    rows.append(f"netgen_serve_warm_vs_cold_speedup,{warm_s*1e6:.2f},{speedup:.0f}")
+
+    # -- stacked multi-net dispatch vs individual serving -------------------
+    for m in m_versions:
+        for b in batches:
+            server = netgen.NetServer(cache=cache, slot_capacity=b)
+            for i in range(m):
+                server.register(f"v{i}", nets[i])
+            reqs = {f"v{i}": _images(b, sizes[0], seed=100 + i)
+                    for i in range(m)}
+
+            out = server.predict_many(reqs)          # warm both paths
+            individual = {v: np.asarray(server.compiled_for(v)(x))
+                          for v, x in reqs.items()}
+            exact = all(np.array_equal(out[v], individual[v]) for v in reqs)
+
+            t0 = time.perf_counter()
+            for _ in range(reps):
+                server.predict_many(reqs)
+            dt_stacked = (time.perf_counter() - t0) / reps
+
+            t0 = time.perf_counter()
+            for _ in range(reps):
+                for v, x in reqs.items():
+                    np.asarray(server.compiled_for(v)(x))
+            dt_indiv = (time.perf_counter() - t0) / reps
+
+            preds = m * b
+            results["multi"].append({
+                "versions": m, "batch": b, "exact": exact,
+                "stacked_dispatch": bool(m > 1),
+                "stacked_us": dt_stacked * 1e6,
+                "individual_us": dt_indiv * 1e6,
+                "stacked_preds_per_s": preds / dt_stacked,
+                "individual_preds_per_s": preds / dt_indiv,
+            })
+            assert exact, f"stacked dispatch diverged at m={m} b={b}"
+            rows.append(f"netgen_serve_stacked_m{m}_b{b},"
+                        f"{dt_stacked*1e6:.1f},{preds/dt_stacked:.0f}")
+            rows.append(f"netgen_serve_individual_m{m}_b{b},"
+                        f"{dt_indiv*1e6:.1f},{preds/dt_indiv:.0f}")
+
+    if json_path:
+        with open(json_path, "w") as f:
+            json.dump(results, f, indent=2)
+    return rows
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--json", default="bench_netgen_serve.json",
+                    help="write the full measurement set here")
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    for row in run(full=args.full, json_path=args.json):
+        print(row, flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -20,13 +20,14 @@ def main() -> None:
     args = ap.parse_args()
 
     from benchmarks import (bench_kernels, bench_ladder, bench_netgen,
-                            bench_netgen_passes, bench_throughput,
-                            roofline_table)
+                            bench_netgen_passes, bench_netgen_serve,
+                            bench_throughput, roofline_table)
 
     suites = {
         "ladder": bench_ladder.run,          # paper §III accuracy table
         "netgen": bench_netgen.run,          # paper §V.D resource table
         "netgen_passes": bench_netgen_passes.run,  # per-pass IR attribution
+        "netgen_serve": bench_netgen_serve.run,    # compile cache + multi-net
         "throughput": bench_throughput.run,  # paper §V.E FPGA-vs-CPU table
         "kernels": bench_kernels.run,
         "roofline": roofline_table.run,      # dry-run summary counts

@@ -1,7 +1,11 @@
 """The paper's full pipeline at full size: train 784-500-10, apply the
 ladder, compile through the `repro.netgen` IR (frontend -> passes ->
-backends), emit the full-network Verilog artifact, and compare software
-vs specialized throughput — everything in paper §II-§V.
+backends), emit the full-network Verilog artifact, compare software vs
+specialized throughput — everything in paper §II-§V — and finally serve
+TWO ladder depths through the content-addressed compile cache
+(`repro.netgen.serve`): two trained stacks become registered model
+versions behind one `NetServer`, re-registration is a cache hit, and
+same-topology versions share one stacked multi-net dispatch.
 
   PYTHONPATH=src python examples/mnist_fpga_pipeline.py [--fast] [--deep]
 
@@ -89,6 +93,45 @@ def main():
         print(f"  backend={backend:7s} exact={exact} "
               f"{n/dt:,.0f} preds/s"
               + ("  (interpret-mode Python, not TPU speed)" if backend != "jnp" else ""))
+
+    print("\n== serve: two ladder depths through the compile cache ==")
+    # a second net at the OTHER ladder depth, sharing the same server
+    if args.deep:
+        n_hidden_b = 96 if args.fast else 256
+    else:
+        n_hidden_b = (96, 48) if args.fast else (256, 96)
+    cfg_b = mlp.MLPConfig(n_hidden=n_hidden_b, epochs=max(epochs // 2, 8),
+                          lr=2.0, seed=43)
+    params_b = mlp.train(cfg_b, xtr, ytr)
+    qnet_b = quantize.quantize(params_b)
+
+    cache = netgen.CompileCache(capacity=16)
+    server = netgen.NetServer(cache=cache, slot_capacity=256)
+    t0 = time.perf_counter()
+    server.register("ladder-a", qnet)
+    server.register("ladder-b", qnet_b)
+    cold = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    cache.get_or_compile(qnet)                  # same weights -> cache hit
+    warm = time.perf_counter() - t0
+    print(f"  cold register (2 versions, jit warm): {cold*1e3:.0f} ms; "
+          f"warm predictor acquisition: {warm*1e6:.0f} us "
+          f"({cold/2/max(warm, 1e-9):,.0f}x)")
+
+    # a same-topology variant (coarser weight quantization) to show the
+    # stacked multi-net dispatch; the deeper net routes via fallback
+    qnet_v2 = quantize.QuantizedNet(weights=[
+        quantize.int_cast_weights(w, bound=5)
+        for w in quantize.param_weights(params)])
+    server.register("ladder-a-b5", qnet_v2)
+    out = server.predict_many(                       # one jitted call (stacked)
+        {"ladder-a": xte[:512], "ladder-a-b5": xte[:512]})
+    out.update(server.predict_many(                  # other depth: routed alone
+        {"ladder-b": xte[:512]}))
+    for version in ("ladder-a", "ladder-a-b5", "ladder-b"):
+        acc = float(np.mean(out[version] == yte[:512]))
+        print(f"  {version:12s} acc={acc:.1%} ({len(out[version])} preds)")
+    print(f"  dispatch: {server.dispatch_counts}  |  {cache.stats().row()}")
 
 
 if __name__ == "__main__":

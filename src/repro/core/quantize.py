@@ -30,6 +30,7 @@ is mathematically the paper's transform.
 from __future__ import annotations
 
 import dataclasses
+import hashlib
 
 import jax
 import jax.numpy as jnp
@@ -61,6 +62,30 @@ def int_cast_weights(w: np.ndarray, bound: int = WEIGHT_BOUND) -> np.ndarray:
     w = np.asarray(w, dtype=np.float64)
     s = bound / max(np.abs(w).max(), 1e-12)
     return np.round(w * s).astype(np.int32)
+
+
+def weights_digest(weights, input_threshold: int = INPUT_THRESHOLD) -> str:
+    """Stable content digest of a quantized stack (the compile-cache key).
+
+    Covers the integer weight *values*, shapes, layer order, and the input
+    threshold — nothing else. Values are canonicalized to int64 before
+    hashing, so the digest is identical across storage dtypes (an int8
+    and an int32 copy of the same matrix hash equal) and across processes
+    and machines (sha256 over little-endian bytes, no Python `hash`).
+    """
+    h = hashlib.sha256()
+    weights = list(weights)
+    h.update(f"netgen-v1:thr={int(input_threshold)}:depth={len(weights)}"
+             .encode())
+    for w in weights:
+        w = np.asarray(w)
+        if not np.issubdtype(w.dtype, np.integer):
+            raise TypeError(
+                f"weights_digest hashes *quantized* stacks; got dtype {w.dtype}")
+        w = np.ascontiguousarray(w.astype("<i8"))
+        h.update(f":{w.shape}:".encode())
+        h.update(w.tobytes())
+    return h.hexdigest()
 
 
 def param_weights(params: dict) -> list:
@@ -165,6 +190,10 @@ class QuantizedNet:
     @property
     def shapes(self) -> tuple:
         return tuple(w.shape for w in self.weights)
+
+    def digest(self) -> str:
+        """Content digest of this net (see `weights_digest`)."""
+        return weights_digest(self.weights, self.input_threshold)
 
 
 def quantize(params: dict) -> QuantizedNet:

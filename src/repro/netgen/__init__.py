@@ -38,6 +38,25 @@ Quick use
     v = netgen.compile_net(qnet, backend="verilog",
                            passes=netgen.HW_PASSES).artifact
 
+Serving (compile cache + multi-version dispatch)
+------------------------------------------------
+`repro.netgen.serve` makes the compile-per-model-then-serve workflow
+operational: compilations are content-addressed (sha256 of the quantized
+weights x pass pipeline x backend), so a model version is specialized
+exactly once per process, and a `NetServer` routes request batches —
+cross-model batches of stack-compatible versions run as ONE jitted
+multi-net dispatch:
+
+    cache = netgen.CompileCache(capacity=16)
+    server = netgen.NetServer(cache=cache, slot_capacity=64)
+    server.register("v1", qnet)              # miss: compiles, ~ms
+    server.register("v1-replica", qnet)      # hit: same CompiledNet, ~us
+    out = server.predict_many({"v1": imgs_a, "v2": imgs_b})
+    print(cache.stats().row())               # hits/misses/compile time
+
+See `benchmarks/bench_netgen_serve.py` for the cold-vs-warm and
+stacked-vs-individual numbers.
+
 `repro.core.netgen` remains as a thin compatibility shim with the old
 `specialize` / `emit_verilog` / `prune` / `stats` names.
 """
@@ -45,6 +64,8 @@ from __future__ import annotations
 
 import dataclasses
 from typing import Sequence
+
+import numpy as np
 
 from repro.netgen import backends
 from repro.netgen.frontend import lower
@@ -59,14 +80,31 @@ from repro.netgen.passes import (
 )
 
 __all__ = [
-    "Argmax", "Circuit", "CircuitOps", "CompiledNet", "DEFAULT_PASSES",
-    "HW_PASSES", "InputCompare", "IrregularCircuitError", "Pass",
-    "PassStats", "SignStep", "Term", "WeightedSum", "addend_rewrite",
-    "as_layered_weights", "backends", "compile_net", "delete_zero_terms",
+    "Argmax", "CacheKey", "Circuit", "CircuitOps", "CompileCache",
+    "CompiledNet", "DEFAULT_PASSES", "HW_PASSES", "InputCompare",
+    "IrregularCircuitError", "NetServer", "Pass", "PassStats", "SignStep",
+    "Term", "WeightedSum", "addend_rewrite", "as_layered_weights",
+    "backends", "cached_compile_net", "compile_net", "delete_zero_terms",
     "emit_verilog", "evaluate", "lower", "node_widths", "ops",
-    "prune_dead_units", "run_pipeline", "share_common_addends",
-    "specialize",
+    "prune_dead_units", "run_pipeline", "serve", "share_common_addends",
+    "specialize", "stack_layered_weights",
 ]
+
+
+def _validate_batch(x, n_inputs: int) -> None:
+    """Reject non-uint8 or wrongly-shaped predictor input with a clear
+    error instead of silently mis-binarizing (a float image batch would
+    compare scaled values against the integer pixel threshold)."""
+    dtype = getattr(x, "dtype", None)
+    if dtype is None or np.dtype(dtype) != np.uint8:
+        raise TypeError(
+            f"compiled predictors take raw uint8 images, got dtype={dtype!r} "
+            "(binarization happens inside the circuit; do not pre-scale)")
+    shape = tuple(getattr(x, "shape", ()))
+    if len(shape) != 2 or shape[1] != n_inputs:
+        raise ValueError(
+            f"expected a (batch, {n_inputs}) uint8 image batch, "
+            f"got shape {shape}")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -83,6 +121,7 @@ class CompiledNet:
         if not callable(self.artifact):
             raise TypeError(
                 f"{self.backend} artifact is not callable (use .artifact)")
+        _validate_batch(x_uint8, self.circuit.n_inputs)
         return self.artifact(x_uint8)
 
     def report(self) -> str:
@@ -132,3 +171,11 @@ def emit_verilog(net, *, addend: bool = True, module_name: str = "nn_inference",
     return compile_net(
         net, backend="verilog", passes=passes,
         module_name=module_name, addend=addend).artifact
+
+
+# Serving layer (imported last: it needs CompiledNet / compile_net above).
+from repro.netgen import serve  # noqa: E402
+from repro.netgen.serve import (  # noqa: E402
+    CacheKey, CompileCache, NetServer, cached_compile_net,
+    stack_layered_weights,
+)

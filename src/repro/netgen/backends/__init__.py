@@ -9,14 +9,22 @@ A backend turns an optimized circuit into an artifact:
 
 `compile_circuit(circuit, backend)` dispatches by name; callable
 artifacts map uint8 image batches to predicted class indices.
+
+The jnp and pallas backends additionally offer a *multi-net* form
+(`compile_multi`): M versions' reconstructed weight matrices, stacked
+along a model axis, become one jitted (M, B, n_in) -> (M, B) dispatch —
+the cross-model batching used by `repro.netgen.serve.NetServer`.
 """
 from __future__ import annotations
 
-from repro.netgen.backends.jnp import compile_jnp
-from repro.netgen.backends.pallas import compile_fused, compile_pallas
+from repro.netgen.backends.jnp import compile_jnp, compile_jnp_multi
+from repro.netgen.backends.pallas import (
+    compile_fused, compile_pallas, compile_pallas_multi,
+)
 from repro.netgen.backends.verilog import emit_verilog
 
 BACKENDS = ("jnp", "pallas", "fused", "verilog")
+MULTI_BACKENDS = ("jnp", "pallas")
 
 
 def compile_circuit(circuit, backend: str = "jnp", **opts):
@@ -31,3 +39,14 @@ def compile_circuit(circuit, backend: str = "jnp", **opts):
     if backend == "verilog":
         return emit_verilog(circuit, **opts)
     raise ValueError(f"unknown backend {backend!r} (have {BACKENDS})")
+
+
+def compile_multi(stacked_ws, input_threshold: int, backend: str = "jnp"):
+    """Compile M stacked weight sets into one jitted multi-net dispatch:
+    uint8 (M, B, n_in) -> predictions (M, B)."""
+    if backend == "jnp":
+        return compile_jnp_multi(stacked_ws, input_threshold)
+    if backend == "pallas":
+        return compile_pallas_multi(stacked_ws, input_threshold)
+    raise ValueError(
+        f"backend {backend!r} has no multi-net dispatch (have {MULTI_BACKENDS})")

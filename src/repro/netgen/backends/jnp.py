@@ -17,7 +17,7 @@ import jax.numpy as jnp
 
 from repro.netgen.graph import Circuit, as_layered_weights
 
-__all__ = ["compile_jnp"]
+__all__ = ["compile_jnp", "compile_jnp_multi"]
 
 
 def compile_jnp(circuit: Circuit):
@@ -33,5 +33,31 @@ def compile_jnp(circuit: Circuit):
             a = hi > 0
         fi = jnp.sum(jnp.where(a[:, :, None], ws[-1][None], 0), axis=1)
         return jnp.argmax(fi, axis=-1)
+
+    return predict
+
+
+def compile_jnp_multi(stacked_ws, input_threshold: int):
+    """Multi-net dispatch: one jitted call serving M model versions.
+
+    `stacked_ws` is a list of (M, fan_in, fan_out) int arrays — the
+    per-version weight matrices reconstructed from their circuits, padded
+    to common hidden widths and stacked along a leading model axis (see
+    `repro.netgen.serve.stack_layered_weights`). Returns a jitted fn
+    mapping uint8 images (M, B, n_in) to predictions (M, B): the same
+    masked column-sum arithmetic as `compile_jnp`, batched over the model
+    axis, so serving M versions costs one XLA dispatch instead of M.
+    """
+    ws = [jnp.asarray(w, jnp.int32) for w in stacked_ws]
+    thr = int(input_threshold)
+
+    @jax.jit
+    def predict(x_uint8):
+        a = x_uint8.astype(jnp.int32) > thr          # (M, B, K)
+        for w in ws[:-1]:
+            hi = jnp.sum(jnp.where(a[..., None], w[:, None], 0), axis=2)
+            a = hi > 0
+        fi = jnp.sum(jnp.where(a[..., None], ws[-1][:, None], 0), axis=2)
+        return jnp.argmax(fi, axis=-1)               # (M, B)
 
     return predict

@@ -17,7 +17,7 @@ import jax.numpy as jnp
 
 from repro.netgen.graph import Circuit, IrregularCircuitError, as_layered_weights
 
-__all__ = ["compile_pallas", "compile_fused"]
+__all__ = ["compile_pallas", "compile_pallas_multi", "compile_fused"]
 
 
 def compile_pallas(circuit: Circuit):
@@ -38,6 +38,39 @@ def compile_pallas(circuit: Circuit):
         for w in ws[:-1]:
             a = (matmul(a, w) > 0).astype(jnp.int8)
         return jnp.argmax(matmul(a, ws[-1]), axis=-1)
+
+    return predict
+
+
+def compile_pallas_multi(stacked_ws, input_threshold: int):
+    """Multi-net dispatch through the binary_matvec kernel chain.
+
+    `stacked_ws` is a list of (M, fan_in, fan_out) int arrays (padded and
+    stacked per `repro.netgen.serve.stack_layered_weights`). The model
+    axis is swept with `lax.map` — a scan whose body is the per-layer
+    kernel chain, so the whole M-version batch is one jitted dispatch and
+    each version's weights stream through the same kernel traces.
+    """
+    from repro.kernels.binary_matvec import ops as bmv
+
+    ws = [jnp.asarray(w, jnp.int32) for w in stacked_ws]
+    thr = int(input_threshold)
+
+    def matmul(a, w):
+        if w.shape[0] == 0:  # fully-pruned predecessor layer: constant 0
+            return jnp.zeros((a.shape[0], w.shape[1]), jnp.int32)
+        return bmv.binary_matmul(a, w)
+
+    def one_version(slices):
+        x, *wm = slices
+        a = (x.astype(jnp.int32) > thr).astype(jnp.int8)
+        for w in wm[:-1]:
+            a = (matmul(a, w) > 0).astype(jnp.int8)
+        return jnp.argmax(matmul(a, wm[-1]), axis=-1)
+
+    @jax.jit
+    def predict(x_uint8):                            # (M, B, n_in)
+        return jax.lax.map(one_version, (x_uint8, *ws))
 
     return predict
 

@@ -1,0 +1,415 @@
+"""Compile-cache serving of netgen-specialized predictors.
+
+The paper's economics (§IV-§V) are compile-per-model-then-serve: the
+expensive step is specializing a trained net into a fixed circuit; the
+cheap step is running it. This module makes that split operational, the
+ROADMAP's "Serving specialized programs" item:
+
+  CompileCache — a content-addressed cache over `netgen.compile_net`.
+      The key is the sha256 digest of the quantized weights + input
+      threshold (`repro.core.quantize.weights_digest`) crossed with the
+      pass pipeline, backend name, and backend options. A hit returns the
+      *same* `CompiledNet` object that was compiled before; a miss
+      compiles, records wall-clock compile time, and LRU-evicts past a
+      fixed capacity. Thread-safe (one lock; concurrent requests for the
+      same key compile exactly once).
+
+  NetServer — a multi-version predictor server in the style of
+      `repro.serve.engine`: fixed-capacity slot batching (one live jit
+      trace per model), per-request routing by version name, and
+      *cross-model* batching: versions whose circuits reconstruct to
+      compatible layered weights are stacked along a model axis
+      (`stack_layered_weights`) and served by one jitted multi-net
+      dispatch (`backends.compile_multi`) — M versions, one XLA call.
+
+Hidden-width padding used for stacking is exact: a zero-padded column is
+an empty accumulator, and under the strict step semantics step(0) = 0,
+so padded units contribute nothing downstream (their outgoing rows are
+zero-padded too).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import threading
+import time
+from collections import OrderedDict
+from typing import Sequence
+
+import numpy as np
+
+from repro.core.quantize import weights_digest
+from repro.netgen import CompiledNet, _validate_batch, compile_net
+from repro.netgen import backends
+from repro.netgen.frontend import _extract_weights
+from repro.netgen.graph import (
+    Circuit, IrregularCircuitError, as_layered_weights,
+)
+from repro.netgen.passes import DEFAULT_PASSES, Pass
+from repro.serve.slots import pad_slots
+
+__all__ = [
+    "CacheKey", "CacheStats", "CompileCache", "DEFAULT_CACHE", "NetServer",
+    "cached_compile_net", "stack_layered_weights",
+]
+
+
+# ---------------------------------------------------------------------------
+# Content-addressed compile cache
+# ---------------------------------------------------------------------------
+
+def _pass_fingerprint(p) -> str:
+    """Stable name for one pass in the cache key. functools.partial keeps
+    the inner name plus its bound keywords, so a budgeted variant of a
+    pass does not alias the unbudgeted one.
+
+    Lambdas and closures are refused: their qualified name does not cover
+    their captured state, so two different ones would alias to the same
+    key and the cache would hand back a predictor compiled with the OTHER
+    pipeline. Spell parameterized passes as functools.partial of a named
+    module-level function instead.
+    """
+    if isinstance(p, functools.partial):
+        kw = ",".join(f"{k}={v!r}" for k, v in sorted(p.keywords.items()))
+        return f"{_pass_fingerprint(p.func)}({kw})"
+    name = getattr(p, "__qualname__", None) or getattr(p, "__name__", None)
+    if not name:
+        raise ValueError(f"cannot content-address pass {p!r}: it has no name")
+    if "<lambda>" in name or "<locals>" in name:
+        raise ValueError(
+            f"cannot content-address pass {name!r}: lambdas/closures have no "
+            "stable fingerprint — use functools.partial of a named function")
+    return f"{getattr(p, '__module__', '?')}.{name}"
+
+
+@dataclasses.dataclass(frozen=True)
+class CacheKey:
+    """What a compiled predictor is a function of: weight content digest,
+    pass pipeline, backend, and backend options."""
+    digest: str
+    backend: str
+    passes: tuple
+    opts: tuple
+
+
+@dataclasses.dataclass
+class CacheStats:
+    hits: int = 0
+    misses: int = 0
+    evictions: int = 0
+    compile_seconds: float = 0.0   # total wall-clock spent on misses
+
+    def row(self) -> str:
+        return (f"cache: {self.hits} hits, {self.misses} misses, "
+                f"{self.evictions} evictions, "
+                f"{self.compile_seconds * 1e3:.1f} ms compiling")
+
+
+class CompileCache:
+    """LRU-bounded, thread-safe, content-addressed `compile_net` cache."""
+
+    def __init__(self, capacity: int = 32):
+        if capacity < 1:
+            raise ValueError(f"capacity must be >= 1, got {capacity}")
+        self.capacity = int(capacity)
+        self._lock = threading.RLock()
+        self._entries: "OrderedDict[CacheKey, CompiledNet]" = OrderedDict()
+        self._compile_seconds: dict[CacheKey, float] = {}
+        self._stats = CacheStats()
+
+    def __len__(self) -> int:
+        with self._lock:
+            return len(self._entries)
+
+    def __contains__(self, key: CacheKey) -> bool:
+        with self._lock:
+            return key in self._entries
+
+    def keys(self) -> list[CacheKey]:
+        with self._lock:
+            return list(self._entries)
+
+    def stats(self) -> CacheStats:
+        """Snapshot of the hit/miss/eviction counters."""
+        with self._lock:
+            return dataclasses.replace(self._stats)
+
+    def compile_seconds(self, key: CacheKey) -> float | None:
+        """Recorded compile time of a resident entry (None if evicted)."""
+        with self._lock:
+            return self._compile_seconds.get(key)
+
+    def key_for(self, net, *, backend: str = "jnp",
+                passes: Sequence[Pass] | None = None,
+                input_threshold: int | None = None, **backend_opts) -> CacheKey:
+        """The content-addressed key `get_or_compile` would use. `net` is
+        anything `compile_net` accepts; weights are canonicalized the same
+        way the frontend lowers them, so two nets with equal integer
+        content produce the same key regardless of container or dtype."""
+        ws, thr = _extract_weights(net, input_threshold)
+        return CacheKey(
+            digest=weights_digest(ws, thr),
+            backend=backend,
+            passes=tuple(_pass_fingerprint(p) for p in
+                         (DEFAULT_PASSES if passes is None else passes)),
+            opts=tuple(sorted((k, repr(v)) for k, v in backend_opts.items())),
+        )
+
+    def get_or_compile(self, net, *, backend: str = "jnp",
+                       passes: Sequence[Pass] | None = None,
+                       input_threshold: int | None = None,
+                       **backend_opts) -> CompiledNet:
+        """Return the cached `CompiledNet` for this exact (weights, passes,
+        backend, options) combination, compiling on first sight."""
+        key = self.key_for(net, backend=backend, passes=passes,
+                           input_threshold=input_threshold, **backend_opts)
+        with self._lock:
+            hit = self._entries.get(key)
+            if hit is not None:
+                self._entries.move_to_end(key)
+                self._stats.hits += 1
+                return hit
+            t0 = time.perf_counter()
+            compiled = compile_net(
+                net, backend=backend, passes=passes,
+                input_threshold=input_threshold, **backend_opts)
+            dt = time.perf_counter() - t0
+            self._stats.misses += 1
+            self._stats.compile_seconds += dt
+            self._entries[key] = compiled
+            self._compile_seconds[key] = dt
+            while len(self._entries) > self.capacity:
+                evicted, _ = self._entries.popitem(last=False)
+                self._compile_seconds.pop(evicted, None)
+                self._stats.evictions += 1
+            return compiled
+
+
+DEFAULT_CACHE = CompileCache(capacity=64)
+
+
+def cached_compile_net(net, **kw) -> CompiledNet:
+    """`netgen.compile_net` through the process-wide DEFAULT_CACHE."""
+    return DEFAULT_CACHE.get_or_compile(net, **kw)
+
+
+# ---------------------------------------------------------------------------
+# Cross-model weight stacking
+# ---------------------------------------------------------------------------
+
+def stack_layered_weights(circuits: Sequence[Circuit]
+                          ) -> tuple[int, list[np.ndarray]]:
+    """Stack M regular circuits' reconstructed weight matrices for the
+    multi-net backends.
+
+    Returns (input_threshold, [per-layer (M, fan_in, fan_out) int32]).
+    Versions must agree on depth, input width, class count, and input
+    threshold; *hidden* widths may differ (pruning is per-model) — they
+    are zero-padded to the per-layer maximum, which is exact under the
+    strict step semantics (an all-zero column is an empty accumulator,
+    step(0) = 0, and its outgoing row is zero-padded too).
+
+    Raises IrregularCircuitError for shared/CSE circuits (via
+    `as_layered_weights`) and ValueError for incompatible topologies.
+    """
+    if not circuits:
+        raise ValueError("no circuits to stack")
+    mats = [as_layered_weights(c) for c in circuits]
+
+    depths = {len(m) for m in mats}
+    if len(depths) != 1:
+        raise ValueError(f"versions disagree on depth: {sorted(depths)}")
+    thrs = {c.input_threshold for c in circuits}
+    if len(thrs) != 1:
+        raise ValueError(f"versions disagree on input threshold: {sorted(thrs)}")
+    n_ins = {m[0].shape[0] for m in mats}
+    if len(n_ins) != 1:
+        raise ValueError(f"versions disagree on input width: {sorted(n_ins)}")
+    n_outs = {m[-1].shape[1] for m in mats}
+    if len(n_outs) != 1:
+        # class counts cannot be padded: an extra constant-0 class could
+        # win the argmax when every real score is negative
+        raise ValueError(f"versions disagree on class count: {sorted(n_outs)}")
+
+    depth = depths.pop()
+    for layer in range(depth - 1):
+        width = max(m[layer].shape[1] for m in mats)
+        for m in mats:
+            have = m[layer].shape[1]
+            if have < width:
+                m[layer] = np.pad(m[layer], ((0, 0), (0, width - have)))
+                m[layer + 1] = np.pad(m[layer + 1], ((0, width - have), (0, 0)))
+    return thrs.pop(), [
+        np.stack([m[layer] for m in mats]).astype(np.int32)
+        for layer in range(depth)]
+
+
+# ---------------------------------------------------------------------------
+# Multi-version server
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class _Version:
+    name: str
+    compiled: CompiledNet
+
+
+class NetServer:
+    """Serve uint8 image batches across registered model versions.
+
+    Single-version requests (`predict`) route to that version's cached
+    `CompiledNet` with fixed-capacity slot batching (the
+    `repro.serve.engine` pattern — one live jit trace per model; larger
+    batches are chunked). Multi-version requests (`predict_many`) stack
+    compatible versions' weights into one jitted multi-net dispatch;
+    incompatible sets (different depth/width/classes, or a backend
+    without a multi form) fall back to per-version routing.
+    `dispatch_counts` records which path served each request.
+    """
+
+    def __init__(self, *, backend: str = "jnp",
+                 passes: Sequence[Pass] | None = None,
+                 cache: CompileCache | None = None,
+                 slot_capacity: int = 256, warmup: bool = True):
+        if backend not in ("jnp", "pallas", "fused"):
+            raise ValueError(
+                f"NetServer needs a callable backend, got {backend!r}")
+        if slot_capacity < 1:
+            raise ValueError(f"slot_capacity must be >= 1, got {slot_capacity}")
+        self.backend = backend
+        self.passes = passes
+        self.cache = cache if cache is not None else CompileCache()
+        self.slot_capacity = int(slot_capacity)
+        self.warmup = bool(warmup)
+        self._lock = threading.RLock()
+        self._versions: "OrderedDict[str, _Version]" = OrderedDict()
+        self._multi: dict[tuple, object] = {}
+        self._generation = 0   # bumped by register/unregister; guards _multi
+        self.dispatch_counts = {"single": 0, "stacked": 0, "fallback": 0}
+
+    # -- registry ------------------------------------------------------------
+
+    def register(self, version: str, net) -> CompiledNet:
+        """Compile (through the cache) and register a model version. When
+        `warmup` is on, the serving shape is traced and executed once so
+        the first real request pays no jit latency."""
+        compiled = self.cache.get_or_compile(
+            net, backend=self.backend, passes=self.passes)
+        with self._lock:
+            self._versions[version] = _Version(version, compiled)
+            self._multi.clear()
+            self._generation += 1
+        if self.warmup:
+            z = np.zeros((self.slot_capacity, compiled.circuit.n_inputs),
+                         np.uint8)
+            np.asarray(compiled(z))
+        return compiled
+
+    def unregister(self, version: str) -> None:
+        with self._lock:
+            del self._versions[version]
+            self._multi.clear()
+            self._generation += 1
+
+    def versions(self) -> list[str]:
+        with self._lock:
+            return list(self._versions)
+
+    def compiled_for(self, version: str) -> CompiledNet:
+        with self._lock:
+            v = self._versions.get(version)
+        if v is None:
+            raise KeyError(
+                f"unknown version {version!r} (registered: {self.versions()})")
+        return v.compiled
+
+    # -- serving -------------------------------------------------------------
+
+    def predict(self, version: str, x_uint8) -> np.ndarray:
+        """Route one batch to one version. Returns predictions (B,)."""
+        compiled = self.compiled_for(version)
+        with self._lock:
+            self.dispatch_counts["single"] += 1
+        return self._run_slots(compiled, np.asarray(x_uint8))
+
+    def predict_many(self, requests: dict) -> dict:
+        """Serve {version: uint8 batch} in one cross-model stacked dispatch
+        when the requested versions are stack-compatible (else per-version
+        fallback). Returns {version: predictions}."""
+        names = tuple(sorted(requests))
+        compiled = {v: self.compiled_for(v) for v in names}
+        for v in names:
+            _validate_batch(np.asarray(requests[v]),
+                            compiled[v].circuit.n_inputs)
+        if len(names) == 1:
+            (v,) = names
+            with self._lock:
+                self.dispatch_counts["single"] += 1
+            return {v: self._run_slots(compiled[v], np.asarray(requests[v]))}
+
+        fn = self._stacked_fn(names)
+        if fn is None:
+            with self._lock:
+                self.dispatch_counts["fallback"] += 1
+            return {v: self._run_slots(compiled[v], np.asarray(requests[v]))
+                    for v in names}
+
+        with self._lock:
+            self.dispatch_counts["stacked"] += 1
+        cap = self.slot_capacity
+        n_in = compiled[names[0]].circuit.n_inputs
+        xs = {v: np.asarray(requests[v]) for v in names}
+        rounds = max((x.shape[0] + cap - 1) // cap for x in xs.values())
+        out: dict[str, list] = {v: [] for v in names}
+        for r in range(rounds):
+            block = np.zeros((len(names), cap, n_in), np.uint8)
+            valid = []
+            for i, v in enumerate(names):
+                chunk = xs[v][r * cap:(r + 1) * cap]
+                block[i], n = pad_slots(chunk, cap)
+                valid.append(n)
+            preds = np.asarray(fn(block))            # (M, cap)
+            for i, v in enumerate(names):
+                out[v].append(preds[i, :valid[i]])
+        return {v: (np.concatenate(out[v]) if out[v]
+                    else np.zeros((0,), np.int64)) for v in names}
+
+    # -- internals -----------------------------------------------------------
+
+    def _run_slots(self, compiled: CompiledNet, x: np.ndarray) -> np.ndarray:
+        _validate_batch(x, compiled.circuit.n_inputs)
+        cap = self.slot_capacity
+        if x.shape[0] == 0:
+            return np.zeros((0,), np.int64)
+        outs = []
+        for i in range(0, x.shape[0], cap):
+            padded, n = pad_slots(x[i:i + cap], cap)
+            outs.append(np.asarray(compiled(padded))[:n])
+        return np.concatenate(outs)
+
+    def _stacked_fn(self, names: tuple):
+        """Build (or recall) the multi-net dispatch for this version set;
+        None when the set cannot be stacked. Compilation happens outside
+        the lock; a generation check before storing guards against a
+        concurrent (un)register racing the build — a stale fn must never
+        enter `_multi`, or it would silently serve old weights."""
+        while True:
+            with self._lock:
+                if names in self._multi:
+                    return self._multi[names]
+                generation = self._generation
+                circuits = [self._versions[v].compiled.circuit for v in names]
+            if self.backend not in backends.MULTI_BACKENDS:
+                fn = None
+            else:
+                try:
+                    thr, stacked = stack_layered_weights(circuits)
+                    fn = backends.compile_multi(
+                        stacked, thr, backend=self.backend)
+                except (IrregularCircuitError, ValueError):
+                    fn = None
+            with self._lock:
+                if self._generation == generation:
+                    self._multi[names] = fn
+                    return fn
+            # registry changed underneath the build: retry with fresh circuits

@@ -18,6 +18,12 @@ from repro.models import api
 from repro.models.base import ArchConfig, tree_init
 
 
+# The fixed-slot batching mechanics live in repro.serve.slots (numpy
+# only, importable without the model stack); re-exported here because
+# this engine is where the pattern originates.
+from repro.serve.slots import pad_slots  # noqa: F401
+
+
 @dataclasses.dataclass
 class ServeConfig:
     max_len: int = 256

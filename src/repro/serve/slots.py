@@ -1,0 +1,32 @@
+"""Fixed-capacity slot batching, shared across serving runtimes.
+
+Both servers in this repo batch the same way: requests are padded into
+fixed-size slot blocks so every served function sees exactly one batch
+shape and one jit trace stays live per model. The LM engine
+(`repro.serve.engine`) slots token batches; the netgen predictor server
+(`repro.netgen.serve`) slots uint8 image batches. This module holds the
+shared mechanics and deliberately depends on numpy only, so the netgen
+side can import it without pulling in the LM model stack.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+__all__ = ["pad_slots"]
+
+
+def pad_slots(x: np.ndarray, capacity: int) -> tuple[np.ndarray, int]:
+    """Pad a request batch into a fixed-capacity slot block (leading axis).
+
+    Padding rows are zeros; the returned int is the number of valid
+    leading rows. Raises when the batch exceeds the capacity — chunking
+    policy belongs to the caller.
+    """
+    x = np.asarray(x)
+    n = x.shape[0]
+    if n > capacity:
+        raise ValueError(f"batch of {n} exceeds slot capacity {capacity}")
+    if n == capacity:
+        return x, n
+    pad = np.zeros((capacity - n,) + x.shape[1:], dtype=x.dtype)
+    return np.concatenate([x, pad], axis=0), n

@@ -1,0 +1,25 @@
+"""Shared random-net / image generators for the netgen test modules.
+
+One implementation (test modules bind their own bounds and salts as
+one-line wrappers) so a change to input generation — e.g. covering
+threshold edge values — reaches every netgen suite at once.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import quantize
+
+
+def random_net(seed: int, sizes, lo: int = -9, hi: int = 9):
+    """A QuantizedNet with integer weights uniform in [lo, hi]."""
+    rng = np.random.default_rng(seed)
+    return quantize.QuantizedNet(weights=[
+        rng.integers(lo, hi + 1, size=s).astype(np.int32)
+        for s in zip(sizes, sizes[1:])])
+
+
+def images(seed: int, b: int, n_in: int, salt: int = 99) -> np.ndarray:
+    """A (b, n_in) uint8 image batch; `salt` decorrelates from the net."""
+    return np.random.default_rng(seed + salt).integers(
+        0, 256, size=(b, n_in)).astype(np.uint8)

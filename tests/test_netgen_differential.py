@@ -1,0 +1,123 @@
+"""Backend-differential property harness.
+
+One random quantized net, every execution path, bit-exact agreement:
+the dense reference (`quantize.predict_quantized`), the IR interpreter
+(`graph.evaluate` — the Verilog reference semantics, in both its strict
+and MSB step variants), the compiled jnp / pallas / fused backends, and
+the NetServer's stacked multi-net dispatch must all tell the same story.
+
+The strict/MSB comparison is the interesting one: the compiled backends
+and the software ladder fire the step on `acc > 0`, the emitted Verilog's
+§V.D MSB trick on `acc >= 0`. The differential property is that the two
+interpreters may disagree ONLY on inputs where some hidden accumulator
+is exactly zero — anywhere else, every path is identical.
+
+Runs under real `hypothesis` when installed, else the deterministic
+fallback in `tests/_hypothesis_stub.py`.
+"""
+import numpy as np
+import jax.numpy as jnp
+
+from repro.core import quantize
+from repro import netgen
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # optional dep (requirements.txt); stub keeps suite collectable
+    from _hypothesis_stub import given, settings, strategies as st
+
+from _netgen_helpers import images, random_net
+
+
+def _random_net(seed: int, sizes, lo=-5, hi=5):
+    return random_net(seed, sizes, lo=lo, hi=hi)
+
+
+def _images(seed: int, b: int, n_in: int) -> np.ndarray:
+    return images(seed, b, n_in, salt=123)
+
+
+def _rows_with_zero_hidden_acc(net, x: np.ndarray) -> np.ndarray:
+    """Boolean (B,) mask: some *hidden* accumulator is exactly 0 (the only
+    place the strict and MSB step semantics can diverge; the final layer
+    feeds the argmax directly, with no step)."""
+    a = (x.astype(np.int64) > net.input_threshold).astype(np.int64)
+    any_zero = np.zeros(x.shape[0], dtype=bool)
+    for w in net.weights[:-1]:
+        acc = a @ np.asarray(w, np.int64)
+        if acc.shape[1]:
+            any_zero |= (acc == 0).any(axis=1)
+        a = (acc > 0).astype(np.int64)
+    return any_zero
+
+
+@settings(max_examples=8, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), n_in=st.integers(2, 18),
+       n_h=st.integers(1, 10), n_out=st.integers(2, 6),
+       depth3=st.booleans())
+def test_backend_differential_bit_exact(seed, n_in, n_h, n_out, depth3):
+    sizes = (n_in, n_h, n_h, n_out) if depth3 else (n_in, n_h, n_out)
+    net = _random_net(seed, sizes)
+    x = _images(seed, 12, n_in)
+    ref = np.asarray(quantize.predict_quantized(net)(jnp.asarray(x)))
+
+    # interpreter, unoptimized and optimized circuits, strict semantics
+    c0 = netgen.lower(net)
+    strict = netgen.evaluate(c0, x, step_semantics="strict")
+    np.testing.assert_array_equal(strict, ref)
+    copt, _ = netgen.run_pipeline(c0)
+    np.testing.assert_array_equal(
+        netgen.evaluate(copt, x, check_widths=True), ref)
+
+    # every compiled backend (fused is 2-layer only by contract)
+    backends = ("jnp", "pallas") + (() if depth3 else ("fused",))
+    for backend in backends:
+        got = np.asarray(
+            netgen.specialize(net, backend=backend)(jnp.asarray(x)))
+        np.testing.assert_array_equal(got, ref, err_msg=backend)
+
+    # the Verilog reference semantics: MSB step may diverge from strict
+    # only where a hidden accumulator is exactly zero
+    msb = netgen.evaluate(c0, x, step_semantics="msb")
+    clean = ~_rows_with_zero_hidden_acc(net, x)
+    np.testing.assert_array_equal(msb[clean], strict[clean])
+    if not np.array_equal(msb, strict):
+        assert _rows_with_zero_hidden_acc(net, x)[msb != strict].all()
+
+
+@settings(max_examples=4, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), n_in=st.integers(4, 14),
+       n_h=st.integers(2, 8), n_out=st.integers(2, 5))
+def test_stacked_dispatch_differential(seed, n_in, n_h, n_out):
+    """The multi-net stacked dispatch is just another backend: for random
+    same-topology version pairs it must match each version's individual
+    compiled predictor and the dense reference."""
+    sizes = (n_in, n_h, n_out)
+    nets = {"a": _random_net(seed, sizes), "b": _random_net(seed + 1, sizes)}
+    x = _images(seed, 8, n_in)
+    server = netgen.NetServer(slot_capacity=8, warmup=False)
+    for name, net in nets.items():
+        server.register(name, net)
+    out = server.predict_many({"a": x, "b": x})
+    assert server.dispatch_counts["stacked"] == 1
+    for name, net in nets.items():
+        ref = np.asarray(quantize.predict_quantized(net)(jnp.asarray(x)))
+        np.testing.assert_array_equal(out[name], ref, err_msg=name)
+        np.testing.assert_array_equal(
+            out[name], np.asarray(server.compiled_for(name)(x)),
+            err_msg=name)
+
+
+def test_msb_divergence_is_reachable():
+    """Sanity for the differential mask: a crafted zero accumulator makes
+    strict and MSB genuinely disagree, and the mask flags that row."""
+    w1 = np.array([[1], [-1]], np.int32)
+    w2 = np.array([[0, 1]], np.int32)
+    net = quantize.QuantizedNet(weights=[w1, w2])
+    x = np.array([[255, 255], [255, 0]], np.uint8)
+    c = netgen.lower(net)
+    strict = netgen.evaluate(c, x, step_semantics="strict")
+    msb = netgen.evaluate(c, x, step_semantics="msb")
+    mask = _rows_with_zero_hidden_acc(net, x)
+    assert mask[0] and strict[0] != msb[0]
+    assert strict[1] == msb[1]

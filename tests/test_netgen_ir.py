@@ -21,19 +21,17 @@ try:
 except ImportError:  # optional dep (requirements.txt); stub keeps suite collectable
     from _hypothesis_stub import given, settings, strategies as st
 
+from _netgen_helpers import images, random_net
+
 GOLDEN = os.path.join(os.path.dirname(__file__), "golden")
 
 
 def _random_net(seed: int, sizes: tuple[int, ...], lo: int = -9, hi: int = 9):
-    rng = np.random.default_rng(seed)
-    ws = [rng.integers(lo, hi + 1, size=s).astype(np.int32)
-          for s in zip(sizes, sizes[1:])]
-    return quantize.QuantizedNet(weights=ws)
+    return random_net(seed, sizes, lo=lo, hi=hi)
 
 
 def _images(seed: int, b: int, n_in: int) -> np.ndarray:
-    return np.random.default_rng(seed + 99).integers(
-        0, 256, size=(b, n_in)).astype(np.uint8)
+    return images(seed, b, n_in, salt=99)
 
 
 # ---------------------------------------------------------------------------
@@ -155,6 +153,31 @@ def test_fully_dead_hidden_layer():
         np.testing.assert_array_equal(got, ref, err_msg=backend)
     circuit, _ = netgen.run_pipeline(netgen.lower(net))
     np.testing.assert_array_equal(netgen.evaluate(circuit, x), ref)
+
+
+@pytest.mark.slow
+def test_share_common_addends_full_784_input_net():
+    """The greedy CSE on a full-width (784-input) net, budgeted so the
+    O(terms^2) pair counting stays bounded: the pass must stay an exact
+    rewrite at paper scale and report nonzero adder sharing."""
+    rng = np.random.default_rng(0)
+    net = quantize.QuantizedNet(weights=[
+        rng.integers(-2, 3, size=(784, 4)).astype(np.int32),
+        rng.integers(-2, 3, size=(4, 10)).astype(np.int32)])
+
+    def share_budgeted(circuit):
+        return netgen.share_common_addends(circuit, max_new_nodes=2)
+
+    shared, stats = netgen.run_pipeline(
+        netgen.lower(net), (netgen.delete_zero_terms, share_budgeted))
+    cse = stats[-1]
+    assert cse.adds_saved > 0                      # nonzero sharing reported
+    assert cse.after.nodes > cse.before.nodes      # shared sub-sums exist
+    with pytest.raises(netgen.IrregularCircuitError):
+        netgen.as_layered_weights(shared)
+    x = _images(0, 24, 784)
+    ref = np.asarray(quantize.predict_quantized(net)(jnp.asarray(x)))
+    np.testing.assert_array_equal(netgen.evaluate(shared, x), ref)
 
 
 def test_share_common_addends_shares():

@@ -1,0 +1,371 @@
+"""Compile-cache serving tests: content-addressed hits/misses, LRU
+eviction, thread safety, input validation, and the NetServer's stacked
+multi-net dispatch (ISSUE 2 acceptance: 4 versions in one jitted call,
+bit-exact vs serving each CompiledNet individually)."""
+import threading
+
+import numpy as np
+import pytest
+import jax.numpy as jnp
+
+from repro.core import quantize
+from repro import netgen
+from repro.netgen.serve import _pass_fingerprint
+from repro.serve.engine import pad_slots
+
+from _netgen_helpers import images, random_net
+
+
+def _random_net(seed: int, sizes=(12, 9, 4), lo=-5, hi=5):
+    return random_net(seed, sizes, lo=lo, hi=hi)
+
+
+def _images(seed: int, b: int, n_in: int) -> np.ndarray:
+    return images(seed, b, n_in, salt=77)
+
+
+def _ref(net, x):
+    return np.asarray(quantize.predict_quantized(net)(jnp.asarray(x)))
+
+
+# ---------------------------------------------------------------------------
+# Digest
+# ---------------------------------------------------------------------------
+
+def test_digest_content_addressed():
+    net = _random_net(0)
+    clone = quantize.QuantizedNet(weights=[w.copy() for w in net.weights])
+    assert net.digest() == clone.digest()
+    # dtype of the container must not matter, only the integer content
+    as_i8 = quantize.QuantizedNet(
+        weights=[w.astype(np.int8) for w in net.weights])
+    assert as_i8.digest() == net.digest()
+    # any perturbation must change it
+    w = [w.copy() for w in net.weights]
+    w[0][0, 0] += 1
+    assert quantize.QuantizedNet(weights=w).digest() != net.digest()
+    other_thr = quantize.QuantizedNet(
+        weights=list(net.weights), input_threshold=64)
+    assert other_thr.digest() != net.digest()
+
+
+def test_digest_rejects_float_weights():
+    with pytest.raises(TypeError):
+        quantize.weights_digest([np.ones((2, 2), np.float32)])
+
+
+# ---------------------------------------------------------------------------
+# Cache hit/miss semantics
+# ---------------------------------------------------------------------------
+
+def test_cache_hit_returns_same_object():
+    cache = netgen.CompileCache()
+    net = _random_net(1)
+    clone = quantize.QuantizedNet(weights=[w.copy() for w in net.weights])
+    first = cache.get_or_compile(net)
+    again = cache.get_or_compile(clone)      # equal content, new containers
+    assert again is first
+    st = cache.stats()
+    assert (st.hits, st.misses) == (1, 1)
+    assert st.compile_seconds > 0
+    key = cache.key_for(net)
+    assert key in cache and cache.compile_seconds(key) > 0
+
+
+def test_cache_misses_on_weights_passes_backend():
+    cache = netgen.CompileCache()
+    net = _random_net(2)
+    base = cache.get_or_compile(net)
+
+    perturbed = [w.copy() for w in net.weights]
+    perturbed[1][0, 0] -= 1
+    assert cache.get_or_compile(
+        quantize.QuantizedNet(weights=perturbed)) is not base
+    assert cache.get_or_compile(
+        net, passes=(netgen.delete_zero_terms,)) is not base
+    assert cache.get_or_compile(net, backend="pallas") is not base
+    st = cache.stats()
+    assert (st.hits, st.misses) == (0, 4)
+
+
+def test_cache_key_distinguishes_backend_opts_and_partial_passes():
+    import functools
+    cache = netgen.CompileCache()
+    net = _random_net(3)
+    k_plain = cache.key_for(net, backend="verilog")
+    k_named = cache.key_for(net, backend="verilog", module_name="other")
+    assert k_plain != k_named
+    budget = functools.partial(netgen.share_common_addends, max_new_nodes=2)
+    assert _pass_fingerprint(budget) != _pass_fingerprint(
+        netgen.share_common_addends)
+    assert cache.key_for(net, passes=(budget,)) != cache.key_for(
+        net, passes=(netgen.share_common_addends,))
+
+
+def test_cache_refuses_unfingerprintable_passes():
+    """A lambda/closure pass has no stable fingerprint — two different
+    ones would alias to one key and serve each other's artifacts."""
+    cache = netgen.CompileCache()
+    net = _random_net(8)
+    with pytest.raises(ValueError, match="lambda"):
+        cache.key_for(net, passes=(lambda c: c,))
+
+    def make(budget):
+        def p(c):
+            return netgen.share_common_addends(c, max_new_nodes=budget)
+        return p
+
+    with pytest.raises(ValueError, match="functools.partial"):
+        cache.key_for(net, passes=(make(1),))
+
+
+def test_cache_eviction_bound():
+    cache = netgen.CompileCache(capacity=2)
+    nets = [_random_net(10 + i) for i in range(3)]
+    first = cache.get_or_compile(nets[0])
+    cache.get_or_compile(nets[1])
+    cache.get_or_compile(nets[2])            # evicts nets[0] (LRU)
+    assert len(cache) == 2
+    assert cache.stats().evictions == 1
+    assert cache.key_for(nets[0]) not in cache
+    assert cache.get_or_compile(nets[0]) is not first   # recompiled
+    assert cache.stats().misses == 4
+    with pytest.raises(ValueError):
+        netgen.CompileCache(capacity=0)
+
+
+def test_cache_lru_recency():
+    cache = netgen.CompileCache(capacity=2)
+    a, b, c = (_random_net(20 + i) for i in range(3))
+    ca = cache.get_or_compile(a)
+    cache.get_or_compile(b)
+    cache.get_or_compile(a)                  # touch a: b is now LRU
+    cache.get_or_compile(c)                  # evicts b, keeps a
+    assert cache.get_or_compile(a) is ca
+    assert cache.stats().evictions == 1
+
+
+def test_cache_thread_safety_smoke():
+    cache = netgen.CompileCache()
+    net = _random_net(4)
+    results = [None] * 8
+    barrier = threading.Barrier(len(results))
+
+    def worker(i):
+        barrier.wait()
+        results[i] = cache.get_or_compile(net)
+
+    threads = [threading.Thread(target=worker, args=(i,))
+               for i in range(len(results))]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert all(r is results[0] for r in results)
+    st = cache.stats()
+    assert st.misses == 1 and st.hits == len(results) - 1
+
+
+def test_cached_compile_net_uses_default_cache():
+    net = _random_net(5, sizes=(7, 5, 3))
+    a = netgen.cached_compile_net(net)
+    b = netgen.cached_compile_net(net)
+    assert a is b
+
+
+# ---------------------------------------------------------------------------
+# CompiledNet input validation
+# ---------------------------------------------------------------------------
+
+def test_compiled_net_rejects_bad_input():
+    net = _random_net(6)
+    compiled = netgen.compile_net(net)
+    x = _images(6, 8, 12)
+    ok = np.asarray(compiled(x))
+    assert ok.shape == (8,)
+    np.testing.assert_array_equal(np.asarray(compiled(jnp.asarray(x))), ok)
+    with pytest.raises(TypeError, match="uint8"):
+        compiled(x.astype(np.float32))
+    with pytest.raises(TypeError, match="uint8"):
+        compiled(x.astype(np.int32))
+    with pytest.raises(ValueError, match=r"\(batch, 12\)"):
+        compiled(x[:, :5])                   # wrong trailing dim
+    with pytest.raises(ValueError, match=r"\(batch, 12\)"):
+        compiled(x[0])                       # 1-D
+    with pytest.raises(TypeError):
+        compiled(x.tolist())                 # no dtype at all
+
+
+def test_verilog_artifact_not_callable():
+    compiled = netgen.compile_net(_random_net(7), backend="verilog")
+    with pytest.raises(TypeError, match="not callable"):
+        compiled(_images(7, 4, 12))
+
+
+# ---------------------------------------------------------------------------
+# NetServer: routing, slot batching, stacked dispatch
+# ---------------------------------------------------------------------------
+
+def test_netserver_routes_per_version():
+    server = netgen.NetServer(slot_capacity=16)
+    nets = {f"v{i}": _random_net(30 + i) for i in range(2)}
+    for name, net in nets.items():
+        server.register(name, net)
+    assert server.versions() == ["v0", "v1"]
+    x = _images(30, 10, 12)
+    for name, net in nets.items():
+        np.testing.assert_array_equal(server.predict(name, x), _ref(net, x))
+    assert server.dispatch_counts["single"] == 2
+    with pytest.raises(KeyError):
+        server.predict("nope", x)
+
+
+def test_netserver_slot_chunking():
+    """Batches beyond slot capacity are served in fixed-shape chunks."""
+    server = netgen.NetServer(slot_capacity=8)
+    net = _random_net(31)
+    server.register("v", net)
+    x = _images(31, 21, 12)                  # 3 chunks: 8 + 8 + 5
+    np.testing.assert_array_equal(server.predict("v", x), _ref(net, x))
+    assert server.predict("v", x[:0]).shape == (0,)
+
+
+def test_netserver_stacked_dispatch_4_versions_bit_exact():
+    """ISSUE acceptance: 4 model versions through ONE jitted multi-net
+    call, per-version outputs bit-exact vs each CompiledNet individually."""
+    cache = netgen.CompileCache()
+    server = netgen.NetServer(cache=cache, slot_capacity=16)
+    nets = {f"v{i}": _random_net(40 + i) for i in range(4)}
+    for name, net in nets.items():
+        server.register(name, net)
+    reqs = {name: _images(40 + i, 12, 12) for i, name in enumerate(nets)}
+    out = server.predict_many(reqs)
+    assert server.dispatch_counts["stacked"] == 1
+    assert server.dispatch_counts["fallback"] == 0
+    for name, net in nets.items():
+        individual = np.asarray(server.compiled_for(name)(
+            pad_slots(reqs[name], 16)[0]))[:reqs[name].shape[0]]
+        np.testing.assert_array_equal(out[name], individual, err_msg=name)
+        np.testing.assert_array_equal(out[name], _ref(net, reqs[name]))
+
+
+def test_netserver_stacked_pads_pruned_hidden_widths():
+    """Versions whose pruning left different hidden widths still stack:
+    the padded columns are constant-0 units (exact under strict step)."""
+    a = _random_net(50)
+    wz = [w.copy() for w in _random_net(51).weights]
+    wz[0][:, :4] = 0                         # 4 dead hidden units
+    b = quantize.QuantizedNet(weights=wz)
+    ca = netgen.compile_net(a)
+    cb = netgen.compile_net(b)
+    assert (netgen.as_layered_weights(ca.circuit)[0].shape[1]
+            != netgen.as_layered_weights(cb.circuit)[0].shape[1])
+    server = netgen.NetServer(slot_capacity=8)
+    server.register("a", a)
+    server.register("b", b)
+    x = _images(50, 8, 12)
+    out = server.predict_many({"a": x, "b": x})
+    assert server.dispatch_counts["stacked"] == 1
+    np.testing.assert_array_equal(out["a"], _ref(a, x))
+    np.testing.assert_array_equal(out["b"], _ref(b, x))
+
+
+def test_netserver_stacked_chunks_unequal_batches():
+    server = netgen.NetServer(slot_capacity=8)
+    nets = {name: _random_net(60 + i) for i, name in enumerate("ab")}
+    for name, net in nets.items():
+        server.register(name, net)
+    reqs = {"a": _images(60, 19, 12), "b": _images(61, 3, 12)}
+    out = server.predict_many(reqs)
+    for name, net in nets.items():
+        np.testing.assert_array_equal(out[name], _ref(net, reqs[name]))
+
+
+def test_netserver_pallas_stacked_dispatch():
+    server = netgen.NetServer(
+        backend="pallas", slot_capacity=8, warmup=False)
+    nets = {name: _random_net(70 + i, sizes=(10, 8, 4))
+            for i, name in enumerate("ab")}
+    for name, net in nets.items():
+        server.register(name, net)
+    x = _images(70, 6, 10)
+    out = server.predict_many({"a": x, "b": x})
+    assert server.dispatch_counts["stacked"] == 1
+    for name, net in nets.items():
+        np.testing.assert_array_equal(out[name], _ref(net, x), err_msg=name)
+
+
+def test_netserver_reregister_invalidates_stacked_dispatch():
+    """Re-registering a version must drop the stacked dispatch built for
+    the old weights — serving stale predictions silently is the failure
+    the generation counter guards against."""
+    server = netgen.NetServer(slot_capacity=8, warmup=False)
+    old = _random_net(100)
+    other = _random_net(101)
+    server.register("a", old)
+    server.register("b", other)
+    x = _images(100, 8, 12)
+    server.predict_many({"a": x, "b": x})            # builds the stacked fn
+    new = _random_net(102)
+    server.register("a", new)                        # same name, new weights
+    out = server.predict_many({"a": x, "b": x})
+    np.testing.assert_array_equal(out["a"], _ref(new, x))
+    np.testing.assert_array_equal(out["b"], _ref(other, x))
+    assert server.dispatch_counts["stacked"] == 2
+
+
+def test_netserver_fallback_on_incompatible_topologies():
+    server = netgen.NetServer(slot_capacity=8)
+    shallow = _random_net(80)                          # 12-9-4
+    deep = _random_net(81, sizes=(12, 8, 8, 4))        # different depth
+    server.register("s", shallow)
+    server.register("d", deep)
+    x = _images(80, 8, 12)
+    out = server.predict_many({"s": x, "d": x})
+    assert server.dispatch_counts["fallback"] == 1
+    assert server.dispatch_counts["stacked"] == 0
+    np.testing.assert_array_equal(out["s"], _ref(shallow, x))
+    np.testing.assert_array_equal(out["d"], _ref(deep, x))
+
+
+def test_netserver_shares_cache_across_servers():
+    """A second server over the same cache acquires predictors warm."""
+    cache = netgen.CompileCache()
+    net = _random_net(90)
+    netgen.NetServer(cache=cache, slot_capacity=8).register("v", net)
+    assert cache.stats().misses == 1
+    netgen.NetServer(cache=cache, slot_capacity=8).register("v", net)
+    st = cache.stats()
+    assert (st.misses, st.hits) == (1, 1)
+
+
+def test_netserver_rejects_bad_config():
+    with pytest.raises(ValueError):
+        netgen.NetServer(backend="verilog")
+    with pytest.raises(ValueError):
+        netgen.NetServer(slot_capacity=0)
+
+
+def test_stack_layered_weights_incompatibility_errors():
+    c = lambda seed, sizes: netgen.compile_net(  # noqa: E731
+        _random_net(seed, sizes=sizes)).circuit
+    with pytest.raises(ValueError, match="depth"):
+        netgen.stack_layered_weights([c(0, (8, 6, 4)), c(1, (8, 6, 6, 4))])
+    with pytest.raises(ValueError, match="input width"):
+        netgen.stack_layered_weights([c(0, (8, 6, 4)), c(1, (9, 6, 4))])
+    with pytest.raises(ValueError, match="class count"):
+        netgen.stack_layered_weights([c(0, (8, 6, 4)), c(1, (8, 6, 5))])
+    with pytest.raises(ValueError, match="no circuits"):
+        netgen.stack_layered_weights([])
+
+
+def test_pad_slots():
+    x = np.arange(6, dtype=np.uint8).reshape(3, 2)
+    padded, n = pad_slots(x, 5)
+    assert padded.shape == (5, 2) and n == 3
+    np.testing.assert_array_equal(padded[:3], x)
+    assert not padded[3:].any()
+    same, n_same = pad_slots(x, 3)
+    assert same is x and n_same == 3
+    with pytest.raises(ValueError):
+        pad_slots(x, 2)
