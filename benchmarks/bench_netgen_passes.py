@@ -33,11 +33,10 @@ def run(full: bool = False) -> list[str]:
     qnet = quantize.quantize(params)
 
     circuit = netgen.lower(qnet)
-    passes = (netgen.delete_zero_terms, netgen.prune_dead_units,
-              netgen.addend_rewrite)
+    spec = netgen.PipelineSpec.parse("zeros,prune,addends")
     t0 = time.time()
-    _, stats = netgen.run_pipeline(circuit, passes)
-    dt = (time.time() - t0) * 1e6 / len(passes)
+    _, stats = spec.run(circuit)
+    dt = (time.time() - t0) * 1e6 / len(spec.steps)
     for s in stats:
         rows.append(f"pass_{s.name}_terms,{dt:.0f},{s.before.terms}->{s.after.terms}")
         rows.append(f"pass_{s.name}_mults,0,{s.before.mults}->{s.after.mults}")
@@ -49,10 +48,23 @@ def run(full: bool = False) -> list[str]:
         w1=rng.integers(-4, 5, size=(32, 24)).astype(np.int32),
         w2=rng.integers(-4, 5, size=(24, 10)).astype(np.int32))
     t0 = time.time()
-    _, cse_stats = netgen.run_pipeline(netgen.lower(small), netgen.HW_PASSES)
+    _, cse_stats = netgen.PipelineSpec.coerce("hw").run(netgen.lower(small))
     cse = cse_stats[-1]
     rows.append(f"pass_{cse.name}_adds,{(time.time()-t0)*1e6:.0f},"
                 f"{cse.before.adds}->{cse.after.adds}")
+
+    # --- bucketed vs exhaustive CSE at 784-input scale ---------------------
+    wide = quantize.QuantizedNet(weights=[
+        rng.integers(-2, 3, size=(784, 4)).astype(np.int32),
+        rng.integers(-2, 3, size=(4, 10)).astype(np.int32)])
+    budget = 8 if full else 4
+    for mode in ("bucketed=true", "bucketed=false"):
+        t0 = time.time()
+        _, st = netgen.PipelineSpec.parse(
+            f"zeros,cse[budget={budget},{mode}]").run(netgen.lower(wide))
+        rows.append(
+            f"pass_cse_784_{mode.split('=')[1]},{(time.time()-t0)*1e6:.0f},"
+            f"adds_saved_{st[-1].adds_saved}")
 
     # --- backend throughput on the compiled circuit ------------------------
     x = jnp.asarray(xte)

@@ -4,12 +4,19 @@ Measures, in the `bench_throughput` CSV idiom:
 
   * cold compile (cache miss + first-trace warmup) vs warm predictor
     acquisition (cache hit) — ISSUE 2 acceptance: warm >= 100x faster
+  * cold PROCESS vs warm STORE (ISSUE 3): a fresh Session pointed at an
+    already-populated ArtifactStore directory loads the persisted
+    artifact instead of recompiling — the cross-process warm-start the
+    store exists for (load time vs full compile time, zero compiles
+    asserted)
   * multi-version stacked dispatch (M versions, ONE jitted call) vs
-    serving each CompiledNet individually, for M in 1..8 and batch
-    sizes 1..1024, with a bit-exactness check on every configuration
+    serving each compiled predictor individually, for M in 1..8 and
+    batch sizes 1..1024, with a bit-exactness check on every
+    configuration
 
-The full measurement set is also written as JSON (CI uploads it as an
-artifact):
+The JSON artifact (CI uploads it) additionally registers the `cost`
+target's Figure-7-style logic-cell estimates per pass for the benchmark
+net.
 
   PYTHONPATH=src python benchmarks/bench_netgen_serve.py [--full] \\
       [--json bench_netgen_serve.json]
@@ -18,6 +25,7 @@ from __future__ import annotations
 
 import argparse
 import json
+import tempfile
 import time
 
 import numpy as np
@@ -75,6 +83,44 @@ def run(full: bool = False, json_path: str | None = None) -> list[str]:
     rows.append(f"netgen_serve_cold_compile,{cold_s*1e6:.0f},{1.0/cold_s:.1f}")
     rows.append(f"netgen_serve_warm_acquire,{warm_s*1e6:.2f},{1.0/warm_s:.0f}")
     rows.append(f"netgen_serve_warm_vs_cold_speedup,{warm_s*1e6:.2f},{speedup:.0f}")
+
+    # -- cold process vs warm store (persisted-artifact load) ----------------
+    with tempfile.TemporaryDirectory() as store_dir:
+        cold_sess = netgen.Session(store=store_dir)
+        t0 = time.perf_counter()
+        art = cold_sess.compile(nets[0], target="jnp")
+        np.asarray(art(warm_batch))
+        cold_process_s = time.perf_counter() - t0
+
+        warm_sess = netgen.Session(store=store_dir)   # simulated new process
+        t0 = time.perf_counter()
+        warm_art = warm_sess.compile(nets[0], target="jnp")
+        np.asarray(warm_art(warm_batch))
+        warm_store_s = time.perf_counter() - t0
+        st = warm_sess.stats()
+        assert (st.compiles, st.store_hits) == (0, 1), vars(st)
+        assert np.array_equal(np.asarray(art(warm_batch)),
+                              np.asarray(warm_art(warm_batch)))
+        results["store"] = {
+            "cold_process_ms": cold_process_s * 1e3,
+            "warm_store_ms": warm_store_s * 1e3,
+            "speedup": cold_process_s / warm_store_s,
+            "warm_compiles": st.compiles,
+            "warm_store_hits": st.store_hits,
+        }
+        rows.append(f"netgen_serve_cold_process,{cold_process_s*1e6:.0f},"
+                    f"{1.0/cold_process_s:.1f}")
+        rows.append(f"netgen_serve_warm_store,{warm_store_s*1e6:.0f},"
+                    f"{1.0/warm_store_s:.1f}")
+        rows.append(f"netgen_serve_store_speedup,{warm_store_s*1e6:.0f},"
+                    f"{cold_process_s/warm_store_s:.1f}")
+
+    # -- Figure-7-style logic-cell estimates (cost target) -------------------
+    cost = netgen.compile_artifact(
+        nets[0], target="cost", pipeline="zeros,prune,addends").artifact
+    results["cost_fig7"] = cost.as_dict()
+    for stage, cells in cost.per_pass:
+        rows.append(f"netgen_cost_cells_{stage},0,{cells.total}")
 
     # -- stacked multi-net dispatch vs individual serving -------------------
     for m in m_versions:

@@ -8,6 +8,11 @@ pipeline with per-pass statistics, and pluggable backends (verilog /
 jnp / pallas / fused). See that package's docstring for the
 paper-section map.
 
+Since the Session redesign, `repro.netgen`'s front door is
+`netgen.Session(...).compile(net, target=..., pipeline=...)` — this shim
+(like the deprecated `netgen.compile_net`) routes through the package's
+default Session, so repeated shim calls reuse its in-memory tier.
+
 This module keeps the original entry points working, now for nets of any
 depth:
 

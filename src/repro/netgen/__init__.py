@@ -6,9 +6,12 @@ applying structural optimizations on the way. This package generalizes
 that script into a small compiler over a typed circuit IR, so the same
 rewrites serve arbitrary-depth nets and multiple execution targets:
 
-    frontend.lower          quantized N-layer stack -> circuit IR
-    passes.run_pipeline     exact structural rewrites + per-pass stats
-    backends.compile_circuit  IR -> artifact (jitted fn or Verilog text)
+    frontend.lower        quantized N-layer stack -> circuit IR
+    PipelineSpec          declarative pass pipeline ("zeros,prune,...")
+    Target registry       IR -> artifact (jitted fn, Verilog text,
+                          logic-cell cost report)
+    Session + ArtifactStore   compile once per content, persist across
+                          processes
 
 Paper-section map
 -----------------
@@ -21,41 +24,63 @@ Paper-section map
      (L4, ~50% cell cut)      passes.prune_dead_units (per-unit)
   §V.C multiplication-free -> passes.addend_rewrite (w*x -> |w| addends;
      (L5, 38k -> <16k cells)  after it, ops().mults == 0)
-  beyond the paper         -> passes.share_common_addends (adder CSE,
-                              the natural post-L5 hardware rewrite)
+  beyond the paper         -> passes.share_common_addends (adder CSE;
+                              `cse[bucketed=true]` scales it to the full
+                              784-input net), the `cost` target
+                              (Figure-7-style logic-cell estimates)
   Fig. 6 line 15 argmax    -> graph.Argmax, emitted as a priority mux
   Fig. 6/7 module shape    -> backends/verilog.py "legacy" style
                               (byte-compatible with the seed emitter)
 
 Quick use
 ---------
+Compilation goes through a `Session`: pick a target (an execution
+backend from the registry — `netgen.list_targets()` enumerates them)
+and a pipeline (a named or declarative `PipelineSpec`), get back an
+`Artifact` carrying the optimized circuit, per-pass stats, a logic-cell
+estimate, timings, and the artifact itself:
+
     from repro.core.quantize import quantize
     from repro import netgen
 
-    compiled = netgen.compile_net(quantize(params), backend="jnp")
-    preds = compiled(images_uint8)          # bit-exact vs predict_l3
-    print(compiled.report())                # per-pass savings
-    v = netgen.compile_net(qnet, backend="verilog",
-                           passes=netgen.HW_PASSES).artifact
+    session = netgen.Session(store=netgen.ArtifactStore("./netgen-store"))
+    art = session.compile(quantize(params), target="jnp")
+    preds = art(images_uint8)            # bit-exact vs predict_l3
+    print(art.report())                  # per-pass savings + cell count
+
+    verilog = session.compile(qnet, target="verilog", pipeline="hw").artifact
+    cost = session.compile(qnet, target="cost", pipeline="hw").artifact
+    print(cost.report())                 # per-pass cells vs paper Fig. 7
+
+Pipelines are declarative strings — `"zeros,prune"` (named: "default"),
+`"zeros,prune,addends,cse[budget=5000,bucketed=true]"` (named "hw" in
+its unbudgeted form) — that round-trip through `PipelineSpec.parse` and
+fingerprint stably, so they key the store. Because the store is
+content-addressed by `QuantizedNet.digest()` x
+`PipelineSpec.fingerprint()` x target, a SECOND process pointed at the
+same directory warm-starts every artifact without recompiling.
+
+`compile_net(...)` is the pre-Session entry point; it still works but
+is deprecated and routed through a default Session.
 
 Serving (compile cache + multi-version dispatch)
 ------------------------------------------------
 `repro.netgen.serve` makes the compile-per-model-then-serve workflow
-operational: compilations are content-addressed (sha256 of the quantized
-weights x pass pipeline x backend), so a model version is specialized
-exactly once per process, and a `NetServer` routes request batches —
-cross-model batches of stack-compatible versions run as ONE jitted
-multi-net dispatch:
+operational: `CompileCache` is the Session's in-memory tier (same
+content addressing, LRU, thread-safe), and a `NetServer` routes request
+batches — cross-model batches of stack-compatible versions run as ONE
+jitted multi-net dispatch:
 
-    cache = netgen.CompileCache(capacity=16)
-    server = netgen.NetServer(cache=cache, slot_capacity=64)
-    server.register("v1", qnet)              # miss: compiles, ~ms
-    server.register("v1-replica", qnet)      # hit: same CompiledNet, ~us
+    session = netgen.Session(store=netgen.ArtifactStore(cache_dir))
+    server = netgen.NetServer(session=session, slot_capacity=64)
+    server.register("v1", qnet)              # compile (or store load)
+    server.register("v1-replica", qnet)      # memory hit, ~us
     out = server.predict_many({"v1": imgs_a, "v2": imgs_b})
-    print(cache.stats().row())               # hits/misses/compile time
+    print(session.stats().row())             # hits/misses/compile time
 
-See `benchmarks/bench_netgen_serve.py` for the cold-vs-warm and
-stacked-vs-individual numbers.
+See `benchmarks/bench_netgen_serve.py` for cold-vs-warm,
+cold-process-vs-warm-store, and stacked-vs-individual numbers, and the
+top-level README.md for the end-to-end quickstart.
 
 `repro.core.netgen` remains as a thin compatibility shim with the old
 `specialize` / `emit_verilog` / `prune` / `stats` names.
@@ -63,55 +88,56 @@ stacked-vs-individual numbers.
 from __future__ import annotations
 
 import dataclasses
-from typing import Sequence
-
-import numpy as np
+import warnings
 
 from repro.netgen import backends
+from repro.netgen.backends.cost import CellCounts, CostReport
 from repro.netgen.frontend import lower
 from repro.netgen.graph import (
     Argmax, Circuit, InputCompare, IrregularCircuitError, SignStep, Term,
-    WeightedSum, as_layered_weights, evaluate, node_widths,
+    WeightedSum, as_layered_weights, circuit_from_arrays, circuit_to_arrays,
+    evaluate, node_widths,
 )
 from repro.netgen.passes import (
     DEFAULT_PASSES, HW_PASSES, CircuitOps, Pass, PassStats, addend_rewrite,
     delete_zero_terms, ops, prune_dead_units, run_pipeline,
     share_common_addends,
 )
+from repro.netgen.pipeline import (
+    PipelineSpec, list_passes, list_pipelines, register_pass,
+    register_pipeline,
+)
+from repro.netgen.session import (
+    Artifact, ArtifactStore, Session, compile_artifact,
+)
+from repro.netgen.session import _validate_batch  # noqa: F401  (serving)
+from repro.netgen.targets import (
+    Target, list_targets, register_target, resolve_target,
+)
 
 __all__ = [
-    "Argmax", "CacheKey", "Circuit", "CircuitOps", "CompileCache",
-    "CompiledNet", "DEFAULT_PASSES", "HW_PASSES", "InputCompare",
-    "IrregularCircuitError", "NetServer", "Pass", "PassStats", "SignStep",
-    "Term", "WeightedSum", "addend_rewrite", "as_layered_weights",
-    "backends", "cached_compile_net", "compile_net", "delete_zero_terms",
-    "emit_verilog", "evaluate", "lower", "node_widths", "ops",
-    "prune_dead_units", "run_pipeline", "serve", "share_common_addends",
-    "specialize", "stack_layered_weights",
+    "Argmax", "Artifact", "ArtifactStore", "CacheKey", "CellCounts",
+    "Circuit", "CircuitOps", "CompileCache", "CompiledNet", "CostReport",
+    "DEFAULT_PASSES", "HW_PASSES", "InputCompare", "IrregularCircuitError",
+    "NetServer", "Pass", "PassStats", "PipelineSpec", "Session", "SignStep",
+    "Target", "Term", "WeightedSum", "addend_rewrite", "as_layered_weights",
+    "backends", "cached_compile_net", "circuit_from_arrays",
+    "circuit_to_arrays", "compile_artifact", "compile_net",
+    "default_session", "delete_zero_terms", "emit_verilog", "evaluate",
+    "list_passes", "list_pipelines", "list_targets", "lower", "node_widths",
+    "ops", "prune_dead_units", "register_pass", "register_pipeline",
+    "register_target", "resolve_target", "run_pipeline", "serve",
+    "share_common_addends", "specialize", "stack_layered_weights",
 ]
-
-
-def _validate_batch(x, n_inputs: int) -> None:
-    """Reject non-uint8 or wrongly-shaped predictor input with a clear
-    error instead of silently mis-binarizing (a float image batch would
-    compare scaled values against the integer pixel threshold)."""
-    dtype = getattr(x, "dtype", None)
-    if dtype is None or np.dtype(dtype) != np.uint8:
-        raise TypeError(
-            f"compiled predictors take raw uint8 images, got dtype={dtype!r} "
-            "(binarization happens inside the circuit; do not pre-scale)")
-    shape = tuple(getattr(x, "shape", ()))
-    if len(shape) != 2 or shape[1] != n_inputs:
-        raise ValueError(
-            f"expected a (batch, {n_inputs}) uint8 image batch, "
-            f"got shape {shape}")
 
 
 @dataclasses.dataclass(frozen=True)
 class CompiledNet:
-    """Result of one end-to-end compilation: the optimized circuit, the
-    per-pass statistics, and the backend artifact (a jitted callable for
-    jnp/pallas/fused, the module source string for verilog)."""
+    """Result of one end-to-end compilation through the deprecated
+    `compile_net` shim: the optimized circuit, the per-pass statistics,
+    and the backend artifact (a jitted callable for jnp/pallas/fused,
+    the module source string for verilog). New code should hold the
+    richer `Artifact` a `Session.compile` returns."""
     circuit: Circuit
     pass_stats: tuple[PassStats, ...]
     backend: str
@@ -129,51 +155,82 @@ class CompiledNet:
         return "\n".join(s.row() for s in self.pass_stats)
 
 
+_DEFAULT_SESSION: Session | None = None
+
+
+def default_session() -> Session:
+    """The process-wide Session the deprecated entry points route
+    through (memory tier only; configure your own Session for a
+    persistent ArtifactStore)."""
+    global _DEFAULT_SESSION
+    if _DEFAULT_SESSION is None:
+        _DEFAULT_SESSION = Session(capacity=16)
+    return _DEFAULT_SESSION
+
+
 def compile_net(
     net,
     *,
     backend: str = "jnp",
-    passes: Sequence[Pass] | None = None,
+    passes=None,
     input_threshold: int | None = None,
     **backend_opts,
 ) -> CompiledNet:
-    """Frontend -> pass pipeline -> backend, in one call.
+    """Deprecated: use `Session.compile(net, target=..., pipeline=...)`.
 
-    `net` is anything `frontend.lower` accepts (a QuantizedNet of any
-    depth, an object with `.weights`, or a list of integer matrices).
-    `passes` defaults to DEFAULT_PASSES (exact rewrites that keep the
-    layered form every backend supports); pass HW_PASSES for the full
-    multiplication-free + adder-sharing hardware pipeline (verilog only).
+    Kept as a thin shim routed through the default Session. `net` is
+    anything `frontend.lower` accepts (a QuantizedNet of any depth, an
+    object with `.weights`, or a list of integer matrices). `passes`
+    accepts the old pass-callable sequences as well as PipelineSpec /
+    spec strings; None means the "default" pipeline. Pass sequences a
+    `PipelineSpec` cannot represent (closures, repeated passes) still
+    compile — directly and uncached, exactly as the pre-Session
+    `compile_net` did.
     """
-    circuit = lower(net, input_threshold=input_threshold)
-    circuit, stats = run_pipeline(
-        circuit, DEFAULT_PASSES if passes is None else passes)
-    artifact = backends.compile_circuit(circuit, backend, **backend_opts)
+    warnings.warn(
+        "netgen.compile_net is deprecated; use netgen.Session(...).compile("
+        "net, target=..., pipeline=...) — see the repro.netgen docstring",
+        DeprecationWarning, stacklevel=2)
+    try:
+        spec = PipelineSpec.coerce(passes)
+    except ValueError:
+        # unrepresentable legacy pipeline: compile the old way (no cache)
+        circuit = lower(net, input_threshold=input_threshold)
+        circuit, stats = run_pipeline(circuit, passes)
+        artifact = backends.compile_circuit(circuit, backend, **backend_opts)
+        return CompiledNet(circuit=circuit, pass_stats=stats,
+                           backend=backend.partition("[")[0],
+                           artifact=artifact)
+    art = default_session().compile(
+        net, target=backend, pipeline=spec,
+        input_threshold=input_threshold, **backend_opts)
     return CompiledNet(
-        circuit=circuit, pass_stats=stats, backend=backend, artifact=artifact)
+        circuit=art.circuit, pass_stats=art.pass_stats,
+        backend=art.backend, artifact=art.artifact)
 
 
-def specialize(net, *, backend: str = "jnp", **kw):
+def specialize(net, *, backend: str = "jnp", passes=None, pipeline=None, **kw):
     """Compile and return just the jitted predictor (old netgen name)."""
-    return compile_net(net, backend=backend, **kw).artifact
+    return default_session().compile(
+        net, target=backend,
+        pipeline=pipeline if pipeline is not None else passes, **kw).artifact
 
 
 def emit_verilog(net, *, addend: bool = True, module_name: str = "nn_inference",
-                 passes: Sequence[Pass] | None = None) -> str:
+                 passes=None) -> str:
     """Compile and return just the Verilog source (old netgen name).
 
     Matches the seed emitter's behavior: zero terms are always dropped at
     generation time; `addend=True` additionally applies the L5 rewrite.
     """
     if passes is None:
-        passes = (delete_zero_terms, addend_rewrite) if addend \
-            else (delete_zero_terms,)
-    return compile_net(
-        net, backend="verilog", passes=passes,
+        passes = "zeros,addends" if addend else "zeros"
+    return default_session().compile(
+        net, target="verilog", pipeline=passes,
         module_name=module_name, addend=addend).artifact
 
 
-# Serving layer (imported last: it needs CompiledNet / compile_net above).
+# Serving layer (imported last: it builds on the session machinery).
 from repro.netgen import serve  # noqa: E402
 from repro.netgen.serve import (  # noqa: E402
     CacheKey, CompileCache, NetServer, cached_compile_net,

@@ -1,4 +1,4 @@
-"""Pluggable netgen backends.
+"""Pluggable netgen backends, enumerated by the Target registry.
 
 A backend turns an optimized circuit into an artifact:
 
@@ -6,47 +6,52 @@ A backend turns an optimized circuit into an artifact:
   pallas   — per-layer binary_matvec TPU kernel chain
   fused    — single-launch whole-net Pallas kernel (2-layer only)
   verilog  — the paper's combinational module source (string)
+  cost     — IR walk -> logic-cell estimate vs the paper's Figure 7
 
-`compile_circuit(circuit, backend)` dispatches by name; callable
-artifacts map uint8 image batches to predicted class indices.
+`compile_circuit(circuit, backend)` dispatches by name — `backend` may
+carry bracketed options ("verilog[style=legacy]", "pallas[interpret]")
+— through `repro.netgen.targets`, the registry that owns each target's
+entry point, artifact kind, declared options, and multi-net form.
+Callable artifacts map uint8 image batches to predicted class indices.
 
-The jnp and pallas backends additionally offer a *multi-net* form
+The jnp and pallas targets additionally offer a *multi-net* form
 (`compile_multi`): M versions' reconstructed weight matrices, stacked
 along a model axis, become one jitted (M, B, n_in) -> (M, B) dispatch —
 the cross-model batching used by `repro.netgen.serve.NetServer`.
 """
 from __future__ import annotations
 
+from repro.netgen.backends.cost import CellCounts, CostReport, logic_cells
 from repro.netgen.backends.jnp import compile_jnp, compile_jnp_multi
 from repro.netgen.backends.pallas import (
     compile_fused, compile_pallas, compile_pallas_multi,
 )
 from repro.netgen.backends.verilog import emit_verilog
+from repro.netgen.targets import (
+    Target, get_target, list_targets, register_target, resolve_target,
+)
 
-BACKENDS = ("jnp", "pallas", "fused", "verilog")
-MULTI_BACKENDS = ("jnp", "pallas")
+BACKENDS = tuple(t.name for t in list_targets())
+MULTI_BACKENDS = tuple(
+    t.name for t in list_targets() if t.compile_multi is not None)
 
 
 def compile_circuit(circuit, backend: str = "jnp", **opts):
-    """Compile an IR circuit with the named backend. Extra options are
-    backend-specific (e.g. module_name/style/addend for verilog)."""
-    if backend == "jnp":
-        return compile_jnp(circuit, **opts)
-    if backend == "pallas":
-        return compile_pallas(circuit, **opts)
-    if backend == "fused":
-        return compile_fused(circuit, **opts)
-    if backend == "verilog":
-        return emit_verilog(circuit, **opts)
-    raise ValueError(f"unknown backend {backend!r} (have {BACKENDS})")
+    """Compile an IR circuit with the named target. Extra options are
+    target-specific (declared in the registry; e.g. module_name/style/
+    addend for verilog, interpret for pallas/fused)."""
+    target, merged = resolve_target(backend, opts)
+    return target.compile(circuit, **merged)
 
 
-def compile_multi(stacked_ws, input_threshold: int, backend: str = "jnp"):
+def compile_multi(stacked_ws, input_threshold: int, backend: str = "jnp",
+                  **opts):
     """Compile M stacked weight sets into one jitted multi-net dispatch:
-    uint8 (M, B, n_in) -> predictions (M, B)."""
-    if backend == "jnp":
-        return compile_jnp_multi(stacked_ws, input_threshold)
-    if backend == "pallas":
-        return compile_pallas_multi(stacked_ws, input_threshold)
-    raise ValueError(
-        f"backend {backend!r} has no multi-net dispatch (have {MULTI_BACKENDS})")
+    uint8 (M, B, n_in) -> predictions (M, B). `backend` accepts bracket
+    options like the single-net form (e.g. "pallas[interpret=false]")."""
+    target, merged = resolve_target(backend, opts)
+    if target.compile_multi is None:
+        raise ValueError(
+            f"target {target.name!r} has no multi-net dispatch "
+            f"(have {MULTI_BACKENDS})")
+    return target.compile_multi(stacked_ws, input_threshold, **merged)

@@ -9,6 +9,9 @@ literals, and every layer is the masked column-sum identity
 realized as `where` + `sum` — adds only, no multiplies, no MXU. Works
 for any depth. This is the oracle backend the pallas kernels are
 checked against.
+
+Registered as the `jnp` target (kind "callable", no options) with
+`compile_jnp_multi` as its multi-net form; see `repro.netgen.targets`.
 """
 from __future__ import annotations
 

@@ -20,17 +20,23 @@ from repro.netgen.graph import Circuit, IrregularCircuitError, as_layered_weight
 __all__ = ["compile_pallas", "compile_pallas_multi", "compile_fused"]
 
 
-def compile_pallas(circuit: Circuit):
-    """Return a jitted fn chaining one binary_matmul launch per layer."""
+def compile_pallas(circuit: Circuit, *, interpret: bool | None = None):
+    """Return a jitted fn chaining one binary_matmul launch per layer.
+
+    `interpret` overrides the kernel ops' container default (interpret
+    mode on CPU); pass `pallas[interpret=false]` on a real TPU to lower
+    through Mosaic.
+    """
     from repro.kernels.binary_matvec import ops as bmv
 
+    kw = {} if interpret is None else {"interpret": interpret}
     ws = [jnp.asarray(w, jnp.int32) for w in as_layered_weights(circuit)]
     thr = circuit.input_threshold
 
     def matmul(a, w):
         if w.shape[0] == 0:  # fully-pruned predecessor layer: constant 0
             return jnp.zeros((a.shape[0], w.shape[1]), jnp.int32)
-        return bmv.binary_matmul(a, w)
+        return bmv.binary_matmul(a, w, **kw)
 
     @jax.jit
     def predict(x_uint8):
@@ -42,7 +48,8 @@ def compile_pallas(circuit: Circuit):
     return predict
 
 
-def compile_pallas_multi(stacked_ws, input_threshold: int):
+def compile_pallas_multi(stacked_ws, input_threshold: int,
+                         *, interpret: bool | None = None):
     """Multi-net dispatch through the binary_matvec kernel chain.
 
     `stacked_ws` is a list of (M, fan_in, fan_out) int arrays (padded and
@@ -50,16 +57,19 @@ def compile_pallas_multi(stacked_ws, input_threshold: int):
     axis is swept with `lax.map` — a scan whose body is the per-layer
     kernel chain, so the whole M-version batch is one jitted dispatch and
     each version's weights stream through the same kernel traces.
+    `interpret` as in `compile_pallas` (the single-version path and the
+    stacked path must honor the same target options).
     """
     from repro.kernels.binary_matvec import ops as bmv
 
+    kw = {} if interpret is None else {"interpret": interpret}
     ws = [jnp.asarray(w, jnp.int32) for w in stacked_ws]
     thr = int(input_threshold)
 
     def matmul(a, w):
         if w.shape[0] == 0:  # fully-pruned predecessor layer: constant 0
             return jnp.zeros((a.shape[0], w.shape[1]), jnp.int32)
-        return bmv.binary_matmul(a, w)
+        return bmv.binary_matmul(a, w, **kw)
 
     def one_version(slices):
         x, *wm = slices
@@ -75,10 +85,11 @@ def compile_pallas_multi(stacked_ws, input_threshold: int):
     return predict
 
 
-def compile_fused(circuit: Circuit):
+def compile_fused(circuit: Circuit, *, interpret: bool | None = None):
     """Whole-net single Pallas launch; 2-layer circuits only."""
     from repro.kernels.fused_mlp import ops as fused
 
+    kw = {} if interpret is None else {"interpret": interpret}
     ws = as_layered_weights(circuit)
     if len(ws) != 2:
         raise IrregularCircuitError(
@@ -89,6 +100,6 @@ def compile_fused(circuit: Circuit):
 
     @jax.jit
     def predict(x_uint8):
-        return fused.fused_mlp_predict(x_uint8, w1, w2, threshold=thr)
+        return fused.fused_mlp_predict(x_uint8, w1, w2, threshold=thr, **kw)
 
     return predict

@@ -15,6 +15,10 @@ Two emission styles:
 regular 2-layer form, preserving the golden artifact, and generic
 otherwise. Continuous assignments are order-independent, so emission
 order is cosmetic — we keep the paper's grouping either way.
+
+Registered as the `verilog` target (kind "text"; declared options
+`module_name`, `style`, `addend` — addressable as
+`verilog[style=legacy]` etc.); see `repro.netgen.targets`.
 """
 from __future__ import annotations
 

@@ -28,6 +28,27 @@ from repro.netgen.graph import (
 DEFAULT_INPUT_THRESHOLD = 128  # paper §III.B pixel cutoff
 
 
+def _validate_threshold(thr) -> int:
+    """The pixel threshold must be an integer inside the uint8 domain
+    where `pixel > threshold` is a real comparator: thr >= 255 can never
+    fire and thr < 0 always fires, so every InputCompare lowered from
+    such a value would be a silent constant — reject loudly instead.
+    """
+    if isinstance(thr, bool) or not isinstance(
+            thr, (int, np.integer)):
+        raise TypeError(
+            f"input_threshold must be an integer, got {thr!r} "
+            f"({type(thr).__name__}); pixels are compared as raw uint8")
+    thr = int(thr)
+    if not 0 <= thr < 255:
+        raise ValueError(
+            f"input_threshold {thr} is outside the uint8 comparator "
+            "domain [0, 255): `pixel > 255` can never fire and a negative "
+            "threshold always fires, so the lowered InputCompare would be "
+            "a constant (the paper's cutoff is 128)")
+    return thr
+
+
 def _extract_weights(net, input_threshold):
     if hasattr(net, "weights"):
         ws = [np.asarray(w) for w in net.weights]
@@ -41,6 +62,7 @@ def _extract_weights(net, input_threshold):
         thr = getattr(net, "input_threshold", None)
     if thr is None:
         thr = DEFAULT_INPUT_THRESHOLD
+    thr = _validate_threshold(thr)
     if not ws:
         raise ValueError("no weight matrices to lower")
     for w in ws:

@@ -253,6 +253,97 @@ def as_layered_weights(circuit: Circuit) -> list[np.ndarray]:
 
 
 # ---------------------------------------------------------------------------
+# Array codec (for the persistent ArtifactStore)
+# ---------------------------------------------------------------------------
+
+_KIND_CODES = {InputCompare: 0, WeightedSum: 1, SignStep: 2, Argmax: 3}
+
+
+def circuit_to_arrays(circuit: Circuit) -> dict[str, np.ndarray]:
+    """Encode a circuit (regular OR irregular DAG) as a flat dict of
+    integer arrays — the on-disk form `repro.netgen.session.ArtifactStore`
+    persists via `np.savez`. Compact (terms are one (host_row, weight,
+    src) int64 triple each, not a Python object) and code-free (no
+    pickle: the store stays loadable across refactors and trustworthy
+    across processes). `circuit_from_arrays` is the exact inverse.
+    """
+    kinds, ids = [], []
+    cmp_pixel, cmp_thr = [], []
+    sum_layer, sum_nterms, term_weight, term_src = [], [], [], []
+    step_src, argmax_srcs, argmax_nsrcs = [], [], []
+    for n in circuit.nodes:
+        kinds.append(_KIND_CODES[type(n)])
+        ids.append(n.id)
+        if isinstance(n, InputCompare):
+            cmp_pixel.append(n.pixel)
+            cmp_thr.append(n.threshold)
+        elif isinstance(n, WeightedSum):
+            sum_layer.append(n.layer)
+            sum_nterms.append(len(n.terms))
+            for t in n.terms:
+                term_weight.append(t.weight)
+                term_src.append(t.src)
+        elif isinstance(n, SignStep):
+            step_src.append(n.src)
+        else:
+            argmax_nsrcs.append(len(n.srcs))
+            argmax_srcs.extend(n.srcs)
+    i64 = lambda xs: np.asarray(xs, dtype=np.int64)  # noqa: E731
+    return {
+        "header": i64([circuit.n_inputs, circuit.input_threshold,
+                       circuit.output]),
+        "kinds": i64(kinds), "ids": i64(ids),
+        "cmp_pixel": i64(cmp_pixel), "cmp_thr": i64(cmp_thr),
+        "sum_layer": i64(sum_layer), "sum_nterms": i64(sum_nterms),
+        "term_weight": i64(term_weight), "term_src": i64(term_src),
+        "step_src": i64(step_src),
+        "argmax_nsrcs": i64(argmax_nsrcs), "argmax_srcs": i64(argmax_srcs),
+    }
+
+
+def circuit_from_arrays(arrays) -> Circuit:
+    """Rebuild a circuit from `circuit_to_arrays` output (or an opened
+    `np.load` of it). Validates the result before returning it."""
+    a = {k: np.asarray(arrays[k]) for k in (
+        "header", "kinds", "ids", "cmp_pixel", "cmp_thr", "sum_layer",
+        "sum_nterms", "term_weight", "term_src", "step_src",
+        "argmax_nsrcs", "argmax_srcs")}
+    n_inputs, input_threshold, output = (int(v) for v in a["header"])
+    nodes: list[Node] = []
+    ci = si = ti = pi = ai = aj = 0
+    for kind, nid in zip(a["kinds"].tolist(), a["ids"].tolist()):
+        if kind == 0:
+            nodes.append(InputCompare(
+                id=nid, pixel=int(a["cmp_pixel"][ci]),
+                threshold=int(a["cmp_thr"][ci])))
+            ci += 1
+        elif kind == 1:
+            k = int(a["sum_nterms"][si])
+            terms = tuple(
+                Term(weight=int(a["term_weight"][ti + j]),
+                     src=int(a["term_src"][ti + j])) for j in range(k))
+            nodes.append(WeightedSum(
+                id=nid, terms=terms, layer=int(a["sum_layer"][si])))
+            si += 1
+            ti += k
+        elif kind == 2:
+            nodes.append(SignStep(id=nid, src=int(a["step_src"][pi])))
+            pi += 1
+        elif kind == 3:
+            k = int(a["argmax_nsrcs"][ai])
+            nodes.append(Argmax(id=nid, srcs=tuple(
+                int(s) for s in a["argmax_srcs"][aj:aj + k])))
+            ai += 1
+            aj += k
+        else:
+            raise ValueError(f"unknown node kind code {kind}")
+    circuit = Circuit(n_inputs=n_inputs, input_threshold=input_threshold,
+                      nodes=tuple(nodes), output=output)
+    circuit.validate()
+    return circuit
+
+
+# ---------------------------------------------------------------------------
 # Reference interpreter (the semantic arbiter for every backend)
 # ---------------------------------------------------------------------------
 

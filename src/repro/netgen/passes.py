@@ -173,7 +173,8 @@ def addend_rewrite(circuit: Circuit) -> Circuit:
     return dataclasses.replace(circuit, nodes=nodes)
 
 
-def share_common_addends(circuit: Circuit, *, max_new_nodes: int = 4096) -> Circuit:
+def share_common_addends(circuit: Circuit, *, max_new_nodes: int = 4096,
+                         bucketed: bool = False) -> Circuit:
     """Greedy two-term CSE: extract the most frequent addend pair into a
     shared sub-sum until no pair repeats (or max_new_nodes is hit).
 
@@ -183,9 +184,19 @@ def share_common_addends(circuit: Circuit, *, max_new_nodes: int = 4096) -> Circ
     one in the shared node), so the loop terminates. Exact: the shared
     node computes precisely the sub-sum it replaces.
 
-    Cost is O(sum_nodes * terms^2) per round — intended for post-addend
-    hardware circuits of moderate size, not the raw 784-input net.
-    The result is an irregular DAG (see graph.IrregularCircuitError).
+    The default (exhaustive) candidate search is O(sum_nodes * terms^2)
+    per round and extracts ONE pair per round — intended for post-addend
+    hardware circuits of moderate size. `bucketed=True` selects the
+    scalable variant (ROADMAP "Scale" item): per node, candidate pairs
+    are indexed by their (sign, magnitude) weight bucket — only terms
+    with the SAME signed weight pair up — so one counting sweep costs
+    ~O(terms * bucket) instead of O(terms^2), and every pair that repeats
+    is extracted in that same sweep (batch extraction) instead of one per
+    round. Same-weight pairs are exactly the ones the addend form
+    produces en masse, so on L5 circuits the restriction loses little
+    sharing while making the full 784-input net tractable. Still an
+    exact rewrite; still an irregular DAG result (see
+    graph.IrregularCircuitError).
     """
     nodes = list(circuit.nodes)
     next_id = max(n.id for n in nodes) + 1
@@ -194,34 +205,60 @@ def share_common_addends(circuit: Circuit, *, max_new_nodes: int = 4096) -> Circ
     while created < max_new_nodes:
         counts: Counter = Counter()
         for n in nodes:
-            if isinstance(n, WeightedSum):
-                distinct = sorted(set(n.terms), key=lambda t: (t.src, t.weight))
-                for i in range(len(distinct)):
-                    for j in range(i + 1, len(distinct)):
-                        counts[(distinct[i], distinct[j])] += 1
-        if not counts:
-            break
-        (ta, tb), k = counts.most_common(1)[0]
-        if k < 2:
+            if not isinstance(n, WeightedSum):
+                continue
+            distinct = sorted(set(n.terms), key=lambda t: (t.src, t.weight))
+            if bucketed:
+                buckets: dict[int, list[Term]] = {}
+                for t in distinct:
+                    buckets.setdefault(t.weight, []).append(t)
+                groups = buckets.values()
+            else:
+                groups = (distinct,)
+            for group in groups:
+                for i in range(len(group)):
+                    for j in range(i + 1, len(group)):
+                        counts[(group[i], group[j])] += 1
+
+        if bucketed:
+            repeated = [(pair, k) for pair, k in counts.most_common()
+                        if k >= 2]
+        else:
+            # classic greedy: one pair per round (most_common(1) is a
+            # heap scan, not a full sort of the O(terms^2) counter)
+            repeated = [(pair, k) for pair, k in counts.most_common(1)
+                        if k >= 2]
+        if not repeated:
             break
 
-        hosts = [
-            i for i, n in enumerate(nodes)
-            if isinstance(n, WeightedSum) and ta in n.terms and tb in n.terms]
-        shared = WeightedSum(
-            id=next_id, terms=(ta, tb),
-            layer=min(nodes[i].layer for i in hosts))
-        next_id += 1
-        created += 1
+        progressed = False
+        for (ta, tb), _ in repeated:
+            if created >= max_new_nodes:
+                break
+            # membership may have changed within this sweep — recheck
+            hosts = [
+                i for i, n in enumerate(nodes)
+                if isinstance(n, WeightedSum)
+                and ta in n.terms and tb in n.terms]
+            if len(hosts) < 2:
+                continue
+            shared = WeightedSum(
+                id=next_id, terms=(ta, tb),
+                layer=min(nodes[i].layer for i in hosts))
+            next_id += 1
+            created += 1
+            progressed = True
 
-        for i in hosts:
-            n = nodes[i]
-            kept = list(n.terms)
-            kept.remove(ta)
-            kept.remove(tb)
-            kept.append(Term(weight=1, src=shared.id))
-            nodes[i] = dataclasses.replace(n, terms=tuple(kept))
-        nodes.insert(min(hosts), shared)
+            for i in hosts:
+                n = nodes[i]
+                kept = list(n.terms)
+                kept.remove(ta)
+                kept.remove(tb)
+                kept.append(Term(weight=1, src=shared.id))
+                nodes[i] = dataclasses.replace(n, terms=tuple(kept))
+            nodes.insert(min(hosts), shared)
+        if not progressed:
+            break
 
     out = dataclasses.replace(circuit, nodes=tuple(nodes))
     out.validate()

@@ -5,14 +5,16 @@ expensive step is specializing a trained net into a fixed circuit; the
 cheap step is running it. This module makes that split operational, the
 ROADMAP's "Serving specialized programs" item:
 
-  CompileCache — a content-addressed cache over `netgen.compile_net`.
-      The key is the sha256 digest of the quantized weights + input
-      threshold (`repro.core.quantize.weights_digest`) crossed with the
-      pass pipeline, backend name, and backend options. A hit returns the
-      *same* `CompiledNet` object that was compiled before; a miss
-      compiles, records wall-clock compile time, and LRU-evicts past a
-      fixed capacity. Thread-safe (one lock; concurrent requests for the
-      same key compile exactly once).
+  CompileCache — the in-memory tier of the Session API. The key is the
+      sha256 digest of the quantized weights + input threshold
+      (`repro.core.quantize.weights_digest`) crossed with the canonical
+      `PipelineSpec` and `Target` strings. A hit returns the *same*
+      `Artifact` object that was compiled before; a miss consults the
+      optional persistent `ArtifactStore` (so a second process
+      warm-starts without recompiling), then compiles, records
+      wall-clock compile time, persists, and LRU-evicts past a fixed
+      capacity. Thread-safe (one lock; concurrent requests for the same
+      key compile exactly once).
 
   NetServer — a multi-version predictor server in the style of
       `repro.serve.engine`: fixed-capacity slot batching (one live jit
@@ -20,7 +22,11 @@ ROADMAP's "Serving specialized programs" item:
       *cross-model* batching: versions whose circuits reconstruct to
       compatible layered weights are stacked along a model axis
       (`stack_layered_weights`) and served by one jitted multi-net
-      dispatch (`backends.compile_multi`) — M versions, one XLA call.
+      dispatch (the target's `compile_multi` form) — M versions, one
+      XLA call. A NetServer can be built over a `Session`
+      (`NetServer(session=Session(store=...))`) to share its memory
+      tier and persistent store, or over legacy backend/passes/cache
+      keywords.
 
 Hidden-width padding used for stacking is exact: a zero-padded column is
 an empty accumulator, and under the strict step semantics step(0) = 0,
@@ -30,7 +36,6 @@ zero-padded too).
 from __future__ import annotations
 
 import dataclasses
-import functools
 import threading
 import time
 from collections import OrderedDict
@@ -39,13 +44,15 @@ from typing import Sequence
 import numpy as np
 
 from repro.core.quantize import weights_digest
-from repro.netgen import CompiledNet, _validate_batch, compile_net
-from repro.netgen import backends
 from repro.netgen.frontend import _extract_weights
 from repro.netgen.graph import (
     Circuit, IrregularCircuitError, as_layered_weights,
 )
-from repro.netgen.passes import DEFAULT_PASSES, Pass
+from repro.netgen.pipeline import PipelineSpec
+from repro.netgen.session import (
+    Artifact, ArtifactStore, _validate_batch, artifact_key, compile_resolved,
+)
+from repro.netgen.targets import resolve_target, target_string
 from repro.serve.slots import pad_slots
 
 __all__ = [
@@ -59,61 +66,59 @@ __all__ = [
 # ---------------------------------------------------------------------------
 
 def _pass_fingerprint(p) -> str:
-    """Stable name for one pass in the cache key. functools.partial keeps
-    the inner name plus its bound keywords, so a budgeted variant of a
-    pass does not alias the unbudgeted one.
+    """Canonical spec item for one pass callable (registry name plus
+    bracketed options, e.g. `cse[budget=2]`). `functools.partial` of a
+    registered pass maps its bound keywords back to declared options, so
+    a budgeted variant does not alias the unbudgeted one.
 
-    Lambdas and closures are refused: their qualified name does not cover
-    their captured state, so two different ones would alias to the same
-    key and the cache would hand back a predictor compiled with the OTHER
-    pipeline. Spell parameterized passes as functools.partial of a named
-    module-level function instead.
+    Lambdas and closures are refused (by `PipelineSpec.from_passes`):
+    their qualified name does not cover their captured state, so two
+    different ones would alias to the same key and the cache would hand
+    back a predictor compiled with the OTHER pipeline. Spell
+    parameterized passes declaratively (`"cse[budget=5]"`) or as
+    functools.partial of a registered module-level function.
     """
-    if isinstance(p, functools.partial):
-        kw = ",".join(f"{k}={v!r}" for k, v in sorted(p.keywords.items()))
-        return f"{_pass_fingerprint(p.func)}({kw})"
-    name = getattr(p, "__qualname__", None) or getattr(p, "__name__", None)
-    if not name:
-        raise ValueError(f"cannot content-address pass {p!r}: it has no name")
-    if "<lambda>" in name or "<locals>" in name:
-        raise ValueError(
-            f"cannot content-address pass {name!r}: lambdas/closures have no "
-            "stable fingerprint — use functools.partial of a named function")
-    return f"{getattr(p, '__module__', '?')}.{name}"
+    return PipelineSpec.from_passes([p]).spec_string()
 
 
 @dataclasses.dataclass(frozen=True)
 class CacheKey:
     """What a compiled predictor is a function of: weight content digest,
-    pass pipeline, backend, and backend options."""
+    target name, canonical pipeline spec, and target options."""
     digest: str
     backend: str
-    passes: tuple
+    passes: str
     opts: tuple
 
 
 @dataclasses.dataclass
 class CacheStats:
-    hits: int = 0
-    misses: int = 0
+    hits: int = 0              # memory-tier hits
+    misses: int = 0            # memory-tier misses (store hit OR compile)
     evictions: int = 0
-    compile_seconds: float = 0.0   # total wall-clock spent on misses
+    compile_seconds: float = 0.0   # total wall-clock spent compiling
+    compiles: int = 0          # actual full compilations
+    store_hits: int = 0        # misses served by the persistent store
+    load_seconds: float = 0.0  # wall-clock spent loading from the store
 
     def row(self) -> str:
-        return (f"cache: {self.hits} hits, {self.misses} misses, "
-                f"{self.evictions} evictions, "
-                f"{self.compile_seconds * 1e3:.1f} ms compiling")
+        return (f"cache: {self.hits} hits, {self.misses} misses "
+                f"({self.store_hits} from store), {self.evictions} "
+                f"evictions, {self.compile_seconds * 1e3:.1f} ms compiling, "
+                f"{self.load_seconds * 1e3:.1f} ms loading")
 
 
 class CompileCache:
-    """LRU-bounded, thread-safe, content-addressed `compile_net` cache."""
+    """LRU-bounded, thread-safe, content-addressed compile cache — the
+    in-memory tier over an optional persistent `ArtifactStore`."""
 
-    def __init__(self, capacity: int = 32):
+    def __init__(self, capacity: int = 32, store: ArtifactStore | None = None):
         if capacity < 1:
             raise ValueError(f"capacity must be >= 1, got {capacity}")
         self.capacity = int(capacity)
+        self.store = store
         self._lock = threading.RLock()
-        self._entries: "OrderedDict[CacheKey, CompiledNet]" = OrderedDict()
+        self._entries: "OrderedDict[CacheKey, Artifact]" = OrderedDict()
         self._compile_seconds: dict[CacheKey, float] = {}
         self._stats = CacheStats()
 
@@ -139,45 +144,65 @@ class CompileCache:
         with self._lock:
             return self._compile_seconds.get(key)
 
-    def key_for(self, net, *, backend: str = "jnp",
-                passes: Sequence[Pass] | None = None,
-                input_threshold: int | None = None, **backend_opts) -> CacheKey:
-        """The content-addressed key `get_or_compile` would use. `net` is
-        anything `compile_net` accepts; weights are canonicalized the same
-        way the frontend lowers them, so two nets with equal integer
-        content produce the same key regardless of container or dtype."""
+    def _resolve(self, net, backend, passes, input_threshold, backend_opts):
         ws, thr = _extract_weights(net, input_threshold)
-        return CacheKey(
+        spec = PipelineSpec.coerce(passes)
+        tgt, opts = resolve_target(backend, backend_opts)
+        key = CacheKey(
             digest=weights_digest(ws, thr),
-            backend=backend,
-            passes=tuple(_pass_fingerprint(p) for p in
-                         (DEFAULT_PASSES if passes is None else passes)),
-            opts=tuple(sorted((k, repr(v)) for k, v in backend_opts.items())),
+            backend=tgt.name,
+            passes=spec.spec_string(),
+            opts=tuple(sorted(opts.items())),
         )
+        return key, spec, tgt, opts, ws, thr
+
+    def key_for(self, net, *, backend: str = "jnp",
+                passes=None, input_threshold: int | None = None,
+                **backend_opts) -> CacheKey:
+        """The content-addressed key `get_or_compile` would use. `net` is
+        anything the frontend accepts; weights are canonicalized the same
+        way the frontend lowers them, so two nets with equal integer
+        content produce the same key regardless of container or dtype.
+        `passes` accepts a PipelineSpec, a spec/registry string, or a
+        sequence of pass callables (see `_pass_fingerprint`)."""
+        key, *_ = self._resolve(
+            net, backend, passes, input_threshold, backend_opts)
+        return key
 
     def get_or_compile(self, net, *, backend: str = "jnp",
-                       passes: Sequence[Pass] | None = None,
-                       input_threshold: int | None = None,
-                       **backend_opts) -> CompiledNet:
-        """Return the cached `CompiledNet` for this exact (weights, passes,
-        backend, options) combination, compiling on first sight."""
-        key = self.key_for(net, backend=backend, passes=passes,
-                           input_threshold=input_threshold, **backend_opts)
+                       passes=None, input_threshold: int | None = None,
+                       **backend_opts) -> Artifact:
+        """Return the cached `Artifact` for this exact (weights, pipeline,
+        target, options) combination — from memory, then the store, then
+        by compiling (and persisting) on first sight anywhere."""
+        key, spec, tgt, opts, ws, thr = self._resolve(
+            net, backend, passes, input_threshold, backend_opts)
         with self._lock:
             hit = self._entries.get(key)
             if hit is not None:
                 self._entries.move_to_end(key)
                 self._stats.hits += 1
                 return hit
-            t0 = time.perf_counter()
-            compiled = compile_net(
-                net, backend=backend, passes=passes,
-                input_threshold=input_threshold, **backend_opts)
-            dt = time.perf_counter() - t0
             self._stats.misses += 1
-            self._stats.compile_seconds += dt
+            compiled = None
+            skey = artifact_key(key.digest, spec, target_string(tgt, opts))
+            if self.store is not None:
+                compiled = self.store.get(skey)
+                if compiled is not None:
+                    self._stats.store_hits += 1
+                    self._stats.load_seconds += compiled.timings.get(
+                        "load_s", 0.0)
+            if compiled is None:
+                t0 = time.perf_counter()
+                compiled = compile_resolved(
+                    ws, thr, key.digest, spec, tgt, opts)
+                dt = time.perf_counter() - t0
+                self._stats.compiles += 1
+                self._stats.compile_seconds += dt
+                self._compile_seconds[key] = dt
+                if self.store is not None:
+                    self.store.put(compiled)
             self._entries[key] = compiled
-            self._compile_seconds[key] = dt
             while len(self._entries) > self.capacity:
                 evicted, _ = self._entries.popitem(last=False)
                 self._compile_seconds.pop(evicted, None)
@@ -188,8 +213,8 @@ class CompileCache:
 DEFAULT_CACHE = CompileCache(capacity=64)
 
 
-def cached_compile_net(net, **kw) -> CompiledNet:
-    """`netgen.compile_net` through the process-wide DEFAULT_CACHE."""
+def cached_compile_net(net, **kw) -> Artifact:
+    """`compile_artifact` through the process-wide DEFAULT_CACHE."""
     return DEFAULT_CACHE.get_or_compile(net, **kw)
 
 
@@ -200,7 +225,7 @@ def cached_compile_net(net, **kw) -> CompiledNet:
 def stack_layered_weights(circuits: Sequence[Circuit]
                           ) -> tuple[int, list[np.ndarray]]:
     """Stack M regular circuits' reconstructed weight matrices for the
-    multi-net backends.
+    multi-net targets.
 
     Returns (input_threshold, [per-layer (M, fan_in, fan_out) int32]).
     Versions must agree on depth, input width, class count, and input
@@ -251,34 +276,52 @@ def stack_layered_weights(circuits: Sequence[Circuit]
 @dataclasses.dataclass
 class _Version:
     name: str
-    compiled: CompiledNet
+    compiled: Artifact
 
 
 class NetServer:
     """Serve uint8 image batches across registered model versions.
 
     Single-version requests (`predict`) route to that version's cached
-    `CompiledNet` with fixed-capacity slot batching (the
+    `Artifact` with fixed-capacity slot batching (the
     `repro.serve.engine` pattern — one live jit trace per model; larger
     batches are chunked). Multi-version requests (`predict_many`) stack
     compatible versions' weights into one jitted multi-net dispatch;
-    incompatible sets (different depth/width/classes, or a backend
+    incompatible sets (different depth/width/classes, or a target
     without a multi form) fall back to per-version routing.
     `dispatch_counts` records which path served each request.
+
+    Construction: pass `session=` to compile through a `Session` (its
+    memory tier and persistent store are reused; `target=`/`pipeline=`
+    select what to compile), or the legacy `backend=`/`passes=`/`cache=`
+    keywords. The target must produce a callable artifact.
     """
 
-    def __init__(self, *, backend: str = "jnp",
-                 passes: Sequence[Pass] | None = None,
-                 cache: CompileCache | None = None,
+    def __init__(self, *, session=None, target: str | None = None,
+                 pipeline=None, backend: str = "jnp",
+                 passes=None, cache: CompileCache | None = None,
                  slot_capacity: int = 256, warmup: bool = True):
-        if backend not in ("jnp", "pallas", "fused"):
+        target = target if target is not None else backend
+        self._target, self._opts = resolve_target(target)
+        if not self._target.callable:
             raise ValueError(
-                f"NetServer needs a callable backend, got {backend!r}")
+                f"NetServer needs a callable backend, got {target!r} "
+                f"(kind: {self._target.kind})")
         if slot_capacity < 1:
             raise ValueError(f"slot_capacity must be >= 1, got {slot_capacity}")
-        self.backend = backend
-        self.passes = passes
-        self.cache = cache if cache is not None else CompileCache()
+        if session is not None:
+            if cache is not None:
+                raise ValueError("pass session= or cache=, not both")
+            if session.cache is None:
+                raise ValueError(
+                    "NetServer needs a Session with an in-memory tier "
+                    "(capacity > 0)")
+            self.cache = session.cache
+        else:
+            self.cache = cache if cache is not None else CompileCache()
+        self.session = session
+        self.backend = self._target.name
+        self.passes = pipeline if pipeline is not None else passes
         self.slot_capacity = int(slot_capacity)
         self.warmup = bool(warmup)
         self._lock = threading.RLock()
@@ -289,12 +332,13 @@ class NetServer:
 
     # -- registry ------------------------------------------------------------
 
-    def register(self, version: str, net) -> CompiledNet:
-        """Compile (through the cache) and register a model version. When
-        `warmup` is on, the serving shape is traced and executed once so
-        the first real request pays no jit latency."""
+    def register(self, version: str, net) -> Artifact:
+        """Compile (through the cache, and the session's store when one
+        is configured) and register a model version. When `warmup` is
+        on, the serving shape is traced and executed once so the first
+        real request pays no jit latency."""
         compiled = self.cache.get_or_compile(
-            net, backend=self.backend, passes=self.passes)
+            net, backend=self.backend, passes=self.passes, **self._opts)
         with self._lock:
             self._versions[version] = _Version(version, compiled)
             self._multi.clear()
@@ -315,7 +359,7 @@ class NetServer:
         with self._lock:
             return list(self._versions)
 
-    def compiled_for(self, version: str) -> CompiledNet:
+    def compiled_for(self, version: str) -> Artifact:
         with self._lock:
             v = self._versions.get(version)
         if v is None:
@@ -376,7 +420,7 @@ class NetServer:
 
     # -- internals -----------------------------------------------------------
 
-    def _run_slots(self, compiled: CompiledNet, x: np.ndarray) -> np.ndarray:
+    def _run_slots(self, compiled: Artifact, x: np.ndarray) -> np.ndarray:
         _validate_batch(x, compiled.circuit.n_inputs)
         cap = self.slot_capacity
         if x.shape[0] == 0:
@@ -399,13 +443,13 @@ class NetServer:
                     return self._multi[names]
                 generation = self._generation
                 circuits = [self._versions[v].compiled.circuit for v in names]
-            if self.backend not in backends.MULTI_BACKENDS:
+            if self._target.compile_multi is None:
                 fn = None
             else:
                 try:
                     thr, stacked = stack_layered_weights(circuits)
-                    fn = backends.compile_multi(
-                        stacked, thr, backend=self.backend)
+                    fn = self._target.compile_multi(
+                        stacked, thr, **self._opts)
                 except (IrregularCircuitError, ValueError):
                     fn = None
             with self._lock:

@@ -1,0 +1,438 @@
+"""Session API: compile once per content, persist artifacts across processes.
+
+This module is the compiler's front door (the ISSUE-3 redesign):
+
+  compile_artifact — the full driver: frontend -> declarative
+      `PipelineSpec` -> `Target`, returning an `Artifact` that carries
+      the optimized circuit, per-pass stats, a logic-cell estimate,
+      wall-clock timings, and the content-address it lives under.
+
+  ArtifactStore — a persistent, content-addressed artifact directory.
+      The key is sha256 over `QuantizedNet.digest()` x
+      `PipelineSpec.fingerprint()` x the canonical target string — every
+      axis is stable across processes and machines, so a SECOND process
+      pointed at the same directory warm-starts: the optimized circuit
+      is reloaded from flat integer arrays (`graph.circuit_to_arrays`,
+      no pickle) and the predictor is rebuilt from it without re-running
+      the frontend or any pass. Writes are atomic (temp dir + rename),
+      so concurrent processes can share one store.
+
+  Session — the object users hold: an in-memory tier (the serving
+      layer's `CompileCache`) over an optional `ArtifactStore`.
+
+      session = Session(store=ArtifactStore("~/.cache/netgen"))
+      art = session.compile(qnet, target="pallas", pipeline="hw")
+      art(images)                   # callable artifact
+      print(art.report())           # pass savings + cell estimate
+
+`repro.netgen.compile_net` remains as a deprecated shim routed through a
+default Session.
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import io
+import json
+import os
+import shutil
+import time
+import uuid
+from pathlib import Path
+
+import numpy as np
+
+from repro.core.quantize import weights_digest
+from repro.netgen.backends.cost import CellCounts, CostReport, logic_cells
+from repro.netgen.frontend import _extract_weights, lower
+from repro.netgen.graph import (
+    Circuit, circuit_from_arrays, circuit_to_arrays,
+)
+from repro.netgen.passes import CircuitOps, PassStats
+from repro.netgen.pipeline import PipelineSpec
+from repro.netgen.targets import resolve_target, target_string
+
+__all__ = [
+    "Artifact", "ArtifactStore", "Session", "StoreStats", "artifact_key",
+    "compile_artifact", "compile_resolved",
+]
+
+_FORMAT = "netgen-artifact-v1"
+_SOURCE_FINGERPRINT: str | None = None
+
+
+def _source_fingerprint() -> str:
+    """sha256 over the netgen package sources (plus the quantize module
+    that defines digest semantics), computed once per process. Folded
+    into every artifact key so a store can NEVER serve circuits
+    optimized by older compiler code — editing any pass or backend
+    invalidates all persisted artifacts, the same invariant the CI
+    cache key enforces externally."""
+    global _SOURCE_FINGERPRINT
+    if _SOURCE_FINGERPRINT is None:
+        h = hashlib.sha256()
+        pkg = Path(__file__).parent
+        files = sorted(pkg.rglob("*.py"))
+        files.append(pkg.parent / "core" / "quantize.py")
+        for f in files:
+            h.update(f.name.encode())
+            h.update(f.read_bytes())
+        _SOURCE_FINGERPRINT = h.hexdigest()
+    return _SOURCE_FINGERPRINT
+
+
+def _validate_batch(x, n_inputs: int) -> None:
+    """Reject non-uint8 or wrongly-shaped predictor input with a clear
+    error instead of silently mis-binarizing (a float image batch would
+    compare scaled values against the integer pixel threshold)."""
+    dtype = getattr(x, "dtype", None)
+    if dtype is None or np.dtype(dtype) != np.uint8:
+        raise TypeError(
+            f"compiled predictors take raw uint8 images, got dtype={dtype!r} "
+            "(binarization happens inside the circuit; do not pre-scale)")
+    shape = tuple(getattr(x, "shape", ()))
+    if len(shape) != 2 or shape[1] != n_inputs:
+        raise ValueError(
+            f"expected a (batch, {n_inputs}) uint8 image batch, "
+            f"got shape {shape}")
+
+
+def artifact_key(digest: str, spec: PipelineSpec, target: str) -> str:
+    """The store's content address: net digest x pipeline fingerprint x
+    canonical target string x netgen source fingerprint, hashed. Every
+    axis is process-stable; the source axis retires stale artifacts
+    whenever the compiler itself changes (a spec string names WHICH
+    passes run, not their implementation)."""
+    h = hashlib.sha256()
+    h.update(f"{_FORMAT}:{_source_fingerprint()}:{digest}:"
+             f"{spec.fingerprint()}:{target}".encode())
+    return h.hexdigest()
+
+
+# ---------------------------------------------------------------------------
+# Artifact
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class Artifact:
+    """One compilation result, self-describing enough to persist.
+
+    `artifact` is the target's product (jitted callable / Verilog text /
+    CostReport); `cost` is the logic-cell estimate of the final circuit
+    (every target gets one — the `cost` target's artifact additionally
+    breaks it down per pass); `source` says where this object
+    originated: "compile" (built in this process) or "store" (reloaded
+    from disk). Memory-tier hits return the same object, source
+    unchanged.
+    """
+    digest: str
+    pipeline: str              # canonical PipelineSpec string
+    target: str                # canonical target string (with options)
+    kind: str                  # "callable" | "text" | "report"
+    key: str                   # ArtifactStore content address
+    circuit: Circuit
+    pass_stats: tuple
+    cost: CellCounts
+    timings: dict
+    source: str
+    artifact: object
+
+    @property
+    def backend(self) -> str:
+        """Base target name (pre-Session `CompiledNet` compatibility)."""
+        return self.target.partition("[")[0]
+
+    def __call__(self, x_uint8):
+        if not callable(self.artifact):
+            raise TypeError(
+                f"{self.backend} artifact is not callable (use .artifact)")
+        _validate_batch(x_uint8, self.circuit.n_inputs)
+        return self.artifact(x_uint8)
+
+    def report(self) -> str:
+        """Per-pass savings table plus the final cell estimate."""
+        lines = [s.row() for s in self.pass_stats]
+        lines.append(self.cost.row())
+        return "\n".join(lines)
+
+
+# ---------------------------------------------------------------------------
+# Compile driver
+# ---------------------------------------------------------------------------
+
+def compile_artifact(net, *, target="jnp", pipeline=None,
+                     input_threshold: int | None = None,
+                     **target_opts) -> Artifact:
+    """Frontend -> pipeline -> target, uncached. `net` is anything the
+    frontend accepts; `pipeline` anything `PipelineSpec.coerce` accepts
+    (None -> "default"); `target` a name or `name[opt=...]` string."""
+    spec = PipelineSpec.coerce(pipeline)
+    tgt, opts = resolve_target(target, target_opts)
+    ws, thr = _extract_weights(net, input_threshold)
+    return compile_resolved(ws, thr, weights_digest(ws, thr), spec, tgt, opts)
+
+
+def compile_resolved(ws, thr: int, digest: str, spec: PipelineSpec,
+                     tgt, opts: dict) -> Artifact:
+    """The compile driver proper, for callers (the cache tiers) that
+    already extracted/canonicalized the inputs while computing the
+    content address — weights are not re-copied or re-hashed here."""
+    tstring = target_string(tgt, opts)
+
+    t0 = time.perf_counter()
+    circuit = lower(ws, input_threshold=thr)
+    t_lower = time.perf_counter()
+
+    trace: list | None = [] if tgt.wants_pass_trace else None
+    circuit, stats = spec.run(
+        circuit, observe=(lambda name, c: trace.append((name, c)))
+        if trace is not None else None)
+    t_passes = time.perf_counter()
+
+    kwargs = dict(opts)
+    if tgt.wants_pass_trace:
+        kwargs["_pass_trace"] = tuple(trace)
+    raw = tgt.compile(circuit, **kwargs)
+    t_backend = time.perf_counter()
+
+    return Artifact(
+        digest=digest,
+        pipeline=spec.spec_string(),
+        target=tstring,
+        kind=tgt.kind,
+        key=artifact_key(digest, spec, tstring),
+        circuit=circuit,
+        pass_stats=stats,
+        cost=logic_cells(circuit),
+        timings={
+            "lower_s": t_lower - t0,
+            "passes_s": t_passes - t_lower,
+            "backend_s": t_backend - t_passes,
+            "total_s": t_backend - t0,
+        },
+        source="compile",
+        artifact=raw,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Persistent store
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class StoreStats:
+    saves: int = 0
+    loads: int = 0          # get() found and rebuilt an artifact
+    misses: int = 0         # get() found nothing under the key
+    corrupt: int = 0        # unreadable entries evicted and re-missed
+    load_seconds: float = 0.0
+
+    def row(self) -> str:
+        return (f"store: {self.saves} saves, {self.loads} loads, "
+                f"{self.misses} misses, "
+                f"{self.load_seconds * 1e3:.1f} ms loading")
+
+
+class ArtifactStore:
+    """Content-addressed on-disk artifact directory (see module doc).
+
+    Layout: `<root>/<key>/meta.json` (digest, pipeline, target, pass
+    stats, cell estimate, timings), `circuit.npz` (the optimized circuit
+    as flat integer arrays), and `artifact.txt` for text targets.
+    Callable artifacts are rebuilt from the stored circuit on load —
+    the frontend and every pass are skipped, which is where compile time
+    lives. Puts are atomic; a key that already exists is left alone.
+    """
+
+    def __init__(self, root):
+        self.root = Path(root).expanduser()
+        self.root.mkdir(parents=True, exist_ok=True)
+        self.stats = StoreStats()
+
+    def _dir(self, key: str) -> Path:
+        return self.root / key
+
+    def __contains__(self, key: str) -> bool:
+        return (self._dir(key) / "meta.json").exists()
+
+    def __len__(self) -> int:
+        return sum(1 for _ in self.keys())
+
+    def keys(self) -> list[str]:
+        return sorted(
+            p.name for p in self.root.iterdir()
+            if (p / "meta.json").exists())
+
+    def put(self, artifact: Artifact) -> None:
+        """Persist one artifact under its content address (atomic; a
+        concurrent writer of the same key wins harmlessly)."""
+        final = self._dir(artifact.key)
+        if (final / "meta.json").exists():
+            return
+        tmp = self.root / f".tmp-{artifact.key[:16]}-{uuid.uuid4().hex[:8]}"
+        tmp.mkdir()
+        try:
+            meta = {
+                "format": _FORMAT,
+                "digest": artifact.digest,
+                "pipeline": artifact.pipeline,
+                "target": artifact.target,
+                "kind": artifact.kind,
+                "pass_stats": [
+                    {"name": s.name,
+                     "before": s.before.as_dict(),
+                     "after": s.after.as_dict()}
+                    for s in artifact.pass_stats],
+                "cost": artifact.cost.as_dict(),
+                "timings": artifact.timings,
+                "created_unix": time.time(),
+            }
+            if artifact.kind == "text":
+                (tmp / "artifact.txt").write_text(artifact.artifact)
+            elif artifact.kind == "report":
+                meta["cost_report"] = artifact.artifact.as_dict()
+            buf = io.BytesIO()
+            np.savez_compressed(buf, **circuit_to_arrays(artifact.circuit))
+            (tmp / "circuit.npz").write_bytes(buf.getvalue())
+            with open(tmp / "meta.json", "w") as f:
+                json.dump(meta, f, indent=1)
+            try:
+                os.rename(tmp, final)
+            except OSError:
+                if not (final / "meta.json").exists():
+                    raise
+                shutil.rmtree(tmp, ignore_errors=True)
+        except BaseException:
+            shutil.rmtree(tmp, ignore_errors=True)
+            raise
+        self.stats.saves += 1
+
+    def get(self, key: str) -> Artifact | None:
+        """Load and rebuild the artifact stored under `key` (None when
+        absent). Rebuilding a callable target re-invokes only the
+        backend on the already-optimized circuit. A corrupt or
+        unreadable entry (truncated JSON, bad npz, stale format) is
+        treated as a miss and evicted from disk, so the caller falls
+        back to a recompile whose `put` re-creates it — a cache tier
+        must never turn bit-rot into a hard failure."""
+        d = self._dir(key)
+        meta_path = d / "meta.json"
+        if not meta_path.exists():
+            self.stats.misses += 1
+            return None
+        t0 = time.perf_counter()
+        try:
+            art = self._load(d, key)
+        except Exception:
+            shutil.rmtree(d, ignore_errors=True)
+            self.stats.corrupt += 1
+            self.stats.misses += 1
+            return None
+        if art is None:
+            self.stats.misses += 1
+            return None
+        dt = time.perf_counter() - t0
+        art.timings["load_s"] = dt
+        self.stats.loads += 1
+        self.stats.load_seconds += dt
+        return art
+
+    def _load(self, d: Path, key: str) -> Artifact | None:
+        with open(d / "meta.json") as f:
+            meta = json.load(f)
+        if meta.get("format") != _FORMAT:
+            return None
+        with np.load(d / "circuit.npz") as z:
+            circuit = circuit_from_arrays(z)
+        tgt, opts = resolve_target(meta["target"])
+        if meta["kind"] == "text":
+            raw = (d / "artifact.txt").read_text()
+        elif meta["kind"] == "report":
+            raw = CostReport.from_dict(meta["cost_report"])
+        else:
+            raw = tgt.compile(circuit, **opts)
+        stats = tuple(
+            PassStats(name=s["name"],
+                      before=CircuitOps(**s["before"]),
+                      after=_ops_from_dict(s["after"]))
+            for s in meta["pass_stats"])
+        cost = meta["cost"]
+        return Artifact(
+            digest=meta["digest"],
+            pipeline=meta["pipeline"],
+            target=meta["target"],
+            kind=meta["kind"],
+            key=key,
+            circuit=circuit,
+            pass_stats=stats,
+            cost=CellCounts(
+                **{k: v for k, v in cost.items() if k != "total"}),
+            timings=dict(meta["timings"]),
+            source="store",
+            artifact=raw,
+        )
+
+
+def _ops_from_dict(d: dict) -> CircuitOps:
+    return CircuitOps(**d)
+
+
+# ---------------------------------------------------------------------------
+# Session
+# ---------------------------------------------------------------------------
+
+class Session:
+    """The compiler's stateful front door: an in-memory LRU tier (the
+    serving layer's `CompileCache`) over an optional persistent
+    `ArtifactStore`. `capacity=0` disables in-memory retention (every
+    compile still reads/writes the store when one is configured)."""
+
+    def __init__(self, *, store=None, capacity: int = 64):
+        from repro.netgen.serve import CacheStats, CompileCache
+        if store is not None and not isinstance(store, ArtifactStore):
+            store = ArtifactStore(store)
+        self.store = store
+        if capacity > 0:
+            self.cache: "CompileCache | None" = CompileCache(
+                capacity, store=store)
+            self._stats = None
+        else:
+            self.cache = None
+            self._stats = CacheStats()
+
+    def compile(self, net, *, target="jnp", pipeline="default",
+                input_threshold: int | None = None, **target_opts) -> Artifact:
+        """Compile `net` for `target` under `pipeline`, reusing the
+        memory tier and the store when they already hold the artifact."""
+        if self.cache is not None:
+            return self.cache.get_or_compile(
+                net, backend=target, passes=pipeline,
+                input_threshold=input_threshold, **target_opts)
+        # uncached session: store tier only
+        spec = PipelineSpec.coerce(pipeline)
+        tgt, opts = resolve_target(target, target_opts)
+        ws, thr = _extract_weights(net, input_threshold)
+        digest = weights_digest(ws, thr)
+        key = artifact_key(digest, spec, target_string(tgt, opts))
+        self._stats.misses += 1
+        if self.store is not None:
+            art = self.store.get(key)
+            if art is not None:
+                self._stats.store_hits += 1
+                return art
+        t0 = time.perf_counter()
+        art = compile_resolved(ws, thr, digest, spec, tgt, opts)
+        self._stats.compiles += 1
+        self._stats.compile_seconds += time.perf_counter() - t0
+        if self.store is not None:
+            self.store.put(art)
+        return art
+
+    def stats(self):
+        """Hit/miss/compile counters (memory tier's when one exists)."""
+        if self.cache is not None:
+            return self.cache.stats()
+        return dataclasses.replace(self._stats)
+
+    def store_stats(self) -> StoreStats | None:
+        return None if self.store is None else self.store.stats

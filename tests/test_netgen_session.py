@@ -1,0 +1,573 @@
+"""Session API tests (ISSUE 3): declarative PipelineSpec parsing and
+error paths, Target registry resolution, the cost target's Figure-7
+estimates, the persistent ArtifactStore (including cross-process reuse
+with zero recompiles), and the deprecated compile_net shim."""
+import functools
+import json
+import os
+import subprocess
+import sys
+import warnings
+
+import numpy as np
+import pytest
+import jax.numpy as jnp
+
+from repro.core import quantize
+from repro import netgen
+from repro.netgen.pipeline import PipelineSpec
+from repro.netgen.serve import _pass_fingerprint
+
+from _netgen_helpers import images, random_net
+
+SRC = os.path.join(os.path.dirname(os.path.dirname(__file__)), "src")
+
+
+def _random_net(seed: int, sizes=(12, 9, 4), lo=-5, hi=5):
+    return random_net(seed, sizes, lo=lo, hi=hi)
+
+
+def _images(seed: int, b: int, n_in: int) -> np.ndarray:
+    return images(seed, b, n_in, salt=55)
+
+
+def _ref(net, x):
+    return np.asarray(quantize.predict_quantized(net)(jnp.asarray(x)))
+
+
+# A module-level pass so the dotted-name fallback has something real to
+# import: identity rewrite, stable under evaluate.
+def identity_pass(circuit):
+    return circuit
+
+
+# ---------------------------------------------------------------------------
+# PipelineSpec: round-trip, canonical form, fingerprints
+# ---------------------------------------------------------------------------
+
+def test_pipeline_spec_round_trips():
+    for raw, canonical in [
+        ("zeros,prune", "zeros,prune"),
+        ("prune, addends ,cse", "prune,addends,cse"),
+        ("cse[budget=5000,bucketed=true]", "cse[bucketed=true,budget=5000]"),
+        ("cse[bucketed]", "cse[bucketed=true]"),
+        ("delete_zero_terms,share_common_addends", "zeros,cse"),
+    ]:
+        spec = PipelineSpec.parse(raw)
+        assert spec.spec_string() == canonical, raw
+        # the acceptance identity: parse . spec_string is idempotent
+        assert PipelineSpec.parse(spec.spec_string()).spec_string() == canonical
+
+
+def test_pipeline_spec_named_and_coerce():
+    assert PipelineSpec.named("default").spec_string() == "zeros,prune"
+    assert PipelineSpec.named("hw").spec_string() == "zeros,prune,addends,cse"
+    assert PipelineSpec.coerce(None).spec_string() == "zeros,prune"
+    assert PipelineSpec.coerce("hw").spec_string() == \
+        PipelineSpec.named("hw").spec_string()
+    spec = PipelineSpec.parse("zeros")
+    assert PipelineSpec.coerce(spec) is spec
+    assert PipelineSpec.coerce(
+        (netgen.delete_zero_terms, netgen.prune_dead_units)
+    ).spec_string() == "zeros,prune"
+    assert "default" in netgen.list_pipelines()
+    with pytest.raises(ValueError, match="unknown pipeline"):
+        PipelineSpec.named("nope")
+
+
+def test_pipeline_spec_fingerprint_distinguishes():
+    base = PipelineSpec.parse("zeros,cse").fingerprint()
+    assert PipelineSpec.parse("zeros,cse").fingerprint() == base
+    assert PipelineSpec.parse("zeros,cse[budget=5]").fingerprint() != base
+    assert PipelineSpec.parse("cse,zeros").fingerprint() != base  # order
+    assert PipelineSpec.parse(
+        "zeros,cse[bucketed=true]").fingerprint() != base
+
+
+def test_pipeline_spec_fingerprint_stable_across_processes():
+    """Same spec -> same fingerprint in a fresh interpreter: the property
+    that makes PipelineSpec one axis of the ArtifactStore key."""
+    spec = "zeros,prune,cse[budget=7,bucketed=true]"
+    want = PipelineSpec.parse(spec).fingerprint()
+    out = subprocess.run(
+        [sys.executable, "-c",
+         "from repro.netgen.pipeline import PipelineSpec;"
+         f"print(PipelineSpec.parse({spec!r}).fingerprint())"],
+        capture_output=True, text=True, check=True,
+        env={**os.environ, "PYTHONPATH": SRC})
+    assert out.stdout.strip() == want
+
+
+def test_pipeline_spec_runs_with_labeled_stats():
+    net = _random_net(0)
+    circuit, stats = PipelineSpec.parse("zeros,cse[budget=3]").run(
+        netgen.lower(net))
+    assert [s.name for s in stats] == ["zeros", "cse[budget=3]"]
+    x = _images(0, 16, 12)
+    np.testing.assert_array_equal(netgen.evaluate(circuit, x), _ref(net, x))
+
+
+def test_pipeline_spec_dotted_passes_round_trip():
+    spec = PipelineSpec.from_passes([identity_pass])
+    dotted = spec.spec_string()
+    assert dotted.endswith(".identity_pass")
+    assert PipelineSpec.parse(dotted).spec_string() == dotted
+    net = _random_net(1)
+    circuit, stats = spec.run(netgen.lower(net))
+    assert stats[0].terms_deleted == 0
+
+
+# ---------------------------------------------------------------------------
+# PipelineSpec: error paths (ISSUE satellite)
+# ---------------------------------------------------------------------------
+
+def test_pipeline_spec_rejects_unknown_pass():
+    with pytest.raises(ValueError, match="unknown pass"):
+        PipelineSpec.parse("zeros,retime")
+    with pytest.raises(ValueError, match="not importable"):
+        PipelineSpec.parse("no.such.module.pass_fn")
+
+
+@pytest.mark.parametrize("bad", [
+    "cse[budget=5", "cse[bud[get=5]", "cse[]", "cse[=5]", "cse[,]",
+    "cse]budget=5[", "zeros,", ",zeros", "", "   ", "cse[budget=1,budget=2]",
+])
+def test_pipeline_spec_rejects_malformed_specs(bad):
+    with pytest.raises(ValueError):
+        PipelineSpec.parse(bad)
+
+
+def test_pipeline_spec_rejects_bad_options():
+    with pytest.raises(ValueError, match="unknown option"):
+        PipelineSpec.parse("cse[depth=3]")
+    with pytest.raises(ValueError, match="unknown option"):
+        PipelineSpec.parse("prune[budget=3]")   # prune declares no options
+    with pytest.raises(ValueError, match="integer"):
+        PipelineSpec.parse("cse[budget=fast]")
+    with pytest.raises(ValueError, match="integer"):
+        PipelineSpec.parse("cse[budget=true]")
+    with pytest.raises(ValueError, match="true/false"):
+        PipelineSpec.parse("cse[bucketed=7]")
+
+
+def test_pipeline_spec_rejects_duplicate_passes():
+    with pytest.raises(ValueError, match="duplicate pass"):
+        PipelineSpec.parse("zeros,prune,zeros")
+    with pytest.raises(ValueError, match="duplicate"):
+        PipelineSpec.from_passes(
+            [netgen.delete_zero_terms, netgen.delete_zero_terms])
+
+
+def test_pipeline_spec_refuses_lambdas_and_closures():
+    with pytest.raises(ValueError, match="lambda"):
+        PipelineSpec.from_passes([lambda c: c])
+
+    def closure(c):
+        return c
+
+    with pytest.raises(ValueError, match="functools.partial"):
+        PipelineSpec.from_passes([closure])
+
+
+def test_pass_fingerprint_compat():
+    """The serve-layer helper now canonicalizes through PipelineSpec."""
+    budget = functools.partial(netgen.share_common_addends, max_new_nodes=2)
+    assert _pass_fingerprint(budget) == "cse[budget=2]"
+    assert _pass_fingerprint(netgen.share_common_addends) == "cse"
+    assert _pass_fingerprint(budget) != _pass_fingerprint(
+        netgen.share_common_addends)
+
+
+# ---------------------------------------------------------------------------
+# Target registry
+# ---------------------------------------------------------------------------
+
+def test_list_targets_enumerates_registry():
+    targets = {t.name: t for t in netgen.list_targets()}
+    assert set(targets) >= {"jnp", "pallas", "fused", "verilog", "cost"}
+    assert all(t.description for t in targets.values())
+    assert targets["jnp"].callable and targets["pallas"].callable
+    assert targets["verilog"].kind == "text"
+    assert targets["cost"].kind == "report"
+    assert targets["jnp"].compile_multi is not None
+    assert targets["fused"].compile_multi is None
+
+
+def test_resolve_target_options():
+    tgt, opts = netgen.resolve_target("verilog[style=legacy]")
+    assert tgt.name == "verilog" and opts == {"style": "legacy"}
+    tgt, opts = netgen.resolve_target("pallas[interpret]")
+    assert opts == {"interpret": True}
+    with pytest.raises(ValueError, match="unknown target"):
+        netgen.resolve_target("llvm")
+    with pytest.raises(ValueError, match="unknown option"):
+        netgen.resolve_target("jnp[style=fast]")
+    with pytest.raises(ValueError, match="true/false"):
+        netgen.resolve_target("pallas[interpret=3]")
+    with pytest.raises(ValueError, match="twice"):
+        netgen.resolve_target("verilog[style=legacy]", {"style": "generic"})
+
+
+def test_string_options_must_round_trip():
+    """String option values are embedded in canonical target strings
+    (which key the store and must re-parse on warm load), so syntax
+    characters and bool/int literals are rejected at resolve time."""
+    for bad in ("my,mod", "a]b", "a=b", "true", "42", "two words"):
+        with pytest.raises(ValueError):
+            netgen.resolve_target("verilog", {"module_name": bad})
+    tgt, opts = netgen.resolve_target("verilog", {"module_name": "my_mod.v2"})
+    assert opts == {"module_name": "my_mod.v2"}
+
+
+def test_stacked_dispatch_honors_target_opts():
+    """predict_many's multi-net build must receive the same declared
+    options as the single-version path (interpret for pallas)."""
+    server = netgen.NetServer(
+        target="pallas[interpret=true]", slot_capacity=8, warmup=False)
+    nets = {name: _random_net(35 + i, sizes=(10, 8, 4))
+            for i, name in enumerate("ab")}
+    for name, net in nets.items():
+        server.register(name, net)
+    x = _images(35, 6, 10)
+    out = server.predict_many({"a": x, "b": x})
+    assert server.dispatch_counts["stacked"] == 1
+    for name, net in nets.items():
+        np.testing.assert_array_equal(out[name], _ref(net, x), err_msg=name)
+
+
+def test_target_strings_reach_backends():
+    net = _random_net(2)
+    x = _images(2, 8, 12)
+    ref = _ref(net, x)
+    art = netgen.compile_artifact(net, target="pallas[interpret=true]")
+    np.testing.assert_array_equal(np.asarray(art(x)), ref)
+    v = netgen.compile_artifact(net, target="verilog[module_name=custom]")
+    assert "module custom" in v.artifact
+
+
+def test_cost_target_full_784_500_10_per_pass():
+    """ISSUE acceptance: the cost target prices the paper-sized net and
+    attributes cells per pass — the zero-deletion (L4) and addend (L5)
+    savings must be visible in the trajectory, reported alongside the
+    paper's Figure-7 reference counts."""
+    rng = np.random.default_rng(3)
+    w1 = rng.integers(-9, 10, size=(784, 500)).astype(np.int32)
+    w2 = rng.integers(-9, 10, size=(500, 10)).astype(np.int32)
+    w1[rng.random(w1.shape) < 0.5] = 0          # paper-like ~50% zeros
+    net = quantize.QuantizedNet(weights=[w1, w2])
+
+    art = netgen.compile_artifact(net, target="cost",
+                                  pipeline="zeros,prune,addends")
+    report = art.artifact
+    stages = dict(report.per_pass)
+    assert set(stages) == {"lowered", "zeros", "prune", "addends"}
+    # L4: deleting zero terms frees their adder slots
+    assert stages["zeros"].total < stages["lowered"].total
+    # L5: the addend rewrite eliminates every multiplier cell
+    assert stages["addends"].mult_cells == 0
+    assert stages["addends"].total < stages["zeros"].total
+    assert report.final == stages["addends"]
+    assert dict(report.paper_fig7) == {
+        "naive": 80000, "pruned": 38000, "addend": 16000}
+    assert "paper fig7" in report.report()
+    # report artifacts are not callable predictors
+    with pytest.raises(TypeError, match="not callable"):
+        art(_images(3, 4, 784))
+
+
+# ---------------------------------------------------------------------------
+# Frontend threshold validation (ISSUE satellite)
+# ---------------------------------------------------------------------------
+
+def test_lower_validates_input_threshold():
+    net = [np.ones((4, 3), np.int32), np.ones((3, 2), np.int32)]
+    for ok in (0, 128, 254, np.int64(17)):
+        assert netgen.lower(net, input_threshold=ok).input_threshold == int(ok)
+    for unreachable in (255, 300, -1, -128):
+        with pytest.raises(ValueError, match="uint8"):
+            netgen.lower(net, input_threshold=unreachable)
+    for bad_type in (128.0, "128", True):
+        with pytest.raises(TypeError, match="integer"):
+            netgen.lower(net, input_threshold=bad_type)
+    with pytest.raises(ValueError, match="uint8"):
+        netgen.compile_artifact(
+            quantize.QuantizedNet(weights=net, input_threshold=999))
+
+
+# ---------------------------------------------------------------------------
+# Circuit array codec (the store's on-disk circuit form)
+# ---------------------------------------------------------------------------
+
+def test_circuit_codec_round_trips_irregular_dag():
+    net = _random_net(4)
+    circuit, _ = PipelineSpec.parse("zeros,addends,cse").run(netgen.lower(net))
+    back = netgen.circuit_from_arrays(netgen.circuit_to_arrays(circuit))
+    assert back == circuit
+    x = _images(4, 16, 12)
+    np.testing.assert_array_equal(
+        netgen.evaluate(back, x), netgen.evaluate(circuit, x))
+
+
+# ---------------------------------------------------------------------------
+# Session + ArtifactStore
+# ---------------------------------------------------------------------------
+
+def test_session_compile_artifact_fields(tmp_path):
+    session = netgen.Session(store=netgen.ArtifactStore(tmp_path / "s"))
+    net = _random_net(5)
+    art = session.compile(net, target="jnp", pipeline="default")
+    assert art.source == "compile"
+    assert art.kind == "callable" and art.backend == "jnp"
+    assert art.pipeline == "zeros,prune"
+    assert art.digest == net.digest()
+    assert art.timings["total_s"] > 0
+    assert art.cost.total > 0
+    assert "cells" in art.report()
+    x = _images(5, 8, 12)
+    np.testing.assert_array_equal(np.asarray(art(x)), _ref(net, x))
+    # memory tier: same object back
+    assert session.compile(net, target="jnp", pipeline="default") is art
+    assert session.stats().hits == 1
+
+
+def test_session_key_crosses_digest_pipeline_target(tmp_path):
+    session = netgen.Session(store=netgen.ArtifactStore(tmp_path / "s"))
+    net = _random_net(6)
+    keys = {
+        session.compile(net, target="jnp").key,
+        session.compile(net, target="pallas").key,
+        session.compile(net, target="jnp", pipeline="zeros").key,
+        session.compile(_random_net(7), target="jnp").key,
+    }
+    assert len(keys) == 4
+    assert session.stats().compiles == 4
+    assert sorted(session.store.keys()) == sorted(keys)
+
+
+def test_artifact_store_warm_second_session(tmp_path):
+    """A second Session over the same directory rebuilds predictors from
+    the store: zero full compiles, bit-exact predictions."""
+    store_dir = tmp_path / "store"
+    net = _random_net(8)
+    x = _images(8, 12, 12)
+    first = netgen.Session(store=netgen.ArtifactStore(store_dir))
+    cold = first.compile(net, target="jnp")
+    assert first.stats().compiles == 1
+
+    warm_session = netgen.Session(store=netgen.ArtifactStore(store_dir))
+    warm = warm_session.compile(net, target="jnp")
+    st = warm_session.stats()
+    assert (st.compiles, st.store_hits) == (0, 1)
+    assert warm.source == "store"
+    assert warm.key == cold.key
+    assert "load_s" in warm.timings
+    assert [s.row() for s in warm.pass_stats] == \
+        [s.row() for s in cold.pass_stats]
+    assert warm.cost == cold.cost
+    np.testing.assert_array_equal(np.asarray(warm(x)), np.asarray(cold(x)))
+
+
+def test_artifact_store_text_and_report_round_trip(tmp_path):
+    store_dir = tmp_path / "store"
+    net = _random_net(9)
+    a = netgen.Session(store=store_dir)
+    b = netgen.Session(store=store_dir)
+    v_cold = a.compile(net, target="verilog", pipeline="hw")
+    v_warm = b.compile(net, target="verilog", pipeline="hw")
+    assert v_warm.source == "store" and v_warm.artifact == v_cold.artifact
+    c_cold = a.compile(net, target="cost", pipeline="hw")
+    c_warm = b.compile(net, target="cost", pipeline="hw")
+    assert c_warm.artifact.as_dict() == c_cold.artifact.as_dict()
+    assert b.stats().compiles == 0
+
+
+def test_artifact_store_cross_process_reuse(tmp_path):
+    """ISSUE acceptance: compile in a SUBPROCESS, then load warm in this
+    process — bit-exact outputs and zero compiles, via the store and
+    session counters."""
+    store_dir = tmp_path / "store"
+    net = _random_net(10)
+    x = _images(10, 16, 12)
+    script = f"""
+import json, sys
+import numpy as np
+sys.path.insert(0, {os.path.dirname(os.path.abspath(__file__))!r})
+from _netgen_helpers import random_net, images
+from repro import netgen
+
+net = random_net(10, (12, 9, 4), lo=-5, hi=5)
+x = images(10, 16, 12, salt=55)
+session = netgen.Session(store={str(store_dir)!r})
+art = session.compile(net, target="jnp")
+print(json.dumps({{
+    "key": art.key,
+    "compiles": session.stats().compiles,
+    "preds": np.asarray(art(x)).tolist(),
+}}))
+"""
+    out = subprocess.run(
+        [sys.executable, "-c", script], capture_output=True, text=True,
+        check=True, env={**os.environ, "PYTHONPATH": SRC})
+    child = json.loads(out.stdout.strip().splitlines()[-1])
+    assert child["compiles"] == 1
+
+    session = netgen.Session(store=netgen.ArtifactStore(store_dir))
+    art = session.compile(net, target="jnp")
+    st = session.stats()
+    assert (st.compiles, st.store_hits) == (0, 1)   # zero compiles warm
+    assert st.compile_seconds == 0.0                # zero compile time
+    assert art.key == child["key"]
+    np.testing.assert_array_equal(
+        np.asarray(art(x)), np.asarray(child["preds"], dtype=np.int64))
+
+
+def test_artifact_store_layout_and_idempotent_put(tmp_path):
+    store = netgen.ArtifactStore(tmp_path / "store")
+    art = netgen.compile_artifact(_random_net(11), target="verilog")
+    store.put(art)
+    assert art.key in store and len(store) == 1
+    store.put(art)                                   # second put: no-op
+    assert store.stats.saves == 1
+    meta = json.loads(
+        (tmp_path / "store" / art.key / "meta.json").read_text())
+    assert meta["target"] == "verilog" and meta["pipeline"] == "zeros,prune"
+    assert store.get("0" * 64) is None
+    assert store.stats.misses == 1
+
+
+def test_artifact_store_recovers_from_corrupt_entry(tmp_path):
+    """Bit-rot must degrade to a recompile, not a hard failure: a
+    readable meta.json with an unreadable payload is evicted and
+    re-missed, and the subsequent compile re-creates the entry."""
+    store_dir = tmp_path / "store"
+    net = _random_net(13)
+    x = _images(13, 8, 12)
+    first = netgen.Session(store=store_dir)
+    cold = first.compile(net, target="jnp")
+    (store_dir / cold.key / "circuit.npz").write_bytes(b"not a zipfile")
+
+    session = netgen.Session(store=netgen.ArtifactStore(store_dir))
+    art = session.compile(net, target="jnp")
+    st = session.stats()
+    assert (st.compiles, st.store_hits) == (1, 0)
+    assert session.store.stats.corrupt == 1
+    np.testing.assert_array_equal(np.asarray(art(x)), _ref(net, x))
+    # the recompile re-persisted a healthy entry
+    warm = netgen.Session(store=store_dir).compile(net, target="jnp")
+    assert warm.source == "store"
+
+
+def test_compile_cache_over_store(tmp_path):
+    """serve.CompileCache is the in-memory tier over the store: a fresh
+    cache on the same directory loads instead of compiling."""
+    store = netgen.ArtifactStore(tmp_path / "store")
+    net = _random_net(12)
+    cache = netgen.CompileCache(capacity=4, store=store)
+    first = cache.get_or_compile(net)
+    assert cache.get_or_compile(net) is first
+    st = cache.stats()
+    assert (st.hits, st.misses, st.compiles, st.store_hits) == (1, 1, 1, 0)
+
+    cache2 = netgen.CompileCache(capacity=4, store=store)
+    warm = cache2.get_or_compile(net)
+    st2 = cache2.stats()
+    assert (st2.compiles, st2.store_hits) == (0, 1)
+    assert st2.load_seconds > 0
+    x = _images(12, 8, 12)
+    np.testing.assert_array_equal(np.asarray(warm(x)), np.asarray(first(x)))
+
+
+def test_netserver_over_session(tmp_path):
+    """NetServer(session=...) serves through the session's store: a
+    second server in a fresh session warm-starts every version."""
+    store_dir = tmp_path / "store"
+    nets = {f"v{i}": _random_net(20 + i) for i in range(2)}
+    s1 = netgen.Session(store=store_dir)
+    server = netgen.NetServer(session=s1, slot_capacity=8)
+    for name, net in nets.items():
+        server.register(name, net)
+    assert s1.stats().compiles == 2
+    x = _images(20, 8, 12)
+    out = server.predict_many({"v0": x, "v1": x})
+    for name, net in nets.items():
+        np.testing.assert_array_equal(out[name], _ref(net, x))
+
+    s2 = netgen.Session(store=store_dir)
+    server2 = netgen.NetServer(session=s2, slot_capacity=8)
+    for name, net in nets.items():
+        server2.register(name, net)
+    st = s2.stats()
+    assert (st.compiles, st.store_hits) == (0, 2)
+    out2 = server2.predict_many({"v0": x, "v1": x})
+    for name in nets:
+        np.testing.assert_array_equal(out2[name], out[name])
+    with pytest.raises(ValueError, match="not both"):
+        netgen.NetServer(session=s2, cache=netgen.CompileCache())
+
+
+def test_netserver_accepts_target_strings():
+    server = netgen.NetServer(
+        target="pallas[interpret=true]", pipeline="default",
+        slot_capacity=8, warmup=False)
+    net = _random_net(30, sizes=(10, 8, 4))
+    server.register("v", net)
+    x = _images(30, 6, 10)
+    np.testing.assert_array_equal(server.predict("v", x), _ref(net, x))
+    with pytest.raises(ValueError, match="callable"):
+        netgen.NetServer(target="cost")
+
+
+# ---------------------------------------------------------------------------
+# Deprecated shim
+# ---------------------------------------------------------------------------
+
+def test_compile_net_still_accepts_unrepresentable_pipelines():
+    """PR1-era calls with closure or repeated passes keep compiling (the
+    acceptance promise) — directly and uncached, since such pipelines
+    have no stable fingerprint for the store."""
+    net = _random_net(41)
+    x = _images(41, 8, 12)
+
+    def budgeted(c):
+        return netgen.share_common_addends(c, max_new_nodes=2)
+
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", DeprecationWarning)
+        via_closure = netgen.compile_net(
+            net, backend="verilog",
+            passes=(netgen.delete_zero_terms, budgeted))
+        repeated = netgen.compile_net(
+            net, passes=(netgen.delete_zero_terms, netgen.prune_dead_units,
+                         netgen.delete_zero_terms))
+    assert "endmodule" in via_closure.artifact
+    assert [s.name for s in via_closure.pass_stats][-1] == "budgeted"
+    np.testing.assert_array_equal(np.asarray(repeated(x)), _ref(net, x))
+
+
+def test_artifact_key_includes_compiler_sources(tmp_path):
+    """The store key folds in a fingerprint of the netgen sources, so a
+    compiler edit can never warm-start stale circuits."""
+    from repro.netgen import session as session_mod
+    net = _random_net(42)
+    spec = PipelineSpec.named("default")
+    k1 = session_mod.artifact_key(net.digest(), spec, "jnp")
+    old = session_mod._SOURCE_FINGERPRINT
+    try:
+        session_mod._SOURCE_FINGERPRINT = "deadbeef"  # simulate code change
+        k2 = session_mod.artifact_key(net.digest(), spec, "jnp")
+    finally:
+        session_mod._SOURCE_FINGERPRINT = old
+    assert k1 != k2
+
+
+def test_compile_net_deprecated_but_equivalent():
+    net = _random_net(40)
+    x = _images(40, 8, 12)
+    with warnings.catch_warnings(record=True) as caught:
+        warnings.simplefilter("always")
+        compiled = netgen.compile_net(net)
+    assert any(issubclass(w.category, DeprecationWarning) for w in caught)
+    assert isinstance(compiled, netgen.CompiledNet)
+    art = netgen.default_session().compile(net, target="jnp")
+    np.testing.assert_array_equal(np.asarray(compiled(x)), np.asarray(art(x)))
+    np.testing.assert_array_equal(np.asarray(compiled(x)), _ref(net, x))
