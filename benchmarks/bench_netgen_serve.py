@@ -13,13 +13,22 @@ Measures, in the `bench_throughput` CSV idiom:
     serving each compiled predictor individually, for M in 1..8 and
     batch sizes 1..1024, with a bit-exactness check on every
     configuration
+  * the packed vs dense pallas activation datapath (ISSUE 4):
+    `pallas[packed=true]` bit-packs activations 32-per-uint32 lane,
+    measured on the paper-sized 784-500-10 net under --full (bit-exact
+    asserted against the jnp oracle)
+  * sharded vs single-device stacked serving (ISSUE 4): predict_many
+    under a mesh with a data axis (shard_map over the slot dimension)
+    vs the same requests without a mesh, bit-exact asserted; pass
+    --fake-devices 8 (standalone runs only — the flag must precede
+    jax initialization) to spread over faked host devices
 
 The JSON artifact (CI uploads it) additionally registers the `cost`
 target's Figure-7-style logic-cell estimates per pass for the benchmark
 net.
 
   PYTHONPATH=src python benchmarks/bench_netgen_serve.py [--full] \\
-      [--json bench_netgen_serve.json]
+      [--fake-devices N] [--json bench_netgen_serve.json]
 """
 from __future__ import annotations
 
@@ -122,6 +131,78 @@ def run(full: bool = False, json_path: str | None = None) -> list[str]:
     for stage, cells in cost.per_pass:
         rows.append(f"netgen_cost_cells_{stage},0,{cells.total}")
 
+    # -- packed vs dense pallas activation datapath (ISSUE 4) ---------------
+    psizes = (784, 500, 10) if full else sizes        # paper net under --full
+    pnet = _nets(1, psizes, seed=7)[0]
+    pb = 256
+    px = _images(pb, psizes[0], seed=11)
+    oracle = netgen.compile_artifact(pnet, target="jnp")
+    forms = {"dense": netgen.compile_artifact(pnet, target="pallas"),
+             "packed": netgen.compile_artifact(
+                 pnet, target="pallas[packed=true]")}
+    want = np.asarray(oracle(px))
+    results["packed"] = {"sizes": list(psizes), "batch": pb}
+    for form, art in forms.items():
+        got = np.asarray(art(px))                    # warm + exactness
+        assert np.array_equal(got, want), f"{form} diverged from jnp oracle"
+        t0 = time.perf_counter()
+        for _ in range(reps):
+            np.asarray(art(px))
+        dt = (time.perf_counter() - t0) / reps
+        results["packed"][form] = {
+            "us_per_batch": dt * 1e6, "preds_per_s": pb / dt,
+            "plan_form": art.plan_form, "exact_vs_jnp": True,
+        }
+        rows.append(f"netgen_serve_pallas_{form}_b{pb},"
+                    f"{dt*1e6:.0f},{pb/dt:.0f}")
+    results["packed"]["packed_vs_dense_speedup"] = (
+        results["packed"]["dense"]["us_per_batch"]
+        / results["packed"]["packed"]["us_per_batch"])
+
+    # -- sharded vs single-device stacked serving (ISSUE 4) -----------------
+    import math
+
+    import jax
+    from repro.launch.mesh import make_host_mesh
+    from repro.parallel import sharding as shd
+
+    m, b = (4, 1024) if full else (2, 256)
+    # the data axis must divide the slot capacity or the dispatch falls
+    # back to single-device; use the largest device count that does
+    n_dev = math.gcd(len(jax.devices()), b)
+    shard_server = netgen.NetServer(cache=cache, slot_capacity=b)
+    for i in range(m):
+        shard_server.register(f"v{i}", nets[i])
+    shard_reqs = {f"v{i}": _images(b, sizes[0], seed=200 + i)
+                  for i in range(m)}
+    single_out = shard_server.predict_many(shard_reqs)     # warm
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        shard_server.predict_many(shard_reqs)
+    dt_single = (time.perf_counter() - t0) / reps
+    with shd.use_mesh(make_host_mesh(data=n_dev)):
+        sharded_out = shard_server.predict_many(shard_reqs)  # warm
+        t0 = time.perf_counter()
+        for _ in range(reps):
+            shard_server.predict_many(shard_reqs)
+        dt_sharded = (time.perf_counter() - t0) / reps
+    exact = all(np.array_equal(single_out[v], sharded_out[v])
+                for v in shard_reqs)
+    assert exact, "sharded dispatch diverged from single-device"
+    assert shard_server.dispatch_counts["sharded"] > 0
+    preds = m * b
+    results["sharded"] = {
+        "devices": n_dev, "versions": m, "batch": b, "exact": exact,
+        "single_device_us": dt_single * 1e6,
+        "sharded_us": dt_sharded * 1e6,
+        "single_device_preds_per_s": preds / dt_single,
+        "sharded_preds_per_s": preds / dt_sharded,
+    }
+    rows.append(f"netgen_serve_single_device_m{m}_b{b},"
+                f"{dt_single*1e6:.0f},{preds/dt_single:.0f}")
+    rows.append(f"netgen_serve_sharded{n_dev}_m{m}_b{b},"
+                f"{dt_sharded*1e6:.0f},{preds/dt_sharded:.0f}")
+
     # -- stacked multi-net dispatch vs individual serving -------------------
     for m in m_versions:
         for b in batches:
@@ -171,9 +252,18 @@ def run(full: bool = False, json_path: str | None = None) -> list[str]:
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true")
+    ap.add_argument("--fake-devices", type=int, default=0, metavar="N",
+                    help="fake N host devices for the sharded rows "
+                         "(standalone runs only: must be set before jax "
+                         "initializes)")
     ap.add_argument("--json", default="bench_netgen_serve.json",
                     help="write the full measurement set here")
     args = ap.parse_args()
+    if args.fake_devices:
+        import os
+        os.environ["XLA_FLAGS"] = (
+            os.environ.get("XLA_FLAGS", "")
+            + f" --xla_force_host_platform_device_count={args.fake_devices}")
     print("name,us_per_call,derived")
     for row in run(full=args.full, json_path=args.json):
         print(row, flush=True)

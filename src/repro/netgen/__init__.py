@@ -8,6 +8,10 @@ rewrites serve arbitrary-depth nets and multiple execution targets:
 
     frontend.lower        quantized N-layer stack -> circuit IR
     PipelineSpec          declarative pass pipeline ("zeros,prune,...")
+    plan.lower_circuit    optimized circuit -> ExecutionPlan, the ONE
+                          layer-structured tensor lowering every array
+                          backend executes (dense / bit-packed /
+                          stacked multi-net forms)
     Target registry       IR -> artifact (jitted fn, Verilog text,
                           logic-cell cost report)
     Session + ArtifactStore   compile once per content, persist across
@@ -63,13 +67,30 @@ same directory warm-starts every artifact without recompiling.
 `compile_net(...)` is the pre-Session entry point; it still works but
 is deprecated and routed through a default Session.
 
-Serving (compile cache + multi-version dispatch)
-------------------------------------------------
+Execution plans (the array-backend lowering)
+--------------------------------------------
+`repro.netgen.plan.lower_circuit` turns an optimized circuit into an
+`ExecutionPlan` — per-layer weight matrices, activation kind, input
+threshold, final argmax — and every array backend (jnp / pallas /
+fused) is a thin executor over it. `plan.pack()` is the bit-packed
+form: ±1-weighted single-bit activations travel 32-per-uint32 word
+into `kernels.binary_matvec.binary_matmul_packed` (the paper's
+single-bit wires, on the TPU), selected with `pallas[packed=true]`
+and bit-exact with the dense path. `plan.stack_plans` joins M
+compatible plans along a model axis for the serving layer. Artifacts
+record the compiled form (`artifact.plan_form`) and re-derive the
+plan via `artifact.plan()`.
+
+Serving (compile cache + multi-version dispatch + mesh sharding)
+----------------------------------------------------------------
 `repro.netgen.serve` makes the compile-per-model-then-serve workflow
 operational: `CompileCache` is the Session's in-memory tier (same
 content addressing, LRU, thread-safe), and a `NetServer` routes request
 batches — cross-model batches of stack-compatible versions run as ONE
-jitted multi-net dispatch:
+jitted multi-net dispatch, and when a device mesh with a data axis is
+active (`repro.parallel.sharding.use_mesh`) that dispatch shards its
+slot dimension across the mesh via `shard_map` (single-device fallback
+otherwise):
 
     session = netgen.Session(store=netgen.ArtifactStore(cache_dir))
     server = netgen.NetServer(session=session, slot_capacity=64)
@@ -77,6 +98,9 @@ jitted multi-net dispatch:
     server.register("v1-replica", qnet)      # memory hit, ~us
     out = server.predict_many({"v1": imgs_a, "v2": imgs_b})
     print(session.stats().row())             # hits/misses/compile time
+
+    with shd.use_mesh(make_host_mesh(data=8)):    # 8-way batch sharding
+        out = server.predict_many({"v1": imgs_a, "v2": imgs_b})
 
 See `benchmarks/bench_netgen_serve.py` for cold-vs-warm,
 cold-process-vs-warm-store, and stacked-vs-individual numbers, and the
@@ -107,6 +131,9 @@ from repro.netgen.pipeline import (
     PipelineSpec, list_passes, list_pipelines, register_pass,
     register_pipeline,
 )
+from repro.netgen.plan import (
+    ExecutionPlan, PlanLayer, lower_circuit, stack_plans,
+)
 from repro.netgen.session import (
     Artifact, ArtifactStore, Session, compile_artifact,
 )
@@ -118,16 +145,18 @@ from repro.netgen.targets import (
 __all__ = [
     "Argmax", "Artifact", "ArtifactStore", "CacheKey", "CellCounts",
     "Circuit", "CircuitOps", "CompileCache", "CompiledNet", "CostReport",
-    "DEFAULT_PASSES", "HW_PASSES", "InputCompare", "IrregularCircuitError",
-    "NetServer", "Pass", "PassStats", "PipelineSpec", "Session", "SignStep",
-    "Target", "Term", "WeightedSum", "addend_rewrite", "as_layered_weights",
-    "backends", "cached_compile_net", "circuit_from_arrays",
-    "circuit_to_arrays", "compile_artifact", "compile_net",
-    "default_session", "delete_zero_terms", "emit_verilog", "evaluate",
-    "list_passes", "list_pipelines", "list_targets", "lower", "node_widths",
-    "ops", "prune_dead_units", "register_pass", "register_pipeline",
-    "register_target", "resolve_target", "run_pipeline", "serve",
-    "share_common_addends", "specialize", "stack_layered_weights",
+    "DEFAULT_PASSES", "ExecutionPlan", "HW_PASSES", "InputCompare",
+    "IrregularCircuitError", "NetServer", "Pass", "PassStats",
+    "PipelineSpec", "PlanLayer", "Session", "SignStep", "Target", "Term",
+    "WeightedSum", "addend_rewrite", "as_layered_weights", "backends",
+    "cached_compile_net", "circuit_from_arrays", "circuit_to_arrays",
+    "compile_artifact", "compile_net", "default_session",
+    "delete_zero_terms", "emit_verilog", "evaluate", "list_passes",
+    "list_pipelines", "list_targets", "lower", "lower_circuit",
+    "node_widths", "ops", "prune_dead_units", "register_pass",
+    "register_pipeline", "register_target", "resolve_target",
+    "run_pipeline", "serve", "share_common_addends", "specialize",
+    "stack_layered_weights", "stack_plans",
 ]
 
 

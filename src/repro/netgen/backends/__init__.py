@@ -3,21 +3,30 @@
 A backend turns an optimized circuit into an artifact:
 
   jnp      — jitted adds-only predictor, weights as XLA literals (oracle)
-  pallas   — per-layer binary_matvec TPU kernel chain
+  pallas   — per-layer binary_matvec TPU kernel chain (`packed=true`
+             selects the bit-packed activation datapath)
   fused    — single-launch whole-net Pallas kernel (2-layer only)
   verilog  — the paper's combinational module source (string)
   cost     — IR walk -> logic-cell estimate vs the paper's Figure 7
 
+Every array backend (jnp / pallas / fused) compiles through ONE
+lowering step — `repro.netgen.plan.lower_circuit`, which turns the
+circuit IR into a layer-structured `ExecutionPlan` — and is a thin
+executor over that plan; no backend extracts weights from IR nodes
+itself.
+
 `compile_circuit(circuit, backend)` dispatches by name — `backend` may
-carry bracketed options ("verilog[style=legacy]", "pallas[interpret]")
+carry bracketed options ("verilog[style=legacy]", "pallas[packed=true]")
 — through `repro.netgen.targets`, the registry that owns each target's
 entry point, artifact kind, declared options, and multi-net form.
 Callable artifacts map uint8 image batches to predicted class indices.
 
 The jnp and pallas targets additionally offer a *multi-net* form
-(`compile_multi`): M versions' reconstructed weight matrices, stacked
-along a model axis, become one jitted (M, B, n_in) -> (M, B) dispatch —
-the cross-model batching used by `repro.netgen.serve.NetServer`.
+(`compile_multi`): a *stacked* ExecutionPlan (M versions' plans joined
+along a leading model axis by `repro.netgen.plan.stack_plans`) becomes
+one jitted (M, B, n_in) -> (M, B) dispatch — the cross-model batching
+used by `repro.netgen.serve.NetServer`. The multi form accepts exactly
+the same declared target options as the single-net form.
 """
 from __future__ import annotations
 
@@ -39,19 +48,20 @@ MULTI_BACKENDS = tuple(
 def compile_circuit(circuit, backend: str = "jnp", **opts):
     """Compile an IR circuit with the named target. Extra options are
     target-specific (declared in the registry; e.g. module_name/style/
-    addend for verilog, interpret for pallas/fused)."""
+    addend for verilog, interpret/packed for pallas)."""
     target, merged = resolve_target(backend, opts)
     return target.compile(circuit, **merged)
 
 
-def compile_multi(stacked_ws, input_threshold: int, backend: str = "jnp",
-                  **opts):
-    """Compile M stacked weight sets into one jitted multi-net dispatch:
-    uint8 (M, B, n_in) -> predictions (M, B). `backend` accepts bracket
-    options like the single-net form (e.g. "pallas[interpret=false]")."""
+def compile_multi(plan, backend: str = "jnp", **opts):
+    """Compile a stacked ExecutionPlan into one jitted multi-net
+    dispatch: uint8 (M, B, n_in) -> predictions (M, B). `backend`
+    accepts bracket options like the single-net form (e.g.
+    "pallas[packed=true]"); options are validated against the target's
+    declaration — there is no raw-kwargs side door."""
     target, merged = resolve_target(backend, opts)
     if target.compile_multi is None:
         raise ValueError(
             f"target {target.name!r} has no multi-net dispatch "
             f"(have {MULTI_BACKENDS})")
-    return target.compile_multi(stacked_ws, input_threshold, **merged)
+    return target.compile_multi(plan, **merged)

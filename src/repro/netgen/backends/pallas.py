@@ -1,11 +1,20 @@
-"""Pallas backend: compile a regular circuit onto the TPU kernels.
+"""Pallas backend: execute an ExecutionPlan on the TPU kernels.
 
 Per-layer path (any depth) chains the `binary_matvec` masked-accumulate
 kernel — the VPU select/add realization of the paper's L5 rewrite — with
-a sign-bit step between layers. The `fused` variant lowers the whole
-2-layer paper net into the single-launch `fused_mlp` kernel, the
-combinational-circuit analogue (one "net" per prediction, intermediate
-activations never leaving VMEM).
+a sign-bit step between layers. Two datapaths, selected by the plan
+form (`pallas[packed=true]`):
+
+  dense   — activations travel as int8 {0,1} vectors into
+            `binary_matmul` (one byte per wire).
+  packed  — activations are bit-packed 32-per-uint32 word between
+            layers and fed to `binary_matmul_packed` (one *bit* per
+            wire — the TPU analogue of the paper's single-bit nets,
+            8x less activation traffic and fewer K-grid steps).
+
+The `fused` variant lowers the whole 2-layer paper net into the
+single-launch `fused_mlp` kernel, the combinational-circuit analogue
+(one "net" per prediction, intermediate activations never leaving VMEM).
 
 Kernels run in interpret mode on CPU containers (see kernels/*/ops.py);
 on a real TPU the same code path compiles to Mosaic.
@@ -15,28 +24,42 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from repro.netgen.graph import Circuit, IrregularCircuitError, as_layered_weights
+from repro.netgen.graph import Circuit, IrregularCircuitError
+from repro.netgen.plan import ExecutionPlan, lower_circuit
 
 __all__ = ["compile_pallas", "compile_pallas_multi", "compile_fused"]
 
 
-def compile_pallas(circuit: Circuit, *, interpret: bool | None = None):
-    """Return a jitted fn chaining one binary_matmul launch per layer.
+def _layer_matmul(bmv, kw, packed: bool):
+    """One plan layer as a kernel launch: int8 activation bits (B, K) x
+    int32 weights -> int32 accumulators (B, N). The packed datapath
+    packs the bits into uint32 words first (`pack_bits` pads K to the
+    same 32-multiple the packed plan padded the weights to)."""
+    def matmul(a, w):
+        if w.shape[0] == 0:  # fully-pruned predecessor layer: constant 0
+            return jnp.zeros((a.shape[0], w.shape[1]), jnp.int32)
+        if packed:
+            return bmv.binary_matmul_packed(bmv.pack_bits(a), w, **kw)
+        return bmv.binary_matmul(a, w, **kw)
+    return matmul
+
+
+def compile_pallas(circuit: Circuit, *, interpret: bool | None = None,
+                   packed: bool = False):
+    """Return a jitted fn chaining one kernel launch per plan layer.
 
     `interpret` overrides the kernel ops' container default (interpret
     mode on CPU); pass `pallas[interpret=false]` on a real TPU to lower
-    through Mosaic.
+    through Mosaic. `packed` selects the bit-packed activation datapath
+    (`pallas[packed=true]`), bit-exact with the dense path.
     """
     from repro.kernels.binary_matvec import ops as bmv
 
     kw = {} if interpret is None else {"interpret": interpret}
-    ws = [jnp.asarray(w, jnp.int32) for w in as_layered_weights(circuit)]
-    thr = circuit.input_threshold
-
-    def matmul(a, w):
-        if w.shape[0] == 0:  # fully-pruned predecessor layer: constant 0
-            return jnp.zeros((a.shape[0], w.shape[1]), jnp.int32)
-        return bmv.binary_matmul(a, w, **kw)
+    plan = lower_circuit(circuit, packed=packed)
+    ws = [jnp.asarray(l.weights, jnp.int32) for l in plan.layers]
+    thr = plan.input_threshold
+    matmul = _layer_matmul(bmv, kw, plan.packed)
 
     @jax.jit
     def predict(x_uint8):
@@ -48,28 +71,30 @@ def compile_pallas(circuit: Circuit, *, interpret: bool | None = None):
     return predict
 
 
-def compile_pallas_multi(stacked_ws, input_threshold: int,
-                         *, interpret: bool | None = None):
+def compile_pallas_multi(plan: ExecutionPlan, *,
+                         interpret: bool | None = None,
+                         packed: bool = False):
     """Multi-net dispatch through the binary_matvec kernel chain.
 
-    `stacked_ws` is a list of (M, fan_in, fan_out) int arrays (padded and
-    stacked per `repro.netgen.serve.stack_layered_weights`). The model
-    axis is swept with `lax.map` — a scan whose body is the per-layer
-    kernel chain, so the whole M-version batch is one jitted dispatch and
-    each version's weights stream through the same kernel traces.
-    `interpret` as in `compile_pallas` (the single-version path and the
-    stacked path must honor the same target options).
+    `plan` is a *stacked* ExecutionPlan (`repro.netgen.plan.stack_plans`,
+    hidden widths pre-padded): per-layer (M, fan_in, fan_out) weights.
+    The model axis is swept with `lax.map` — a scan whose body is the
+    per-layer kernel chain, so the whole M-version batch is one jitted
+    dispatch and each version's weights stream through the same kernel
+    traces. `interpret` and `packed` as in `compile_pallas` (the
+    single-version path and the stacked path honor the same declared
+    target options).
     """
     from repro.kernels.binary_matvec import ops as bmv
 
+    if not plan.stacked:
+        raise ValueError("compile_pallas_multi needs a stacked ExecutionPlan")
     kw = {} if interpret is None else {"interpret": interpret}
-    ws = [jnp.asarray(w, jnp.int32) for w in stacked_ws]
-    thr = int(input_threshold)
-
-    def matmul(a, w):
-        if w.shape[0] == 0:  # fully-pruned predecessor layer: constant 0
-            return jnp.zeros((a.shape[0], w.shape[1]), jnp.int32)
-        return bmv.binary_matmul(a, w, **kw)
+    if packed:
+        plan = plan.pack()
+    ws = [jnp.asarray(l.weights, jnp.int32) for l in plan.layers]
+    thr = plan.input_threshold
+    matmul = _layer_matmul(bmv, kw, plan.packed)
 
     def one_version(slices):
         x, *wm = slices
@@ -86,17 +111,17 @@ def compile_pallas_multi(stacked_ws, input_threshold: int,
 
 
 def compile_fused(circuit: Circuit, *, interpret: bool | None = None):
-    """Whole-net single Pallas launch; 2-layer circuits only."""
+    """Whole-net single Pallas launch; 2-layer plans only."""
     from repro.kernels.fused_mlp import ops as fused
 
     kw = {} if interpret is None else {"interpret": interpret}
-    ws = as_layered_weights(circuit)
-    if len(ws) != 2:
+    plan = lower_circuit(circuit)
+    if plan.depth != 2:
         raise IrregularCircuitError(
-            f"fused backend supports exactly 2 layers, got {len(ws)}")
-    w1 = jnp.asarray(ws[0], jnp.int32)
-    w2 = jnp.asarray(ws[1], jnp.int32)
-    thr = circuit.input_threshold
+            f"fused backend supports exactly 2 layers, got {plan.depth}")
+    w1 = jnp.asarray(plan.layers[0].weights, jnp.int32)
+    w2 = jnp.asarray(plan.layers[1].weights, jnp.int32)
+    thr = plan.input_threshold
 
     @jax.jit
     def predict(x_uint8):

@@ -26,8 +26,9 @@ import math
 
 from repro.netgen.graph import (
     Argmax, Circuit, InputCompare, IrregularCircuitError, SignStep,
-    WeightedSum, as_layered_weights, node_widths, signed_width, value_bounds,
+    WeightedSum, node_widths, signed_width, value_bounds,
 )
+from repro.netgen.plan import lower_circuit
 
 __all__ = ["emit_verilog"]
 
@@ -90,7 +91,7 @@ def emit_verilog(
     if style in ("auto", "legacy"):
         try:
             if circuit.depth == 2:
-                as_layered_weights(circuit)  # regularity check only
+                lower_circuit(circuit)       # regularity check only
                 return _emit_legacy(circuit, module_name, addend)
         except IrregularCircuitError:
             if style == "legacy":

@@ -1,0 +1,207 @@
+"""ExecutionPlan: the one circuit→tensor lowering shared by array backends.
+
+Before this module, every array backend (`backends/jnp.py`,
+`backends/pallas.py`, the fused path) independently re-extracted dense
+weight matrices from the circuit IR and re-derived the layer structure.
+`lower_circuit` centralizes that step: it turns an optimized *regular*
+circuit into an explicit layer-structured tensor program — per-layer
+weight matrices, the activation applied after each accumulation, the
+input binarization threshold, and the final argmax — that backends
+execute without ever looking at IR nodes again.
+
+The plan has three orthogonal forms:
+
+  dense    — per-layer int32 (fan_in, fan_out) matrices, activations as
+             int8 {0,1} vectors. What the paper's arithmetic literally
+             says; the jnp oracle executes this form.
+  packed   — `plan.pack()`: every layer's fan_in axis is zero-padded up
+             to a multiple of 32 so the ±1-weighted single-bit
+             activations can travel as uint32 words (32 per lane) into
+             `kernels.binary_matvec.binary_matmul_packed` — the TPU
+             analogue of the paper's single-bit wires, 8x less
+             activation traffic than int8. Zero-padding is exact: a
+             padded activation bit is 0 and its weight row is zero.
+  stacked  — `stack_plans([...])`: M compatible single-net plans joined
+             along a leading model axis ((M, fan_in, fan_out) weights)
+             for the serving layer's multi-net dispatch. Hidden widths
+             may differ between versions (pruning is per-model): they
+             are zero-padded to the per-layer maximum, exact under the
+             strict step semantics (an all-zero column is an empty
+             accumulator, step(0) = 0, and its outgoing row is
+             zero-padded too). A stacked plan can then be packed.
+
+Backends declare which form they execute via target options
+(`pallas[packed=true]`); the Session records the compiled form on the
+`Artifact` (`artifact.plan_form`).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+import numpy as np
+
+from repro.netgen.graph import Circuit, as_layered_weights
+
+__all__ = [
+    "ExecutionPlan", "PlanLayer", "PACK_LANES", "lower_circuit",
+    "stack_plans",
+]
+
+PACK_LANES = 32      # activations per uint32 word in the packed datapath
+
+# Activation kinds a layer can apply to its accumulator vector.
+STEP = "step"        # hidden layers: strict sign step, acc > 0 -> {0,1}
+ARGMAX = "argmax"    # final layer: the class scores feed the argmax
+
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class PlanLayer:
+    """One dense layer of the tensor program.
+
+    `weights` is int32 (fan_in, fan_out) — or (M, fan_in, fan_out) in a
+    stacked plan. `activation` says what happens to the accumulator:
+    "step" (hidden layers) or "argmax" (the final scores). In a packed
+    plan the fan_in axis is padded to a PACK_LANES multiple and `words`
+    holds the uint32 lane count (fan_in // 32); dense layers have
+    `words` None.
+    """
+    weights: np.ndarray
+    activation: str
+    words: int | None = None
+
+    @property
+    def fan_in(self) -> int:
+        return self.weights.shape[-2]
+
+    @property
+    def fan_out(self) -> int:
+        return self.weights.shape[-1]
+
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class ExecutionPlan:
+    """A complete layer-structured tensor program for one (or M stacked)
+    circuit(s): binarize uint8 inputs against `input_threshold`, run the
+    layers in order, return the final layer's argmax. See module doc for
+    the dense/packed/stacked forms."""
+    n_inputs: int
+    input_threshold: int
+    layers: tuple[PlanLayer, ...]
+    packed: bool = False
+    n_models: int | None = None      # None: single net; M: stacked plans
+
+    @property
+    def depth(self) -> int:
+        return len(self.layers)
+
+    @property
+    def stacked(self) -> bool:
+        return self.n_models is not None
+
+    @property
+    def form(self) -> str:
+        """The datapath form an executor of this plan implements —
+        recorded on Artifacts and shown in benchmarks."""
+        return "packed" if self.packed else "dense"
+
+    @property
+    def n_classes(self) -> int:
+        return self.layers[-1].fan_out
+
+    def describe(self) -> str:
+        shape = "x".join(str(l.fan_out) for l in self.layers)
+        stacked = f"{self.n_models}x" if self.stacked else ""
+        return f"{stacked}{self.n_inputs}-{shape} ({self.form})"
+
+    # -- form conversions ----------------------------------------------------
+
+    def pack(self) -> "ExecutionPlan":
+        """The packed form of this plan: every layer's fan_in axis
+        zero-padded to a PACK_LANES multiple so activations travel as
+        uint32 words (see module doc; exact by construction)."""
+        if self.packed:
+            return self
+        layers = []
+        for layer in self.layers:
+            k = layer.fan_in
+            kp = -(-k // PACK_LANES) * PACK_LANES if k else 0
+            w = layer.weights
+            if kp != k:
+                pad = [(0, 0)] * w.ndim
+                pad[-2] = (0, kp - k)
+                w = np.pad(w, pad)
+            layers.append(dataclasses.replace(
+                layer, weights=w, words=kp // PACK_LANES))
+        return dataclasses.replace(
+            self, layers=tuple(layers), packed=True)
+
+
+def lower_circuit(circuit: Circuit, *, packed: bool = False) -> ExecutionPlan:
+    """Lower a *regular* optimized circuit into an ExecutionPlan — the
+    single weight-extraction step every array backend compiles through.
+    Raises IrregularCircuitError for shared/CSE circuits (which have no
+    layered tensor form; see `graph.as_layered_weights`)."""
+    mats = as_layered_weights(circuit)
+    layers = tuple(
+        PlanLayer(weights=np.asarray(w, dtype=np.int32),
+                  activation=STEP if i < len(mats) - 1 else ARGMAX)
+        for i, w in enumerate(mats))
+    plan = ExecutionPlan(
+        n_inputs=circuit.n_inputs,
+        input_threshold=circuit.input_threshold,
+        layers=layers)
+    return plan.pack() if packed else plan
+
+
+def stack_plans(plans: Sequence[ExecutionPlan]) -> ExecutionPlan:
+    """Join M compatible single-net dense plans along a leading model
+    axis for the multi-net dispatch. Versions must agree on depth, input
+    width, class count, and input threshold; hidden widths are
+    zero-padded to the per-layer maximum (exact — see module doc).
+    Pack *after* stacking (`stack_plans(plans).pack()`): padding hidden
+    widths changes the lane count."""
+    if not plans:
+        raise ValueError("no plans to stack")
+    if any(p.packed or p.stacked for p in plans):
+        raise ValueError(
+            "stack_plans takes dense single-net plans; pack after stacking")
+
+    depths = {p.depth for p in plans}
+    if len(depths) != 1:
+        raise ValueError(f"versions disagree on depth: {sorted(depths)}")
+    thrs = {p.input_threshold for p in plans}
+    if len(thrs) != 1:
+        raise ValueError(
+            f"versions disagree on input threshold: {sorted(thrs)}")
+    n_ins = {p.n_inputs for p in plans}
+    if len(n_ins) != 1:
+        raise ValueError(
+            f"versions disagree on input width: {sorted(n_ins)}")
+    n_outs = {p.n_classes for p in plans}
+    if len(n_outs) != 1:
+        # class counts cannot be padded: an extra constant-0 class could
+        # win the argmax when every real score is negative
+        raise ValueError(
+            f"versions disagree on class count: {sorted(n_outs)}")
+
+    depth = depths.pop()
+    mats = [[l.weights for l in p.layers] for p in plans]
+    for layer in range(depth - 1):
+        width = max(m[layer].shape[1] for m in mats)
+        for m in mats:
+            have = m[layer].shape[1]
+            if have < width:
+                m[layer] = np.pad(m[layer], ((0, 0), (0, width - have)))
+                m[layer + 1] = np.pad(
+                    m[layer + 1], ((0, width - have), (0, 0)))
+    layers = tuple(
+        PlanLayer(
+            weights=np.stack([m[layer] for m in mats]).astype(np.int32),
+            activation=STEP if layer < depth - 1 else ARGMAX)
+        for layer in range(depth))
+    return ExecutionPlan(
+        n_inputs=n_ins.pop(),
+        input_threshold=thrs.pop(),
+        layers=layers,
+        n_models=len(plans))

@@ -19,11 +19,20 @@ ROADMAP's "Serving specialized programs" item:
   NetServer — a multi-version predictor server in the style of
       `repro.serve.engine`: fixed-capacity slot batching (one live jit
       trace per model), per-request routing by version name, and
-      *cross-model* batching: versions whose circuits reconstruct to
-      compatible layered weights are stacked along a model axis
-      (`stack_layered_weights`) and served by one jitted multi-net
-      dispatch (the target's `compile_multi` form) — M versions, one
-      XLA call. A NetServer can be built over a `Session`
+      *cross-model* batching: versions whose circuits lower to
+      compatible ExecutionPlans are stacked along a model axis
+      (`repro.netgen.plan.stack_plans`) and served by one jitted
+      multi-net dispatch (the target's `compile_multi` form, with the
+      server's declared target options — interpret, packed — forwarded
+      through the registry) — M versions, one XLA call. When a device
+      mesh with a data axis is active (`repro.parallel.sharding
+      .use_mesh`), the stacked dispatch additionally shards its slot
+      (batch) dimension across the mesh with `shard_map` — the
+      predictions of a slot block are row-independent, so each device
+      serves `slot_capacity / n_data` rows of every version — and
+      falls back to the single-device dispatch when no mesh is active,
+      the mesh has no data axis, or the capacity does not divide.
+      A NetServer can be built over a `Session`
       (`NetServer(session=Session(store=...))`) to share its memory
       tier and persistent store, or over legacy backend/passes/cache
       keywords.
@@ -44,11 +53,11 @@ from typing import Sequence
 import numpy as np
 
 from repro.core.quantize import weights_digest
+from repro.netgen.backends import compile_multi
 from repro.netgen.frontend import _extract_weights
-from repro.netgen.graph import (
-    Circuit, IrregularCircuitError, as_layered_weights,
-)
+from repro.netgen.graph import Circuit, IrregularCircuitError
 from repro.netgen.pipeline import PipelineSpec
+from repro.netgen.plan import lower_circuit, stack_plans
 from repro.netgen.session import (
     Artifact, ArtifactStore, _validate_batch, artifact_key, compile_resolved,
 )
@@ -224,49 +233,51 @@ def cached_compile_net(net, **kw) -> Artifact:
 
 def stack_layered_weights(circuits: Sequence[Circuit]
                           ) -> tuple[int, list[np.ndarray]]:
-    """Stack M regular circuits' reconstructed weight matrices for the
-    multi-net targets.
+    """Stack M regular circuits' weight matrices for the multi-net
+    targets: lower each circuit to its ExecutionPlan and join them with
+    `repro.netgen.plan.stack_plans` (which owns the compatibility
+    checks and the exact hidden-width padding).
 
-    Returns (input_threshold, [per-layer (M, fan_in, fan_out) int32]).
-    Versions must agree on depth, input width, class count, and input
-    threshold; *hidden* widths may differ (pruning is per-model) — they
-    are zero-padded to the per-layer maximum, which is exact under the
-    strict step semantics (an all-zero column is an empty accumulator,
-    step(0) = 0, and its outgoing row is zero-padded too).
-
-    Raises IrregularCircuitError for shared/CSE circuits (via
-    `as_layered_weights`) and ValueError for incompatible topologies.
+    Returns (input_threshold, [per-layer (M, fan_in, fan_out) int32]) —
+    the pre-plan calling convention, kept for callers that want the raw
+    arrays. Raises IrregularCircuitError for shared/CSE circuits (via
+    `lower_circuit`) and ValueError for incompatible topologies.
     """
     if not circuits:
         raise ValueError("no circuits to stack")
-    mats = [as_layered_weights(c) for c in circuits]
+    plan = stack_plans([lower_circuit(c) for c in circuits])
+    return plan.input_threshold, [l.weights for l in plan.layers]
 
-    depths = {len(m) for m in mats}
-    if len(depths) != 1:
-        raise ValueError(f"versions disagree on depth: {sorted(depths)}")
-    thrs = {c.input_threshold for c in circuits}
-    if len(thrs) != 1:
-        raise ValueError(f"versions disagree on input threshold: {sorted(thrs)}")
-    n_ins = {m[0].shape[0] for m in mats}
-    if len(n_ins) != 1:
-        raise ValueError(f"versions disagree on input width: {sorted(n_ins)}")
-    n_outs = {m[-1].shape[1] for m in mats}
-    if len(n_outs) != 1:
-        # class counts cannot be padded: an extra constant-0 class could
-        # win the argmax when every real score is negative
-        raise ValueError(f"versions disagree on class count: {sorted(n_outs)}")
 
-    depth = depths.pop()
-    for layer in range(depth - 1):
-        width = max(m[layer].shape[1] for m in mats)
-        for m in mats:
-            have = m[layer].shape[1]
-            if have < width:
-                m[layer] = np.pad(m[layer], ((0, 0), (0, width - have)))
-                m[layer + 1] = np.pad(m[layer + 1], ((0, width - have), (0, 0)))
-    return thrs.pop(), [
-        np.stack([m[layer] for m in mats]).astype(np.int32)
-        for layer in range(depth)]
+def _shard_stacked(fn, mesh, capacity: int):
+    """Wrap a stacked dispatch ((M, cap, n_in) -> (M, cap)) in
+    `shard_map` over the mesh's data axes, splitting the slot (batch)
+    dimension — each device serves cap / n_data rows of every version.
+    Returns None (single-device fallback) when the mesh has no data
+    axis or the capacity does not divide across it. Mirrors
+    `repro.layers.moe_shardmap`'s jax-version compat."""
+    import jax
+
+    data_axes = tuple(a for a in ("pod", "data") if a in mesh.shape)
+    if not data_axes:
+        return None
+    n = 1
+    for a in data_axes:
+        n *= mesh.shape[a]
+    if n < 1 or capacity % n != 0:
+        return None
+    from jax.sharding import PartitionSpec as P
+    ax = data_axes if len(data_axes) > 1 else data_axes[0]
+    in_specs = (P(None, ax, None),)
+    out_specs = P(None, ax)
+    if hasattr(jax, "shard_map"):
+        mapped = jax.shard_map(fn, mesh=mesh, in_specs=in_specs,
+                               out_specs=out_specs, check_vma=False)
+    else:  # jax <= 0.4.x: experimental home, replication check named check_rep
+        from jax.experimental.shard_map import shard_map as _shard_map
+        mapped = _shard_map(fn, mesh=mesh, in_specs=in_specs,
+                            out_specs=out_specs, check_rep=False)
+    return jax.jit(mapped)
 
 
 # ---------------------------------------------------------------------------
@@ -286,10 +297,13 @@ class NetServer:
     `Artifact` with fixed-capacity slot batching (the
     `repro.serve.engine` pattern — one live jit trace per model; larger
     batches are chunked). Multi-version requests (`predict_many`) stack
-    compatible versions' weights into one jitted multi-net dispatch;
-    incompatible sets (different depth/width/classes, or a target
-    without a multi form) fall back to per-version routing.
-    `dispatch_counts` records which path served each request.
+    compatible versions' ExecutionPlans into one jitted multi-net
+    dispatch — sharded over the slot dimension with `shard_map` when a
+    mesh with a data axis is active (see the module doc); incompatible
+    sets (different depth/width/classes, or a target without a multi
+    form) fall back to per-version routing. `dispatch_counts` records
+    which path served each request ("sharded" counts alongside
+    "stacked", not instead of it).
 
     Construction: pass `session=` to compile through a `Session` (its
     memory tier and persistent store are reused; `target=`/`pipeline=`
@@ -326,9 +340,10 @@ class NetServer:
         self.warmup = bool(warmup)
         self._lock = threading.RLock()
         self._versions: "OrderedDict[str, _Version]" = OrderedDict()
-        self._multi: dict[tuple, object] = {}
+        self._multi: dict[tuple, tuple] = {}
         self._generation = 0   # bumped by register/unregister; guards _multi
-        self.dispatch_counts = {"single": 0, "stacked": 0, "fallback": 0}
+        self.dispatch_counts = {
+            "single": 0, "stacked": 0, "sharded": 0, "fallback": 0}
 
     # -- registry ------------------------------------------------------------
 
@@ -391,7 +406,7 @@ class NetServer:
                 self.dispatch_counts["single"] += 1
             return {v: self._run_slots(compiled[v], np.asarray(requests[v]))}
 
-        fn = self._stacked_fn(names)
+        fn, sharded = self._stacked_fn(names)
         if fn is None:
             with self._lock:
                 self.dispatch_counts["fallback"] += 1
@@ -400,6 +415,8 @@ class NetServer:
 
         with self._lock:
             self.dispatch_counts["stacked"] += 1
+            if sharded:
+                self.dispatch_counts["sharded"] += 1
         cap = self.slot_capacity
         n_in = compiled[names[0]].circuit.n_inputs
         xs = {v: np.asarray(requests[v]) for v in names}
@@ -431,29 +448,45 @@ class NetServer:
             outs.append(np.asarray(compiled(padded))[:n])
         return np.concatenate(outs)
 
-    def _stacked_fn(self, names: tuple):
+    def _stacked_fn(self, names: tuple) -> tuple:
         """Build (or recall) the multi-net dispatch for this version set;
-        None when the set cannot be stacked. Compilation happens outside
-        the lock; a generation check before storing guards against a
-        concurrent (un)register racing the build — a stale fn must never
-        enter `_multi`, or it would silently serve old weights."""
+        returns (fn, sharded) with fn None when the set cannot be
+        stacked. The stacked plan is compiled through the Target
+        registry (`backends.compile_multi`), so the declared target
+        options — interpret, packed — reach the multi form through the
+        same validation as the single-version path. When a mesh with a
+        data axis is active the dispatch is wrapped in `shard_map` over
+        the slot dimension (the cache is keyed on the mesh, so leaving
+        the mesh context falls back to the single-device build).
+        Compilation happens outside the lock; a generation check before
+        storing guards against a concurrent (un)register racing the
+        build — a stale fn must never enter `_multi`, or it would
+        silently serve old weights."""
+        from repro.parallel.sharding import active_mesh
+
+        mesh = active_mesh()
+        key = (names, mesh)
         while True:
             with self._lock:
-                if names in self._multi:
-                    return self._multi[names]
+                if key in self._multi:
+                    return self._multi[key]
                 generation = self._generation
                 circuits = [self._versions[v].compiled.circuit for v in names]
             if self._target.compile_multi is None:
-                fn = None
+                entry = (None, False)
             else:
                 try:
-                    thr, stacked = stack_layered_weights(circuits)
-                    fn = self._target.compile_multi(
-                        stacked, thr, **self._opts)
+                    plan = stack_plans([lower_circuit(c) for c in circuits])
+                    fn = compile_multi(
+                        plan, backend=self._target.name, **self._opts)
+                    sharded_fn = (None if mesh is None else
+                                  _shard_stacked(fn, mesh, self.slot_capacity))
+                    entry = ((sharded_fn, True) if sharded_fn is not None
+                             else (fn, False))
                 except (IrregularCircuitError, ValueError):
-                    fn = None
+                    entry = (None, False)
             with self._lock:
                 if self._generation == generation:
-                    self._multi[names] = fn
-                    return fn
+                    self._multi[key] = entry
+                    return entry
             # registry changed underneath the build: retry with fresh circuits

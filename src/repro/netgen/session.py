@@ -123,7 +123,10 @@ class Artifact:
     breaks it down per pass); `source` says where this object
     originated: "compile" (built in this process) or "store" (reloaded
     from disk). Memory-tier hits return the same object, source
-    unchanged.
+    unchanged. For callable targets `plan_form` records which
+    ExecutionPlan datapath the predictor executes ("dense" or "packed"
+    — see `repro.netgen.plan`); it persists with the artifact and
+    `plan()` re-lowers the circuit into that exact form.
     """
     digest: str
     pipeline: str              # canonical PipelineSpec string
@@ -136,11 +139,23 @@ class Artifact:
     timings: dict
     source: str
     artifact: object
+    plan_form: str | None = None   # "dense" | "packed" for callables
 
     @property
     def backend(self) -> str:
         """Base target name (pre-Session `CompiledNet` compatibility)."""
         return self.target.partition("[")[0]
+
+    def plan(self):
+        """The layer-structured ExecutionPlan this predictor executes,
+        re-lowered from the optimized circuit in the recorded form
+        (what the serving layer stacks for multi-net dispatch)."""
+        if self.kind != "callable":
+            raise TypeError(
+                f"{self.backend} artifacts have no execution plan "
+                f"(kind: {self.kind})")
+        from repro.netgen.plan import lower_circuit
+        return lower_circuit(self.circuit, packed=self.plan_form == "packed")
 
     def __call__(self, x_uint8):
         if not callable(self.artifact):
@@ -195,7 +210,11 @@ def compile_resolved(ws, thr: int, digest: str, spec: PipelineSpec,
     raw = tgt.compile(circuit, **kwargs)
     t_backend = time.perf_counter()
 
+    plan_form = None
+    if tgt.kind == "callable":
+        plan_form = "packed" if opts.get("packed") else "dense"
     return Artifact(
+        plan_form=plan_form,
         digest=digest,
         pipeline=spec.spec_string(),
         target=tstring,
@@ -225,11 +244,12 @@ class StoreStats:
     loads: int = 0          # get() found and rebuilt an artifact
     misses: int = 0         # get() found nothing under the key
     corrupt: int = 0        # unreadable entries evicted and re-missed
+    gc_evictions: int = 0   # entries removed by gc() size/count bounds
     load_seconds: float = 0.0
 
     def row(self) -> str:
         return (f"store: {self.saves} saves, {self.loads} loads, "
-                f"{self.misses} misses, "
+                f"{self.misses} misses, {self.gc_evictions} gc evictions, "
                 f"{self.load_seconds * 1e3:.1f} ms loading")
 
 
@@ -242,11 +262,25 @@ class ArtifactStore:
     Callable artifacts are rebuilt from the stored circuit on load —
     the frontend and every pass are skipped, which is where compile time
     lives. Puts are atomic; a key that already exists is left alone.
+
+    Size bounds: `max_entries` / `max_bytes` cap the store; `gc()`
+    evicts least-recently-used entries (by meta.json mtime, which
+    `get()` refreshes on every successful load) until both bounds hold.
+    `put()` runs gc automatically when a bound is configured, so a
+    long-lived store — the CI cache, a shared developer directory —
+    cannot grow without limit. Unbounded by default.
     """
 
-    def __init__(self, root):
+    def __init__(self, root, *, max_entries: int | None = None,
+                 max_bytes: int | None = None):
+        if max_entries is not None and max_entries < 1:
+            raise ValueError(f"max_entries must be >= 1, got {max_entries}")
+        if max_bytes is not None and max_bytes < 1:
+            raise ValueError(f"max_bytes must be >= 1, got {max_bytes}")
         self.root = Path(root).expanduser()
         self.root.mkdir(parents=True, exist_ok=True)
+        self.max_entries = max_entries
+        self.max_bytes = max_bytes
         self.stats = StoreStats()
 
     def _dir(self, key: str) -> Path:
@@ -285,6 +319,7 @@ class ArtifactStore:
                     for s in artifact.pass_stats],
                 "cost": artifact.cost.as_dict(),
                 "timings": artifact.timings,
+                "plan_form": artifact.plan_form,
                 "created_unix": time.time(),
             }
             if artifact.kind == "text":
@@ -306,6 +341,43 @@ class ArtifactStore:
             shutil.rmtree(tmp, ignore_errors=True)
             raise
         self.stats.saves += 1
+        if self.max_entries is not None or self.max_bytes is not None:
+            self.gc()
+
+    def gc(self) -> list[str]:
+        """Evict least-recently-used entries until the configured
+        size/count bounds hold; returns the evicted keys (oldest
+        first). Recency is meta.json mtime — refreshed by `get()` —
+        so a warm-started artifact outlives a never-reused one. A
+        no-op (empty list) when no bound is configured."""
+        if self.max_entries is None and self.max_bytes is None:
+            return []
+        entries = []                 # (mtime, key, bytes)
+        for p in self.root.iterdir():
+            if p.name.startswith(".tmp-"):
+                continue             # an in-flight put(), not an entry
+            meta = p / "meta.json"
+            try:
+                mtime = meta.stat().st_mtime
+                size = sum(
+                    f.stat().st_size for f in p.iterdir() if f.is_file())
+            except OSError:
+                continue             # concurrently evicted mid-scan
+            entries.append((mtime, p.name, size))
+        entries.sort()
+        count = len(entries)
+        total = sum(size for _, _, size in entries)
+        evicted: list[str] = []
+        while entries and (
+                (self.max_entries is not None and count > self.max_entries)
+                or (self.max_bytes is not None and total > self.max_bytes)):
+            _, key, size = entries.pop(0)
+            shutil.rmtree(self._dir(key), ignore_errors=True)
+            evicted.append(key)
+            count -= 1
+            total -= size
+        self.stats.gc_evictions += len(evicted)
+        return evicted
 
     def get(self, key: str) -> Artifact | None:
         """Load and rebuild the artifact stored under `key` (None when
@@ -335,6 +407,10 @@ class ArtifactStore:
         art.timings["load_s"] = dt
         self.stats.loads += 1
         self.stats.load_seconds += dt
+        try:
+            os.utime(meta_path)      # refresh LRU recency for gc()
+        except OSError:
+            pass
         return art
 
     def _load(self, d: Path, key: str) -> Artifact | None:
@@ -370,6 +446,7 @@ class ArtifactStore:
             timings=dict(meta["timings"]),
             source="store",
             artifact=raw,
+            plan_form=meta.get("plan_form"),
         )
 
 

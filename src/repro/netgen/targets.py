@@ -37,9 +37,10 @@ class Target:
     artifact; `kind` says what that artifact is ("callable", "text",
     "report"); `opts` declares the accepted options as (name, type)
     pairs; `compile_multi`, when present, builds the stacked multi-net
-    dispatch ((stacked_ws, input_threshold) -> callable); and
-    `wants_pass_trace` asks the Session driver to hand the pipeline's
-    per-pass circuit trace to `compile` as `_pass_trace`."""
+    dispatch (a stacked `repro.netgen.plan.ExecutionPlan` plus the same
+    declared opts -> callable); and `wants_pass_trace` asks the Session
+    driver to hand the pipeline's per-pass circuit trace to `compile`
+    as `_pass_trace`."""
     name: str
     kind: str
     description: str
@@ -135,9 +136,9 @@ def _compile_jnp(circuit, **opts):
     return compile_jnp(circuit, **opts)
 
 
-def _compile_jnp_multi(stacked_ws, input_threshold, **opts):
+def _compile_jnp_multi(plan, **opts):
     from repro.netgen.backends.jnp import compile_jnp_multi
-    return compile_jnp_multi(stacked_ws, input_threshold, **opts)
+    return compile_jnp_multi(plan, **opts)
 
 
 def _compile_pallas(circuit, **opts):
@@ -145,9 +146,9 @@ def _compile_pallas(circuit, **opts):
     return compile_pallas(circuit, **opts)
 
 
-def _compile_pallas_multi(stacked_ws, input_threshold, **opts):
+def _compile_pallas_multi(plan, **opts):
     from repro.netgen.backends.pallas import compile_pallas_multi
-    return compile_pallas_multi(stacked_ws, input_threshold, **opts)
+    return compile_pallas_multi(plan, **opts)
 
 
 def _compile_fused(circuit, **opts):
@@ -173,8 +174,9 @@ register_target(Target(
 register_target(Target(
     name="pallas", kind="callable",
     description="per-layer binary_matvec TPU kernel chain "
-                "(interpret-mode on CPU)",
-    compile=_compile_pallas, opts=(("interpret", bool),),
+                "(interpret-mode on CPU; packed=true bit-packs "
+                "activations 32-per-uint32 lane)",
+    compile=_compile_pallas, opts=(("interpret", bool), ("packed", bool)),
     compile_multi=_compile_pallas_multi))
 register_target(Target(
     name="fused", kind="callable",

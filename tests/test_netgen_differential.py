@@ -108,6 +108,25 @@ def test_stacked_dispatch_differential(seed, n_in, n_h, n_out):
             err_msg=name)
 
 
+@settings(max_examples=6, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), n_in=st.integers(2, 40),
+       n_h=st.integers(1, 40), n_out=st.integers(2, 6),
+       depth3=st.booleans())
+def test_packed_datapath_differential(seed, n_in, n_h, n_out, depth3):
+    """ISSUE 4 satellite: the bit-packed activation datapath
+    (`pallas[packed=true]`) vs the dense kernel chain vs the dense
+    reference, on widths that straddle the 32-lane boundary (fan_in
+    padding must be exact, not approximately right)."""
+    sizes = (n_in, n_h, n_h, n_out) if depth3 else (n_in, n_h, n_out)
+    net = _random_net(seed, sizes)
+    x = _images(seed, 10, n_in)
+    ref = np.asarray(quantize.predict_quantized(net)(jnp.asarray(x)))
+    dense = netgen.specialize(net, backend="pallas")
+    packed = netgen.specialize(net, backend="pallas[packed=true]")
+    np.testing.assert_array_equal(np.asarray(dense(jnp.asarray(x))), ref)
+    np.testing.assert_array_equal(np.asarray(packed(jnp.asarray(x))), ref)
+
+
 def test_msb_divergence_is_reachable():
     """Sanity for the differential mask: a crafted zero accumulator makes
     strict and MSB genuinely disagree, and the mask flags that row."""

@@ -1,0 +1,208 @@
+"""ExecutionPlan lowering tests (ISSUE 4 tentpole): the one
+circuit→tensor lowering shared by all array backends — dense form vs
+`as_layered_weights`, bit-packed form on irregular widths (fan_in not a
+multiple of 32), stacked multi-net form, and the Artifact plumbing that
+records which form a compiled predictor executes."""
+import numpy as np
+import pytest
+import jax.numpy as jnp
+
+from repro.core import quantize
+from repro import netgen
+from repro.netgen.plan import PACK_LANES, lower_circuit, stack_plans
+
+from _netgen_helpers import images, random_net
+
+
+def _random_net(seed: int, sizes=(12, 9, 4), lo=-5, hi=5):
+    return random_net(seed, sizes, lo=lo, hi=hi)
+
+
+def _images(seed: int, b: int, n_in: int) -> np.ndarray:
+    return images(seed, b, n_in, salt=31)
+
+
+def _ref(net, x):
+    return np.asarray(quantize.predict_quantized(net)(jnp.asarray(x)))
+
+
+def _circuit(net):
+    return netgen.compile_artifact(net, target="cost").circuit
+
+
+# ---------------------------------------------------------------------------
+# Dense lowering
+# ---------------------------------------------------------------------------
+
+def test_lower_circuit_matches_layered_weights():
+    """The plan's weight matrices ARE the layered extraction — one
+    lowering, shared by every backend."""
+    c = _circuit(_random_net(0, sizes=(12, 9, 7, 4)))
+    plan = lower_circuit(c)
+    mats = netgen.as_layered_weights(c)
+    assert plan.depth == len(mats) == 3
+    assert plan.n_inputs == 12 and plan.input_threshold == c.input_threshold
+    assert not plan.packed and not plan.stacked
+    assert plan.form == "dense" and plan.n_classes == 4
+    for layer, w in zip(plan.layers, mats):
+        np.testing.assert_array_equal(layer.weights, w)
+        assert layer.weights.dtype == np.int32
+        assert layer.words is None
+    assert [l.activation for l in plan.layers] == ["step", "step", "argmax"]
+    assert "12-9x7x4 (dense)" == plan.describe()
+
+
+def test_lower_circuit_rejects_irregular_dag():
+    net = _random_net(1)
+    circuit, _ = netgen.PipelineSpec.parse("zeros,addends,cse").run(
+        netgen.lower(net))
+    with pytest.raises(netgen.IrregularCircuitError):
+        lower_circuit(circuit)
+
+
+# ---------------------------------------------------------------------------
+# Packed form
+# ---------------------------------------------------------------------------
+
+def test_pack_pads_fan_in_to_lanes():
+    """Irregular widths (neither 37 inputs nor 45 hidden are /32) pad up
+    to whole uint32 lanes with zero rows — exact by construction."""
+    c = _circuit(_random_net(2, sizes=(37, 45, 10)))
+    plan = lower_circuit(c)
+    packed = plan.pack()
+    assert packed.packed and packed.form == "packed"
+    assert packed.pack() is packed                     # idempotent
+    assert [l.weights.shape for l in packed.layers] == [(64, 45), (64, 10)]
+    assert [l.words for l in packed.layers] == [2, 2]
+    for dense_l, packed_l in zip(plan.layers, packed.layers):
+        k = dense_l.fan_in
+        np.testing.assert_array_equal(packed_l.weights[:k], dense_l.weights)
+        assert not packed_l.weights[k:].any()          # zero padding
+    # already-aligned widths are untouched
+    aligned = lower_circuit(_circuit(_random_net(3, sizes=(32, 64, 4))))
+    assert [l.weights.shape for l in aligned.pack().layers] == \
+        [l.weights.shape for l in aligned.layers]
+    assert lower_circuit(c, packed=True).layers[0].words == 2
+
+
+@pytest.mark.parametrize("sizes", [(37, 45, 10), (12, 32, 4), (5, 3, 33, 2)])
+def test_packed_pallas_bit_exact_irregular_widths(sizes):
+    """ISSUE satellite: packed vs unpacked vs predict_quantized on
+    widths that are not multiples of 32."""
+    net = _random_net(4, sizes=sizes)
+    x = _images(4, 16, sizes[0])
+    ref = _ref(net, x)
+    dense = netgen.compile_artifact(net, target="pallas")
+    packed = netgen.compile_artifact(net, target="pallas[packed=true]")
+    np.testing.assert_array_equal(np.asarray(dense(x)), ref)
+    np.testing.assert_array_equal(np.asarray(packed(x)), ref)
+
+
+@pytest.mark.slow
+def test_packed_full_784_500_10_bit_exact():
+    """ISSUE acceptance: `pallas[packed=true]` is bit-exact with the
+    dense path on the full paper-sized net."""
+    net = _random_net(5, sizes=(784, 500, 10))
+    x = _images(5, 256, 784)
+    ref = _ref(net, x)
+    dense = netgen.compile_artifact(net, target="pallas")
+    packed = netgen.compile_artifact(net, target="pallas[packed=true]")
+    np.testing.assert_array_equal(np.asarray(dense(x)), ref)
+    np.testing.assert_array_equal(np.asarray(packed(x)), ref)
+
+
+# ---------------------------------------------------------------------------
+# Stacked form
+# ---------------------------------------------------------------------------
+
+def test_stack_plans_pads_hidden_widths():
+    plans = [lower_circuit(_circuit(_random_net(6, sizes=(12, 9, 4)))),
+             lower_circuit(_circuit(_random_net(7, sizes=(12, 6, 4))))]
+    stacked = stack_plans(plans)
+    assert stacked.stacked and stacked.n_models == 2
+    assert [l.weights.shape for l in stacked.layers] == \
+        [(2, 12, 9), (2, 9, 4)]
+    # version 1's padded hidden columns (and their outgoing rows) are zero
+    np.testing.assert_array_equal(
+        stacked.layers[0].weights[1, :, :6], plans[1].layers[0].weights)
+    assert not stacked.layers[0].weights[1, :, 6:].any()
+    assert not stacked.layers[1].weights[1, 6:, :].any()
+    assert stacked.describe().startswith("2x12-")
+    # packing a stacked plan pads the (shared) fan_in axis
+    packed = stacked.pack()
+    assert [l.weights.shape for l in packed.layers] == \
+        [(2, 32, 9), (2, 32, 4)]
+
+
+def test_stack_plans_error_paths():
+    mk = lambda seed, sizes: lower_circuit(  # noqa: E731
+        _circuit(_random_net(seed, sizes=sizes)))
+    with pytest.raises(ValueError, match="no plans"):
+        stack_plans([])
+    with pytest.raises(ValueError, match="depth"):
+        stack_plans([mk(0, (8, 6, 4)), mk(1, (8, 6, 6, 4))])
+    with pytest.raises(ValueError, match="input width"):
+        stack_plans([mk(0, (8, 6, 4)), mk(1, (9, 6, 4))])
+    with pytest.raises(ValueError, match="class count"):
+        stack_plans([mk(0, (8, 6, 4)), mk(1, (8, 6, 5))])
+    with pytest.raises(ValueError, match="pack after stacking"):
+        stack_plans([mk(0, (8, 6, 4)).pack(), mk(1, (8, 6, 4))])
+    two = stack_plans([mk(0, (8, 6, 4)), mk(1, (8, 6, 4))])
+    with pytest.raises(ValueError, match="pack after stacking"):
+        stack_plans([two, two])
+
+
+def test_multi_backends_require_stacked_plans():
+    from repro.netgen.backends import compile_multi
+    plan = lower_circuit(_circuit(_random_net(8)))
+    for backend in ("jnp", "pallas"):
+        with pytest.raises(ValueError, match="stacked"):
+            compile_multi(plan, backend=backend)
+    with pytest.raises(ValueError, match="no multi-net dispatch"):
+        compile_multi(plan, backend="fused")
+
+
+def test_compile_multi_validates_declared_options():
+    """ISSUE satellite: the multi-net form goes through the Target
+    registry's declared options — no raw kwargs side door."""
+    from repro.netgen.backends import compile_multi
+    nets = [_random_net(9), _random_net(10)]
+    plan = stack_plans([lower_circuit(_circuit(n)) for n in nets])
+    with pytest.raises(ValueError, match="unknown option"):
+        compile_multi(plan, backend="pallas", block_size=7)
+    with pytest.raises(ValueError, match="unknown option"):
+        compile_multi(plan, backend="jnp", interpret=True)
+    fn = compile_multi(plan, backend="pallas[interpret=true,packed=true]")
+    x = _images(9, 8, 12)
+    block = np.stack([x, x])
+    for i, net in enumerate(nets):
+        np.testing.assert_array_equal(
+            np.asarray(fn(block))[i], _ref(net, x))
+
+
+# ---------------------------------------------------------------------------
+# Artifacts record the plan form
+# ---------------------------------------------------------------------------
+
+def test_artifact_records_plan_form(tmp_path):
+    net = _random_net(11)
+    session = netgen.Session(store=netgen.ArtifactStore(tmp_path / "s"))
+    dense = session.compile(net, target="pallas")
+    packed = session.compile(net, target="pallas[packed=true]")
+    assert dense.plan_form == "dense" and packed.plan_form == "packed"
+    assert dense.key != packed.key          # distinct store entries
+    assert not dense.plan().packed and packed.plan().packed
+    text = session.compile(net, target="verilog")
+    assert text.plan_form is None
+    with pytest.raises(TypeError, match="no execution plan"):
+        text.plan()
+
+    # a second session warm-starts both forms from disk, form preserved
+    warm = netgen.Session(store=netgen.ArtifactStore(tmp_path / "s"))
+    wd = warm.compile(net, target="pallas")
+    wp = warm.compile(net, target="pallas[packed=true]")
+    assert warm.stats().compiles == 0
+    assert wd.plan_form == "dense" and wp.plan_form == "packed"
+    x = _images(11, 8, 12)
+    np.testing.assert_array_equal(np.asarray(wp(x)), np.asarray(packed(x)))
+    np.testing.assert_array_equal(np.asarray(wp(x)), _ref(net, x))

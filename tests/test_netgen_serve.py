@@ -1,7 +1,13 @@
 """Compile-cache serving tests: content-addressed hits/misses, LRU
-eviction, thread safety, input validation, and the NetServer's stacked
+eviction, thread safety, input validation, the NetServer's stacked
 multi-net dispatch (ISSUE 2 acceptance: 4 versions in one jitted call,
-bit-exact vs serving each CompiledNet individually)."""
+bit-exact vs serving each CompiledNet individually), and the
+mesh-sharded stacked dispatch (ISSUE 4: shard_map over the slot
+dimension when a mesh with a data axis is active, single-device
+fallback otherwise)."""
+import os
+import subprocess
+import sys
 import threading
 
 import numpy as np
@@ -357,6 +363,109 @@ def test_stack_layered_weights_incompatibility_errors():
         netgen.stack_layered_weights([c(0, (8, 6, 4)), c(1, (8, 6, 5))])
     with pytest.raises(ValueError, match="no circuits"):
         netgen.stack_layered_weights([])
+
+
+# ---------------------------------------------------------------------------
+# Mesh-sharded stacked dispatch (ISSUE 4)
+# ---------------------------------------------------------------------------
+
+def test_netserver_sharded_stacked_under_mesh():
+    """With a mesh carrying a data axis active, the stacked dispatch
+    runs under shard_map (slot dimension split across the axis) and
+    stays bit-exact; leaving the mesh context falls back to the
+    single-device build."""
+    import math
+
+    import jax
+    from repro.launch.mesh import make_host_mesh
+    from repro.parallel import sharding as shd
+
+    server = netgen.NetServer(slot_capacity=8, warmup=False)
+    nets = {name: _random_net(110 + i) for i, name in enumerate("ab")}
+    for name, net in nets.items():
+        server.register(name, net)
+    x = _images(110, 11, 12)                 # 2 slot rounds: 8 + 3
+
+    plain = server.predict_many({"a": x, "b": x})
+    assert server.dispatch_counts["sharded"] == 0
+    # a data axis that divides slot_capacity, whatever the host has
+    with shd.use_mesh(make_host_mesh(data=math.gcd(len(jax.devices()), 8))):
+        sharded = server.predict_many({"a": x, "b": x})
+    assert server.dispatch_counts["sharded"] == 1
+    assert server.dispatch_counts["stacked"] == 2
+    for name, net in nets.items():
+        np.testing.assert_array_equal(sharded[name], plain[name])
+        np.testing.assert_array_equal(sharded[name], _ref(net, x))
+    # back outside the mesh: the single-device build serves again
+    server.predict_many({"a": x, "b": x})
+    assert server.dispatch_counts["sharded"] == 1
+
+
+def test_netserver_sharded_falls_back_without_data_axis():
+    """A mesh without a data axis (or a capacity the axis cannot divide)
+    must cleanly fall back to the single-device stacked dispatch."""
+    from repro.launch.mesh import make_mesh_compat
+    from repro.parallel import sharding as shd
+
+    server = netgen.NetServer(slot_capacity=8, warmup=False)
+    for i, name in enumerate("ab"):
+        server.register(name, _random_net(120 + i))
+    x = _images(120, 8, 12)
+    with shd.use_mesh(make_mesh_compat((1,), ("model",))):
+        out = server.predict_many({"a": x, "b": x})
+    assert server.dispatch_counts["stacked"] == 1
+    assert server.dispatch_counts["sharded"] == 0
+    np.testing.assert_array_equal(out["a"], _ref(_random_net(120), x))
+
+
+_SHARDED_SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import numpy as np, jax, jax.numpy as jnp
+import sys
+sys.path.insert(0, {test_dir!r})
+from _netgen_helpers import random_net, images
+from repro.core import quantize
+from repro import netgen
+from repro.launch.mesh import make_host_mesh
+from repro.parallel import sharding as shd
+
+assert len(jax.devices()) == 8
+nets = {{name: random_net(130 + i, (12, 9, 4), lo=-5, hi=5)
+        for i, name in enumerate("abc")}}
+reqs = {{name: images(130 + i, 19, 12, salt=77)
+        for i, name in enumerate("abc")}}
+server = netgen.NetServer(target={target!r}, slot_capacity=16, warmup=False)
+for name, net in nets.items():
+    server.register(name, net)
+
+single = server.predict_many(reqs)                   # single-device path
+assert server.dispatch_counts["sharded"] == 0
+with shd.use_mesh(make_host_mesh(data=8)):           # 8-way batch sharding
+    sharded = server.predict_many(reqs)
+assert server.dispatch_counts["sharded"] == 1, server.dispatch_counts
+for name, net in nets.items():
+    ref = np.asarray(quantize.predict_quantized(net)(jnp.asarray(reqs[name])))
+    assert np.array_equal(sharded[name], single[name]), name
+    assert np.array_equal(sharded[name], ref), name
+print("SHARDED_NETSERVE_OK")
+"""
+
+
+@pytest.mark.parametrize("target", ["jnp", "pallas[packed=true]"])
+def test_netserver_sharded_8_devices_bit_exact(target):
+    """ISSUE satellite: sharded-vs-single-device bit-exactness of
+    stacked predict_many on a real (faked-8-device) mesh — subprocess,
+    because device count is fixed at jax init."""
+    src = os.path.join(os.path.dirname(__file__), "..", "src")
+    script = _SHARDED_SCRIPT.format(
+        test_dir=os.path.dirname(os.path.abspath(__file__)), target=target)
+    out = subprocess.run(
+        [sys.executable, "-c", script],
+        env={**os.environ, "PYTHONPATH": src},
+        capture_output=True, text=True, timeout=600)
+    assert out.returncode == 0, out.stderr[-2000:]
+    assert "SHARDED_NETSERVE_OK" in out.stdout
 
 
 def test_pad_slots():

@@ -7,6 +7,7 @@ import json
 import os
 import subprocess
 import sys
+import time
 import warnings
 
 import numpy as np
@@ -219,11 +220,14 @@ def test_string_options_must_round_trip():
     assert opts == {"module_name": "my_mod.v2"}
 
 
-def test_stacked_dispatch_honors_target_opts():
+@pytest.mark.parametrize(
+    "target", ["pallas[interpret=true]", "pallas[interpret=true,packed=true]"])
+def test_stacked_dispatch_honors_target_opts(target):
     """predict_many's multi-net build must receive the same declared
-    options as the single-version path (interpret for pallas)."""
+    options as the single-version path (interpret and packed for
+    pallas), routed through the registry's validation."""
     server = netgen.NetServer(
-        target="pallas[interpret=true]", slot_capacity=8, warmup=False)
+        target=target, slot_capacity=8, warmup=False)
     nets = {name: _random_net(35 + i, sizes=(10, 8, 4))
             for i, name in enumerate("ab")}
     for name, net in nets.items():
@@ -455,6 +459,44 @@ def test_artifact_store_recovers_from_corrupt_entry(tmp_path):
     # the recompile re-persisted a healthy entry
     warm = netgen.Session(store=store_dir).compile(net, target="jnp")
     assert warm.source == "store"
+
+
+def test_artifact_store_gc_count_bound(tmp_path):
+    """ISSUE 4 satellite: size/count bounds with LRU-by-mtime eviction.
+    put() runs gc automatically; get() refreshes recency, so a reused
+    entry survives a never-reused older one."""
+    store = netgen.ArtifactStore(tmp_path / "store", max_entries=2)
+    arts = [netgen.compile_artifact(_random_net(60 + i), target="verilog")
+            for i in range(3)]
+    now = time.time()
+    for i, art in enumerate(arts[:2]):
+        store.put(art)
+        # decouple LRU order from filesystem mtime granularity
+        os.utime(tmp_path / "store" / art.key / "meta.json",
+                 (now - 100 + i, now - 100 + i))
+    assert store.get(arts[0].key) is not None      # touch: 0 newer than 1
+    store.put(arts[2])                             # bound hit: evicts 1
+    assert store.stats.gc_evictions == 1
+    assert sorted(store.keys()) == sorted([arts[0].key, arts[2].key])
+    assert store.get(arts[1].key) is None
+    # an unbounded store never gc-evicts
+    free = netgen.ArtifactStore(tmp_path / "free")
+    for art in arts:
+        free.put(art)
+    assert free.gc() == [] and len(free) == 3
+
+
+def test_artifact_store_gc_byte_bound(tmp_path):
+    store = netgen.ArtifactStore(tmp_path / "store", max_bytes=1)
+    art = netgen.compile_artifact(_random_net(63), target="verilog")
+    store.put(art)                 # every entry exceeds 1 byte...
+    evicted_more = store.gc()      # ...and an explicit gc() stays stable
+    assert len(store) == 0 and evicted_more == []
+    assert store.stats.gc_evictions == 1
+    with pytest.raises(ValueError, match="max_entries"):
+        netgen.ArtifactStore(tmp_path / "bad", max_entries=0)
+    with pytest.raises(ValueError, match="max_bytes"):
+        netgen.ArtifactStore(tmp_path / "bad2", max_bytes=0)
 
 
 def test_compile_cache_over_store(tmp_path):
