@@ -39,6 +39,25 @@ def run(full: bool = False) -> list[str]:
                             np.asarray(bref.binary_matmul_ref(x, w))))
     rows.append(f"kern_binary_matmul_ref,{t_ref*1e6:.1f},exact={ok}")
 
+    # the three pallas datapaths on the same layer: int8 activations vs
+    # packed activations vs fully bit-packed (bit-plane weights, popcount)
+    from repro.netgen.plan import decompose_planes
+    want = np.asarray(x).astype(np.int64) @ np.asarray(w).astype(np.int64)
+    xp = bops.pack_bits(x)
+    kp = xp.shape[1] * 32
+    wp = jnp.zeros((kp, 500), jnp.int32).at[:784].set(w)
+    pos, neg, n_planes = decompose_planes(np.asarray(wp))
+    pos, neg = jnp.asarray(pos), jnp.asarray(neg)
+    for name, fn in (
+            ("dense", lambda: bops.binary_matmul(x, w)),
+            ("packed", lambda: bops.binary_matmul_packed(xp, wp)),
+            ("planes", lambda: bops.binary_matmul_planes(xp, pos, neg))):
+        t_k = _time(fn)
+        ok = int(np.array_equal(np.asarray(fn()), want))
+        detail = f"exact={ok}" + (f";planes={n_planes}" if name == "planes"
+                                  else "")
+        rows.append(f"kern_binary_matmul_{name},{t_k*1e6:.1f},{detail}")
+
     # quant matmul
     xq = jnp.asarray(rng.integers(-127, 128, size=(64, 512)).astype(np.int8))
     wq = jnp.asarray(rng.integers(-127, 128, size=(512, 256)).astype(np.int8))

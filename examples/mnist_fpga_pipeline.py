@@ -35,6 +35,9 @@ def main():
     ap.add_argument("--store", default=None,
                     help="ArtifactStore directory (persist compilations "
                          "across runs/processes)")
+    ap.add_argument("--tune-store", default=None,
+                    help="TuneStore directory (persist kernel tuning "
+                         "records; a second run re-measures nothing)")
     ap.add_argument("--verilog-out", default="/tmp/nn_inference_full.v")
     args = ap.parse_args()
     if args.deep:
@@ -43,10 +46,13 @@ def main():
         n_hidden = 128 if args.fast else 500
     epochs = 25 if args.fast else 60
 
-    session = netgen.Session(store=args.store)
+    session = netgen.Session(store=args.store, tune_store=args.tune_store)
     if args.store:
         print(f"== artifact store: {args.store} "
               f"({len(session.store.keys())} artifacts resident) ==")
+    if args.tune_store:
+        print(f"== tune store: {args.tune_store} "
+              f"({len(session.tuner.store.keys())} records resident) ==")
 
     print("== train (paper §II.A: 1000 imgs, backprop) ==")
     xtr, ytr, xte, yte = dataset.train_test_split(1000, 1000, seed=0)
@@ -104,18 +110,24 @@ def main():
 
     print("\n== specialized inference (exactness + throughput) ==")
     l3 = quantize.predict_l3(params)(jnp.asarray(xte))
-    targets = ("jnp", "pallas") if args.deep else ("jnp", "pallas", "fused")
+    targets = ["jnp", "pallas", "pallas[tuned=true,planes=true]"]
+    if not args.deep:
+        targets.append("fused")
     for target in targets:
-        fn = session.compile(qnet, target=target).artifact
+        art = session.compile(qnet, target=target)
+        fn = art.artifact
         n = 1000 if target == "jnp" else 64
         preds = fn(jnp.asarray(xte[:n]))
         exact = bool(np.array_equal(np.asarray(preds), np.asarray(l3)[:n]))
         t0 = time.perf_counter()
         fn(jnp.asarray(xte[:n])).block_until_ready()
         dt = time.perf_counter() - t0
-        print(f"  target={target:7s} exact={exact} "
-              f"{n/dt:,.0f} preds/s"
+        form = f" form={art.plan_form}" if "tuned" in target else ""
+        print(f"  target={target:30s} exact={exact} "
+              f"{n/dt:,.0f} preds/s{form}"
               + ("  (interpret-mode Python, not TPU speed)" if target != "jnp" else ""))
+    if session.tuner is not None:
+        print(f"  {session.tuner.stats.row()}")
 
     print("\n== serve: two ladder depths through the Session ==")
     # a second net at the OTHER ladder depth, sharing the same server

@@ -8,15 +8,31 @@ activations x in {0,1}, a dense layer is a *masked column sum*
 i.e. adds only — the select/accumulate runs on the VPU; no multiplier
 (MXU) is engaged, mirroring the paper's removal of multiplier logic.
 
-Two input formats:
+Three datapaths, in increasing bit-economy:
   * int8 activations (B, K)           — `binary_matmul_kernel`
   * bitpacked uint32 (B, K//32)       — `binary_matmul_packed_kernel`
     (32 activations per word: 8x less HBM->VMEM traffic than int8; the
-    TPU analogue of the paper's single-bit wires)
+    TPU analogue of the paper's single-bit wires — but the weights
+    still travel as full int32 and the words are unpacked in-register
+    back to a (bm, bk, bn) select)
+  * fully bit-packed                  — `binary_matmul_planes_kernel`
+    BOTH operands travel as bits: the int32 weight matrix is decomposed
+    into signed bit-planes w = sum_b 2^b (pos_b - neg_b), each plane
+    packed 32-lanes-per-uint32 along fan_in, and each output tile is
+
+        y = sum_b 2^b (popcount(x & pos_b) - popcount(x & neg_b))
+
+    — the XNOR/AND+popcount form of the BNN-on-FPGA line of work
+    (Ertörer & Ünsalan). No in-register unpack: the inner reduction is
+    over uint32 *words* (32x fewer elements than the packed kernel's
+    bit-level select), and a P-plane layer moves 2P bits of weight per
+    addend instead of 32.
 
 Tiling: grid (B/bm, N/bn, K/bk) with the K axis innermost (sequential on
 TPU), accumulating into the output block, which stays resident in VMEM
-across the K sweep (revisited blocks are not re-fetched).
+across the K sweep (revisited blocks are not re-fetched). Block sizes
+are keyword knobs on every entry point so `repro.netgen.tune` can
+search them per workload instead of trusting the defaults.
 """
 from __future__ import annotations
 
@@ -137,6 +153,80 @@ def binary_matmul_packed(
         out_shape=jax.ShapeDtypeStruct((Bp, Np), jnp.int32),
         interpret=interpret,
     )(xpp, wp)
+    return out[:B, :N]
+
+
+# --------------------------------------------------------------------------
+# bit-plane kernel: both operands packed, popcount accumulation
+# --------------------------------------------------------------------------
+
+def _binary_matmul_planes_kernel(xp_ref, pos_ref, neg_ref, o_ref, *,
+                                 planes: int):
+    """xp: (bm, bkw) uint32; pos/neg: (P, bkw, bn) uint32 bit-planes;
+    o: (bm, bn) int32. Accumulates sum_b 2^b (popcount(x & pos_b) -
+    popcount(x & neg_b)) over the word tile — the inner loop runs on
+    words, never unpacking activations or weights to individual bits."""
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    x = xp_ref[...]                        # (bm, bkw) uint32
+    acc = jnp.zeros(o_ref.shape, jnp.int32)
+    for b in range(planes):                # static unroll: P is tiny
+        pos = pos_ref[b]                   # (bkw, bn) uint32
+        neg = neg_ref[b]
+        cp = jax.lax.population_count(x[:, :, None] & pos[None, :, :])
+        cn = jax.lax.population_count(x[:, :, None] & neg[None, :, :])
+        d = jnp.sum(cp.astype(jnp.int32) - cn.astype(jnp.int32), axis=1)
+        acc = acc + (d << b)
+    o_ref[...] += acc
+
+
+@functools.partial(
+    jax.jit, static_argnames=("bm", "bn", "bkw", "interpret"))
+def binary_matmul_planes(
+    xp: jnp.ndarray,
+    pos: jnp.ndarray,
+    neg: jnp.ndarray,
+    *,
+    bm: int = 128,
+    bn: int = 128,
+    bkw: int = 8,          # K-tile in 32-bit words -> bk = 256 bits
+    interpret: bool = True,
+) -> jnp.ndarray:
+    """y = unpack(xp) @ w for w = sum_b 2^b (unpack(pos_b) - unpack(neg_b)).
+
+    xp: uint32 (B, KW); pos/neg: uint32 (P, KW, N) packed bit-planes
+    (see `repro.netgen.plan.decompose_planes`). Returns int32 (B, N).
+    Zero-padding any operand to tile multiples is exact: a zero word
+    contributes zero popcount.
+    """
+    B, KW = xp.shape
+    P, KW2, N = pos.shape
+    assert KW == KW2 and pos.shape == neg.shape, (
+        xp.shape, pos.shape, neg.shape)
+    bm = min(bm, _rup(B))
+    bn = min(bn, _rup(N))
+    bkw = min(bkw, max(KW, 1))
+    Bp, Np, KWp = _pad_to(B, bm), _pad_to(N, bn), _pad_to(KW, bkw)
+    xpp = jnp.zeros((Bp, KWp), jnp.uint32).at[:B, :KW].set(xp)
+    posp = jnp.zeros((P, KWp, Np), jnp.uint32).at[:, :KW, :N].set(pos)
+    negp = jnp.zeros((P, KWp, Np), jnp.uint32).at[:, :KW, :N].set(neg)
+
+    out = pl.pallas_call(
+        functools.partial(_binary_matmul_planes_kernel, planes=P),
+        grid=(Bp // bm, Np // bn, KWp // bkw),
+        in_specs=[
+            pl.BlockSpec((bm, bkw), lambda i, j, k: (i, k)),
+            pl.BlockSpec((P, bkw, bn), lambda i, j, k: (0, k, j)),
+            pl.BlockSpec((P, bkw, bn), lambda i, j, k: (0, k, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((Bp, Np), jnp.int32),
+        interpret=interpret,
+    )(xpp, posp, negp)
     return out[:B, :N]
 
 

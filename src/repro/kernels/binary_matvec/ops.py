@@ -23,6 +23,14 @@ def binary_matmul_packed(xp: jnp.ndarray, w: jnp.ndarray, **kw) -> jnp.ndarray:
     return _k.binary_matmul_packed(xp, w, **kw)
 
 
+def binary_matmul_planes(xp: jnp.ndarray, pos: jnp.ndarray,
+                         neg: jnp.ndarray, **kw) -> jnp.ndarray:
+    """y = unpack(xp) @ w for w decomposed into packed signed bit-planes
+    (pos/neg uint32 (P, KW, N)) — the fully bit-packed popcount kernel."""
+    kw.setdefault("interpret", _INTERPRET)
+    return _k.binary_matmul_planes(xp, pos, neg, **kw)
+
+
 def pack_bits(x: jnp.ndarray) -> jnp.ndarray:
     """Pack binary activations 32-per-uint32 (pads K up to a /32 multiple)."""
     b, k = x.shape
@@ -30,3 +38,17 @@ def pack_bits(x: jnp.ndarray) -> jnp.ndarray:
     if kp != k:
         x = jnp.zeros((b, kp), x.dtype).at[:, :k].set(x)
     return _ref.pack_bits_ref(x)
+
+
+def step_pack(acc: jnp.ndarray, *, words: int) -> jnp.ndarray:
+    """Fused strict step + repack: int32 accumulators (B, N) -> uint32
+    activation words (B, words). The layer-to-layer hop of the packed
+    and bit-plane datapaths: no int8 activation ever materializes."""
+    return _ref.step_pack_ref(acc, words)
+
+
+def binarize_pack(x_uint8: jnp.ndarray, *, threshold: int,
+                  words: int) -> jnp.ndarray:
+    """Binarize raw uint8 inputs against `threshold` straight into packed
+    uint32 words (B, words) — the packed chains' entry point."""
+    return _ref.pack_bool_ref(x_uint8.astype(jnp.int32) > threshold, words)

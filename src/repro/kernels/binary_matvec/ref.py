@@ -39,3 +39,46 @@ def unpack_bits_ref(xp: jnp.ndarray, k: int) -> jnp.ndarray:
     shifts = jnp.arange(32, dtype=jnp.uint32)
     bits = (xp[:, :, None] >> shifts[None, None, :]) & jnp.uint32(1)
     return bits.reshape(b, kw * 32)[:, :k].astype(jnp.int8)
+
+
+def pack_bool_ref(bits: jnp.ndarray, words: int) -> jnp.ndarray:
+    """Pack a boolean (B, N) into uint32 (B, words), zero-padding N up
+    to words*32 — the shared packer behind `step_pack_ref` and the
+    input binarizer, so activations become words without ever taking
+    an int8 form."""
+    b, n = bits.shape
+    kp = words * 32
+    assert kp >= n, (n, words)
+    if kp != n:
+        bits = jnp.zeros((b, kp), bool).at[:, :n].set(bits)
+    xr = bits.astype(jnp.uint32).reshape(b, words, 32)
+    shifts = jnp.arange(32, dtype=jnp.uint32)
+    return jnp.sum(xr << shifts[None, None, :], axis=-1, dtype=jnp.uint32)
+
+
+def step_pack_ref(acc: jnp.ndarray, words: int) -> jnp.ndarray:
+    """Fused strict step + repack: int32 accumulators (B, N) -> packed
+    uint32 activation words (B, words) with bit i of word j = acc[:,
+    32*j+i] > 0. The packed/bit-plane layer chains go through this
+    between layers, so hidden activations never materialize as int8."""
+    return pack_bool_ref(acc > 0, words)
+
+
+def plane_matmul_ref(xp: jnp.ndarray, pos: jnp.ndarray,
+                     neg: jnp.ndarray) -> jnp.ndarray:
+    """jnp oracle for the bit-plane kernel: popcount-free reconstruction
+    by unpacking both operands and running the integer matmul — the
+    arithmetic identity the kernel must reproduce exactly."""
+    b, kw = xp.shape
+    p, kw2, n = pos.shape
+    assert kw == kw2 and pos.shape == neg.shape
+    x = unpack_bits_ref(xp, kw * 32).astype(jnp.int32)       # (B, K)
+    shifts = jnp.arange(32, dtype=jnp.uint32)
+    w = jnp.zeros((kw * 32, n), jnp.int32)
+    for b_i in range(p):
+        pb = ((pos[b_i][:, None, :] >> shifts[None, :, None])
+              & jnp.uint32(1)).reshape(kw * 32, n).astype(jnp.int32)
+        nb = ((neg[b_i][:, None, :] >> shifts[None, :, None])
+              & jnp.uint32(1)).reshape(kw * 32, n).astype(jnp.int32)
+        w = w + ((pb - nb) << b_i)
+    return x @ w

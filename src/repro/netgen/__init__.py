@@ -75,11 +75,24 @@ threshold, final argmax — and every array backend (jnp / pallas /
 fused) is a thin executor over it. `plan.pack()` is the bit-packed
 form: ±1-weighted single-bit activations travel 32-per-uint32 word
 into `kernels.binary_matvec.binary_matmul_packed` (the paper's
-single-bit wires, on the TPU), selected with `pallas[packed=true]`
-and bit-exact with the dense path. `plan.stack_plans` joins M
-compatible plans along a model axis for the serving layer. Artifacts
-record the compiled form (`artifact.plan_form`) and re-derive the
-plan via `artifact.plan()`.
+single-bit wires, on the TPU), selected with `pallas[packed=true]`,
+chained packed end-to-end (the step emits packed words — no int8
+activation between layers) and bit-exact with the dense path.
+`plan.planes()` goes further (`pallas[planes=true]`): each weight
+matrix is decomposed into packed signed bit-planes
+(`decompose_planes`, w = sum_b 2^b (pos_b - neg_b)) and accumulated by
+popcount in `binary_matmul_planes` — both operands travel as bits,
+with the plane count set by the layer's actual post-pass weight
+magnitudes. `plan.stack_plans` joins M compatible plans along a model
+axis for the serving layer. Artifacts record the compiled form
+(`artifact.plan_form`) and re-derive the plan via `artifact.plan()`.
+
+Autotuning (`repro.netgen.tune`): `pallas[tuned=true]` grid-searches
+the kernel block sizes (bm, bn, bkw) — and the datapath form, unless
+pinned — per plan shape x device kind; `fused[tuned=true]` searches
+its batch tile. `Session(tune_store=...)` persists the winners
+content-addressed (a second process performs ZERO tuning
+measurements); `session.tune_stats()` shows hits vs measurements.
 
 Serving (compile cache + multi-version dispatch + mesh sharding)
 ----------------------------------------------------------------
@@ -92,9 +105,11 @@ active (`repro.parallel.sharding.use_mesh`) that dispatch shards its
 slot dimension across the mesh via `shard_map` (single-device fallback
 otherwise):
 
-    session = netgen.Session(store=netgen.ArtifactStore(cache_dir))
+    session = netgen.Session(store=netgen.ArtifactStore(cache_dir),
+                             tune_store=tune_dir)
+    handle = session.compile_async(qnet, target="pallas[tuned=true]")
     server = netgen.NetServer(session=session, slot_capacity=64)
-    server.register("v1", qnet)              # compile (or store load)
+    server.register("v1", qnet)              # warm: async compile + store
     server.register("v1-replica", qnet)      # memory hit, ~us
     out = server.predict_many({"v1": imgs_a, "v2": imgs_b})
     print(session.stats().row())             # hits/misses/compile time
@@ -132,7 +147,7 @@ from repro.netgen.pipeline import (
     register_pipeline,
 )
 from repro.netgen.plan import (
-    ExecutionPlan, PlanLayer, lower_circuit, stack_plans,
+    ExecutionPlan, PlanLayer, decompose_planes, lower_circuit, stack_plans,
 )
 from repro.netgen.session import (
     Artifact, ArtifactStore, Session, compile_artifact,
@@ -141,22 +156,27 @@ from repro.netgen.session import _validate_batch  # noqa: F401  (serving)
 from repro.netgen.targets import (
     Target, list_targets, register_target, resolve_target,
 )
+from repro.netgen.tune import (
+    KernelTuner, TuneRecord, TuneStats, TuneStore, default_tuner,
+)
 
 __all__ = [
     "Argmax", "Artifact", "ArtifactStore", "CacheKey", "CellCounts",
     "Circuit", "CircuitOps", "CompileCache", "CompiledNet", "CostReport",
     "DEFAULT_PASSES", "ExecutionPlan", "HW_PASSES", "InputCompare",
-    "IrregularCircuitError", "NetServer", "Pass", "PassStats",
-    "PipelineSpec", "PlanLayer", "Session", "SignStep", "Target", "Term",
+    "IrregularCircuitError", "KernelTuner", "NetServer", "Pass",
+    "PassStats", "PipelineSpec", "PlanLayer", "Session", "SignStep",
+    "Target", "Term", "TuneRecord", "TuneStats", "TuneStore",
     "WeightedSum", "addend_rewrite", "as_layered_weights", "backends",
     "cached_compile_net", "circuit_from_arrays", "circuit_to_arrays",
-    "compile_artifact", "compile_net", "default_session",
-    "delete_zero_terms", "emit_verilog", "evaluate", "list_passes",
-    "list_pipelines", "list_targets", "lower", "lower_circuit",
-    "node_widths", "ops", "prune_dead_units", "register_pass",
-    "register_pipeline", "register_target", "resolve_target",
-    "run_pipeline", "serve", "share_common_addends", "specialize",
-    "stack_layered_weights", "stack_plans",
+    "compile_artifact", "compile_net", "decompose_planes",
+    "default_session", "default_tuner", "delete_zero_terms",
+    "emit_verilog", "evaluate", "list_passes", "list_pipelines",
+    "list_targets", "lower", "lower_circuit", "node_widths", "ops",
+    "prune_dead_units", "register_pass", "register_pipeline",
+    "register_target", "resolve_target", "run_pipeline", "serve",
+    "share_common_addends", "specialize", "stack_layered_weights",
+    "stack_plans",
 ]
 
 

@@ -53,15 +53,21 @@ def compile_circuit(circuit, backend: str = "jnp", **opts):
     return target.compile(circuit, **merged)
 
 
-def compile_multi(plan, backend: str = "jnp", **opts):
+def compile_multi(plan, backend: str = "jnp", tuner=None, **opts):
     """Compile a stacked ExecutionPlan into one jitted multi-net
     dispatch: uint8 (M, B, n_in) -> predictions (M, B). `backend`
     accepts bracket options like the single-net form (e.g.
-    "pallas[packed=true]"); options are validated against the target's
-    declaration — there is no raw-kwargs side door."""
+    "pallas[packed=true]", "pallas[tuned=true]"); options are validated
+    against the target's declaration — there is no raw-kwargs side
+    door. `tuner` (a `repro.netgen.tune.KernelTuner`, not a declared
+    option) reaches targets that want one — the serving layer passes
+    its session's tuner so stacked dispatch builds reuse persisted
+    tuning records."""
     target, merged = resolve_target(backend, opts)
     if target.compile_multi is None:
         raise ValueError(
             f"target {target.name!r} has no multi-net dispatch "
             f"(have {MULTI_BACKENDS})")
+    if target.wants_tuner:
+        merged["_tuner"] = tuner
     return target.compile_multi(plan, **merged)

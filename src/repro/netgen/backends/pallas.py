@@ -1,25 +1,44 @@
 """Pallas backend: execute an ExecutionPlan on the TPU kernels.
 
-Per-layer path (any depth) chains the `binary_matvec` masked-accumulate
-kernel — the VPU select/add realization of the paper's L5 rewrite — with
-a sign-bit step between layers. Two datapaths, selected by the plan
-form (`pallas[packed=true]`):
+Per-layer path (any depth) chains the `binary_matvec` kernels — the
+VPU realization of the paper's L5 rewrite — with the step fused into
+the layer boundary. Three datapaths, selected by the plan form
+(`pallas[packed=true]`, `pallas[planes=true]`):
 
   dense   — activations travel as int8 {0,1} vectors into
-            `binary_matmul` (one byte per wire).
-  packed  — activations are bit-packed 32-per-uint32 word between
-            layers and fed to `binary_matmul_packed` (one *bit* per
-            wire — the TPU analogue of the paper's single-bit nets,
-            8x less activation traffic and fewer K-grid steps).
+            `binary_matmul` (one byte per wire, int32 weights).
+  packed  — activations are bit-packed 32-per-uint32 word END TO END:
+            the input binarizer emits packed words, every hidden step
+            emits packed words (`step_pack` — no int8 activation ever
+            materializes between layers), and `binary_matmul_packed`
+            consumes them (one *bit* per wire; weights still int32).
+  planes  — the fully bit-packed datapath: weights decomposed into
+            packed signed bit-planes (`plan.planes()`) and accumulated
+            by `binary_matmul_planes` as
+            sum_b 2^b (popcount(x & pos_b) - popcount(x & neg_b)) —
+            both operands travel as bits, the paper's selected-addends
+            taken to the XNOR/AND+popcount form of the BNN-on-FPGA
+            literature. Plane count tracks the post-pass weight
+            magnitude range, so a quantized net moves ~2P bits of
+            weight per addend instead of 32.
+
+Block sizes (`bm`, `bn`, `bkw`) are declared target options; with
+`pallas[tuned=true]` they — and, when no form is forced, the
+dense/packed/planes choice itself — are grid-searched per (plan shape x
+device kind) through `repro.netgen.tune` and persisted, so a warm
+process never re-measures (`Session(tune_store=...)`).
 
 The `fused` variant lowers the whole 2-layer paper net into the
 single-launch `fused_mlp` kernel, the combinational-circuit analogue
-(one "net" per prediction, intermediate activations never leaving VMEM).
+(one "net" per prediction, intermediate activations never leaving
+VMEM); `fused[tuned=true]` searches its batch tile.
 
 Kernels run in interpret mode on CPU containers (see kernels/*/ops.py);
 on a real TPU the same code path compiles to Mosaic.
 """
 from __future__ import annotations
+
+import numpy as np
 
 import jax
 import jax.numpy as jnp
@@ -29,51 +48,287 @@ from repro.netgen.plan import ExecutionPlan, lower_circuit
 
 __all__ = ["compile_pallas", "compile_pallas_multi", "compile_fused"]
 
+_FORMS = ("dense", "packed", "planes")
 
-def _layer_matmul(bmv, kw, packed: bool):
-    """One plan layer as a kernel launch: int8 activation bits (B, K) x
-    int32 weights -> int32 accumulators (B, N). The packed datapath
-    packs the bits into uint32 words first (`pack_bits` pads K to the
-    same 32-multiple the packed plan padded the weights to)."""
-    def matmul(a, w):
-        if w.shape[0] == 0:  # fully-pruned predecessor layer: constant 0
-            return jnp.zeros((a.shape[0], w.shape[1]), jnp.int32)
-        if packed:
-            return bmv.binary_matmul_packed(bmv.pack_bits(a), w, **kw)
-        return bmv.binary_matmul(a, w, **kw)
-    return matmul
+# The tuner's default candidate grid: block sizes the binary_matvec
+# kernels accept, small enough to search in seconds yet covering the
+# batch/fan-out/reduction trade-offs that actually move the needle.
+_TUNE_BLOCKS = (
+    {"bm": 128, "bn": 128, "bkw": 8},
+    {"bm": 128, "bn": 128, "bkw": 16},
+    {"bm": 64, "bn": 128, "bkw": 8},
+    {"bm": 128, "bn": 64, "bkw": 8},
+)
+_TUNE_BATCH = 256        # measurement batch: the serve layer's default cap
 
+
+def _resolve_form(packed: bool, planes: bool) -> str | None:
+    """The explicitly requested plan form, or None when the caller left
+    the choice open (tuned=true may then search it)."""
+    if packed and planes:
+        raise ValueError(
+            "pallas: packed=true and planes=true are exclusive datapaths")
+    if planes:
+        return "planes"
+    if packed:
+        return "packed"
+    return None
+
+
+def _in_form(plan: ExecutionPlan, form: str) -> ExecutionPlan:
+    if form == "planes":
+        return plan.planes()
+    if form == "packed":
+        return plan.pack()
+    return plan
+
+
+def _blocks_kw(form: str, blocks: dict) -> dict:
+    """Map the declared bm/bn/bkw options onto the kernel entry point's
+    keywords (the dense kernel's K tile is in bits, not words)."""
+    kw = {}
+    for k in ("bm", "bn"):
+        if blocks.get(k) is not None:
+            kw[k] = int(blocks[k])
+    if blocks.get("bkw") is not None:
+        if form == "dense":
+            kw["bk"] = int(blocks["bkw"]) * 32
+        else:
+            kw["bkw"] = int(blocks["bkw"])
+    return kw
+
+
+def _chain(plan: ExecutionPlan, kw: dict, blocks: dict):
+    """Build one version's layer chain for the plan's form.
+
+    Returns (arrays, run): `arrays` is a flat tuple of per-layer jnp
+    arrays (leading model axis when the plan is stacked — `lax.map`
+    slices them per version) and `run(x_uint8, *arrays)` maps one
+    version's uint8 batch to predicted classes. The packed and planes
+    chains are packed END TO END: binarize emits uint32 words, every
+    hidden boundary is a fused `step_pack`, and no int8 activation
+    exists between layers.
+    """
+    from repro.kernels.binary_matvec import ops as bmv
+
+    form = plan.form
+    thr = plan.input_threshold
+    bkw_kw = {**_blocks_kw(form, blocks), **kw}
+
+    if form == "dense":
+        arrays = tuple(jnp.asarray(l.weights, jnp.int32) for l in plan.layers)
+
+        def matmul(a, w):
+            if w.shape[-2] == 0:     # fully-pruned predecessor: constant 0
+                return jnp.zeros((a.shape[0], w.shape[-1]), jnp.int32)
+            return bmv.binary_matmul(a, w, **bkw_kw)
+
+        def run(x_uint8, *ws):
+            a = (x_uint8.astype(jnp.int32) > thr).astype(jnp.int8)
+            for w in ws[:-1]:
+                a = (matmul(a, w) > 0).astype(jnp.int8)
+            return jnp.argmax(matmul(a, ws[-1]), axis=-1)
+
+        return arrays, run
+
+    words = [l.words for l in plan.layers]
+
+    if form == "packed":
+        arrays = tuple(jnp.asarray(l.weights, jnp.int32) for l in plan.layers)
+
+        def matmul(a, w):
+            if w.shape[-2] == 0:
+                return jnp.zeros((a.shape[0], w.shape[-1]), jnp.int32)
+            return bmv.binary_matmul_packed(a, w, **bkw_kw)
+
+        def run(x_uint8, *ws):
+            a = bmv.binarize_pack(x_uint8, threshold=thr, words=words[0])
+            for w, nxt in zip(ws[:-1], words[1:]):
+                a = bmv.step_pack(matmul(a, w), words=nxt)
+            return jnp.argmax(matmul(a, ws[-1]), axis=-1)
+
+        return arrays, run
+
+    assert form == "planes", form
+    arrays = []
+    for layer in plan.layers:
+        arrays.append(jnp.asarray(layer.pos_planes, jnp.uint32))
+        arrays.append(jnp.asarray(layer.neg_planes, jnp.uint32))
+    fan_outs = [l.fan_out for l in plan.layers]
+
+    def plane_matmul(a, pos, neg, fan_out):
+        if pos.shape[-2] == 0:       # zero words: fully-pruned fan_in
+            return jnp.zeros((a.shape[0], fan_out), jnp.int32)
+        return bmv.binary_matmul_planes(a, pos, neg, **bkw_kw)
+
+    def run(x_uint8, *planes):
+        a = bmv.binarize_pack(x_uint8, threshold=thr, words=words[0])
+        for i in range(len(fan_outs) - 1):
+            acc = plane_matmul(
+                a, planes[2 * i], planes[2 * i + 1], fan_outs[i])
+            a = bmv.step_pack(acc, words=words[i + 1])
+        return jnp.argmax(
+            plane_matmul(a, planes[-2], planes[-1], fan_outs[-1]), axis=-1)
+
+    return tuple(arrays), run
+
+
+def _build_single(plan: ExecutionPlan, kw: dict, blocks: dict):
+    arrays, run = _chain(plan, kw, blocks)
+    jitted = jax.jit(lambda x: run(x, *arrays))
+
+    def predict(x_uint8):
+        return jitted(x_uint8)
+
+    predict.plan_form = plan.form
+    predict.blocks = dict(blocks)
+    return predict
+
+
+def _build_multi(plan: ExecutionPlan, kw: dict, blocks: dict):
+    arrays, run = _chain(plan, kw, blocks)
+    jitted = jax.jit(lambda block: jax.lax.map(
+        lambda s: run(s[0], *s[1:]), (block, *arrays)))
+
+    def predict(x_uint8):                            # (M, B, n_in)
+        return jitted(x_uint8)
+
+    predict.plan_form = plan.form
+    predict.blocks = dict(blocks)
+    return predict
+
+
+# ---------------------------------------------------------------------------
+# Autotuning (repro.netgen.tune)
+# ---------------------------------------------------------------------------
+
+def _plan_signature(plan: ExecutionPlan) -> dict:
+    """The JSON-stable shape identity tuning records are keyed on: layer
+    geometry plus each layer's bit-plane count (the plane count sets the
+    planes kernel's work, so nets of equal shape but different weight
+    ranges tune separately). Computed from magnitudes directly — no
+    plane decomposition is materialized for keying."""
+    return {
+        "n_inputs": plan.n_inputs,
+        "widths": [l.fan_out for l in plan.layers],
+        "n_models": plan.n_models,
+        "n_planes": [
+            max(1, int(np.abs(l.weights).max(initial=0)).bit_length())
+            for l in plan.layers],
+    }
+
+
+def _tuned_params(plan: ExecutionPlan, kw: dict, blocks: dict,
+                  forms, tuner, *, multi: bool):
+    """Grid-search (form x block sizes) for this plan through the tuner
+    (memory -> store -> measure); returns (winning params, the winner's
+    already-built predictor or None on a warm record hit — a cold
+    search traced the winner once already, don't trace it twice).
+    Explicit block options are pinned, not searched."""
+    from repro.netgen import tune
+
+    tuner = tuner if tuner is not None else tune.default_tuner()
+    pinned = {k: v for k, v in blocks.items() if v is not None}
+    candidates = []
+    seen = set()
+    for form in forms:
+        for grid in _TUNE_BLOCKS:
+            cand = {"form": form, **grid, **pinned}
+            key = tuple(sorted(cand.items()))
+            if key not in seen:
+                seen.add(key)
+                candidates.append(cand)
+
+    batch = _TUNE_BATCH if not multi else max(32, _TUNE_BATCH // 4)
+    shape = ((batch, plan.n_inputs) if not multi
+             else (plan.n_models, batch, plan.n_inputs))
+    x = np.zeros(shape, np.uint8)
+    built: dict = {}
+
+    def measure(cand: dict) -> float:
+        ckey = tuple(sorted(cand.items()))
+        fn = built.get(ckey)
+        if fn is None:
+            form = cand["form"]
+            cblocks = {k: cand[k] for k in ("bm", "bn", "bkw")}
+            build = _build_multi if multi else _build_single
+            fn = build(_in_form(plan, form), kw, cblocks)
+            built[ckey] = fn
+        import time
+        t0 = time.perf_counter()
+        np.asarray(fn(x))
+        return time.perf_counter() - t0
+
+    key_fields = {
+        "target": "pallas",
+        "device_kind": jax.devices()[0].device_kind,
+        "interpret": kw.get("interpret"),
+        "multi": bool(multi),
+        "batch": batch,
+        "signature": _plan_signature(plan),
+        "candidates": candidates,
+    }
+    best = tuner.get_or_tune(key_fields, candidates, measure)
+    return best, built.get(tuple(sorted(best.items())))
+
+
+def _resolve_datapath(plan: ExecutionPlan, kw: dict, *, packed, planes,
+                      tuned, bm, bn, bkw, tuner, multi: bool):
+    """Turn the declared target options into (form, blocks, prebuilt):
+    explicit options pin their axis; `tuned=true` searches the rest.
+    `prebuilt` is the winning predictor when this process's search just
+    built it (None otherwise — the caller builds)."""
+    form = _resolve_form(packed, planes)
+    blocks = {"bm": bm, "bn": bn, "bkw": bkw}
+    prebuilt = None
+    if tuned:
+        forms = (form,) if form is not None else _FORMS
+        best, prebuilt = _tuned_params(
+            plan, kw, blocks, forms, tuner, multi=multi)
+        form = best["form"]
+        blocks = {k: best[k] for k in ("bm", "bn", "bkw")}
+    elif form is None:
+        form = "dense"
+    return form, blocks, prebuilt
+
+
+# ---------------------------------------------------------------------------
+# Target entry points
+# ---------------------------------------------------------------------------
 
 def compile_pallas(circuit: Circuit, *, interpret: bool | None = None,
-                   packed: bool = False):
+                   packed: bool = False, planes: bool = False,
+                   tuned: bool = False, bm: int | None = None,
+                   bn: int | None = None, bkw: int | None = None,
+                   _tuner=None):
     """Return a jitted fn chaining one kernel launch per plan layer.
 
     `interpret` overrides the kernel ops' container default (interpret
     mode on CPU); pass `pallas[interpret=false]` on a real TPU to lower
-    through Mosaic. `packed` selects the bit-packed activation datapath
-    (`pallas[packed=true]`), bit-exact with the dense path.
+    through Mosaic. `packed` selects the end-to-end bit-packed
+    activation datapath, `planes` the fully bit-packed (bit-plane
+    weight) datapath — both bit-exact with dense. `bm`/`bn`/`bkw` pin
+    kernel block sizes; `tuned` grid-searches unpinned block sizes (and
+    the form, when none is forced) through the persistent autotuner.
+    The returned fn carries `.plan_form` and `.blocks` describing what
+    the search (or the flags) chose.
     """
-    from repro.kernels.binary_matvec import ops as bmv
-
     kw = {} if interpret is None else {"interpret": interpret}
-    plan = lower_circuit(circuit, packed=packed)
-    ws = [jnp.asarray(l.weights, jnp.int32) for l in plan.layers]
-    thr = plan.input_threshold
-    matmul = _layer_matmul(bmv, kw, plan.packed)
-
-    @jax.jit
-    def predict(x_uint8):
-        a = (x_uint8.astype(jnp.int32) > thr).astype(jnp.int8)
-        for w in ws[:-1]:
-            a = (matmul(a, w) > 0).astype(jnp.int8)
-        return jnp.argmax(matmul(a, ws[-1]), axis=-1)
-
-    return predict
+    plan = lower_circuit(circuit)
+    form, blocks, prebuilt = _resolve_datapath(
+        plan, kw, packed=packed, planes=planes, tuned=tuned,
+        bm=bm, bn=bn, bkw=bkw, tuner=_tuner, multi=False)
+    if prebuilt is not None:
+        return prebuilt
+    return _build_single(_in_form(plan, form), kw, blocks)
 
 
 def compile_pallas_multi(plan: ExecutionPlan, *,
                          interpret: bool | None = None,
-                         packed: bool = False):
+                         packed: bool = False, planes: bool = False,
+                         tuned: bool = False, bm: int | None = None,
+                         bn: int | None = None, bkw: int | None = None,
+                         _tuner=None):
     """Multi-net dispatch through the binary_matvec kernel chain.
 
     `plan` is a *stacked* ExecutionPlan (`repro.netgen.plan.stack_plans`,
@@ -81,37 +336,29 @@ def compile_pallas_multi(plan: ExecutionPlan, *,
     The model axis is swept with `lax.map` — a scan whose body is the
     per-layer kernel chain, so the whole M-version batch is one jitted
     dispatch and each version's weights stream through the same kernel
-    traces. `interpret` and `packed` as in `compile_pallas` (the
-    single-version path and the stacked path honor the same declared
-    target options).
+    traces. All declared options behave as in `compile_pallas`; tuning
+    records for stacked plans are keyed on the stacked shape (model
+    count included), separate from the single-net records.
     """
-    from repro.kernels.binary_matvec import ops as bmv
-
     if not plan.stacked:
         raise ValueError("compile_pallas_multi needs a stacked ExecutionPlan")
     kw = {} if interpret is None else {"interpret": interpret}
-    if packed:
-        plan = plan.pack()
-    ws = [jnp.asarray(l.weights, jnp.int32) for l in plan.layers]
-    thr = plan.input_threshold
-    matmul = _layer_matmul(bmv, kw, plan.packed)
-
-    def one_version(slices):
-        x, *wm = slices
-        a = (x.astype(jnp.int32) > thr).astype(jnp.int8)
-        for w in wm[:-1]:
-            a = (matmul(a, w) > 0).astype(jnp.int8)
-        return jnp.argmax(matmul(a, wm[-1]), axis=-1)
-
-    @jax.jit
-    def predict(x_uint8):                            # (M, B, n_in)
-        return jax.lax.map(one_version, (x_uint8, *ws))
-
-    return predict
+    form, blocks, prebuilt = _resolve_datapath(
+        plan, kw, packed=packed, planes=planes, tuned=tuned,
+        bm=bm, bn=bn, bkw=bkw, tuner=_tuner, multi=True)
+    if prebuilt is not None:
+        return prebuilt
+    return _build_multi(_in_form(plan, form), kw, blocks)
 
 
-def compile_fused(circuit: Circuit, *, interpret: bool | None = None):
-    """Whole-net single Pallas launch; 2-layer plans only."""
+_FUSED_TUNE_BM = (64, 128, 256)
+
+
+def compile_fused(circuit: Circuit, *, interpret: bool | None = None,
+                  tuned: bool = False, bm: int | None = None, _tuner=None):
+    """Whole-net single Pallas launch; 2-layer plans only. `bm` pins the
+    batch tile; `fused[tuned=true]` searches it per plan shape through
+    the persistent autotuner."""
     from repro.kernels.fused_mlp import ops as fused
 
     kw = {} if interpret is None else {"interpret": interpret}
@@ -123,8 +370,40 @@ def compile_fused(circuit: Circuit, *, interpret: bool | None = None):
     w2 = jnp.asarray(plan.layers[1].weights, jnp.int32)
     thr = plan.input_threshold
 
-    @jax.jit
-    def predict(x_uint8):
-        return fused.fused_mlp_predict(x_uint8, w1, w2, threshold=thr, **kw)
+    if tuned and bm is None:
+        from repro.netgen import tune
 
+        tuner = _tuner if _tuner is not None else tune.default_tuner()
+        x = np.zeros((_TUNE_BATCH, plan.n_inputs), np.uint8)
+        candidates = [{"bm": b} for b in _FUSED_TUNE_BM]
+
+        def measure(cand):
+            import time
+            t0 = time.perf_counter()
+            np.asarray(fused.fused_mlp_predict(
+                x, w1, w2, threshold=thr, bm=cand["bm"], **kw))
+            return time.perf_counter() - t0
+
+        best = tuner.get_or_tune({
+            "target": "fused",
+            "device_kind": jax.devices()[0].device_kind,
+            "interpret": kw.get("interpret"),
+            "batch": _TUNE_BATCH,
+            "signature": _plan_signature(plan),
+            "candidates": candidates,
+        }, candidates, measure)
+        bm = best["bm"]
+
+    bm_kw = {} if bm is None else {"bm": int(bm)}
+
+    @jax.jit
+    def _jitted(x_uint8):
+        return fused.fused_mlp_predict(
+            x_uint8, w1, w2, threshold=thr, **bm_kw, **kw)
+
+    def predict(x_uint8):
+        return _jitted(x_uint8)
+
+    predict.plan_form = "dense"
+    predict.blocks = dict(bm_kw)
     return predict

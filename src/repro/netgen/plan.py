@@ -9,7 +9,7 @@ weight matrices, the activation applied after each accumulation, the
 input binarization threshold, and the final argmax — that backends
 execute without ever looking at IR nodes again.
 
-The plan has three orthogonal forms:
+The plan has four orthogonal forms:
 
   dense    — per-layer int32 (fan_in, fan_out) matrices, activations as
              int8 {0,1} vectors. What the paper's arithmetic literally
@@ -21,6 +21,17 @@ The plan has three orthogonal forms:
              analogue of the paper's single-bit wires, 8x less
              activation traffic than int8. Zero-padding is exact: a
              padded activation bit is 0 and its weight row is zero.
+  planes   — `plan.planes()`: the packed form with each layer's int32
+             weight matrix additionally decomposed into signed binary
+             bit-planes, w = sum_b 2^b (pos_plane_b - neg_plane_b),
+             every plane packed 32-lanes-per-uint32 along fan_in
+             (`decompose_planes`). The plane count is set by the
+             layer's ACTUAL post-pass weight magnitude range (tiny for
+             the paper's quantized nets), so both operands of
+             `binary_matmul_planes` travel as bits — the paper's
+             selected-addends idea taken to its packed conclusion: a
+             P-plane layer moves 2P bits of weight per addend instead
+             of 32, and the kernel accumulates via popcount over words.
   stacked  — `stack_plans([...])`: M compatible single-net plans joined
              along a leading model axis ((M, fan_in, fan_out) weights)
              for the serving layer's multi-net dispatch. Hidden widths
@@ -28,11 +39,13 @@ The plan has three orthogonal forms:
              are zero-padded to the per-layer maximum, exact under the
              strict step semantics (an all-zero column is an empty
              accumulator, step(0) = 0, and its outgoing row is
-             zero-padded too). A stacked plan can then be packed.
+             zero-padded too). A stacked plan can then be packed or
+             plane-decomposed (the plane count is the per-layer maximum
+             over the stacked versions).
 
 Backends declare which form they execute via target options
-(`pallas[packed=true]`); the Session records the compiled form on the
-`Artifact` (`artifact.plan_form`).
+(`pallas[packed=true]`, `pallas[planes=true]`); the Session records the
+compiled form on the `Artifact` (`artifact.plan_form`).
 """
 from __future__ import annotations
 
@@ -44,8 +57,8 @@ import numpy as np
 from repro.netgen.graph import Circuit, as_layered_weights
 
 __all__ = [
-    "ExecutionPlan", "PlanLayer", "PACK_LANES", "lower_circuit",
-    "stack_plans",
+    "ExecutionPlan", "PlanLayer", "PACK_LANES", "decompose_planes",
+    "lower_circuit", "stack_plans",
 ]
 
 PACK_LANES = 32      # activations per uint32 word in the packed datapath
@@ -64,11 +77,17 @@ class PlanLayer:
     "step" (hidden layers) or "argmax" (the final scores). In a packed
     plan the fan_in axis is padded to a PACK_LANES multiple and `words`
     holds the uint32 lane count (fan_in // 32); dense layers have
-    `words` None.
+    `words` None. In the bit-plane form `pos_planes`/`neg_planes` hold
+    the packed uint32 signed bit-planes ((P, words, fan_out), model
+    axis leading when stacked) and `n_planes` the plane count P —
+    `weights` stays populated as the decomposition's ground truth.
     """
     weights: np.ndarray
     activation: str
     words: int | None = None
+    pos_planes: np.ndarray | None = None
+    neg_planes: np.ndarray | None = None
+    n_planes: int | None = None
 
     @property
     def fan_in(self) -> int:
@@ -89,6 +108,7 @@ class ExecutionPlan:
     input_threshold: int
     layers: tuple[PlanLayer, ...]
     packed: bool = False
+    bitplanes: bool = False          # packed + plane-decomposed weights
     n_models: int | None = None      # None: single net; M: stacked plans
 
     @property
@@ -103,6 +123,8 @@ class ExecutionPlan:
     def form(self) -> str:
         """The datapath form an executor of this plan implements —
         recorded on Artifacts and shown in benchmarks."""
+        if self.bitplanes:
+            return "planes"
         return "packed" if self.packed else "dense"
 
     @property
@@ -136,12 +158,75 @@ class ExecutionPlan:
         return dataclasses.replace(
             self, layers=tuple(layers), packed=True)
 
+    def planes(self) -> "ExecutionPlan":
+        """The fully bit-packed form: the packed plan with every layer's
+        weight matrix decomposed into packed signed bit-planes (see
+        module doc; exact — `decompose_planes` reconstructs the int32
+        matrix bit for bit). The plane count is per layer, from that
+        layer's actual post-pass weight magnitude range."""
+        if self.bitplanes:
+            return self
+        base = self.pack()
+        layers = []
+        for layer in base.layers:
+            pos, neg, n_planes = decompose_planes(layer.weights)
+            layers.append(dataclasses.replace(
+                layer, pos_planes=pos, neg_planes=neg, n_planes=n_planes))
+        return dataclasses.replace(
+            base, layers=tuple(layers), bitplanes=True)
 
-def lower_circuit(circuit: Circuit, *, packed: bool = False) -> ExecutionPlan:
+
+def decompose_planes(w: np.ndarray) -> tuple[np.ndarray, np.ndarray, int]:
+    """Decompose an int32 weight matrix (..., K, N) with K a PACK_LANES
+    multiple into packed signed bit-planes:
+
+        w = sum_b 2^b (unpack(pos[..., b, :, :]) - unpack(neg[..., b, :, :]))
+
+    Returns (pos, neg, n_planes): uint32 arrays of shape
+    (..., P, K // 32, N) — bit i of word j along the packed axis holds
+    plane bit (32*j + i) — and P = bit_length(max |w|) (>= 1, so an
+    all-zero layer still has a well-formed single zero plane). Positive
+    and negative magnitudes get separate planes; a weight is never in
+    both."""
+    k, n = w.shape[-2], w.shape[-1]
+    if k % PACK_LANES:
+        raise ValueError(
+            f"fan_in {k} is not a multiple of {PACK_LANES}; pack() first")
+    mag = np.abs(w)
+    n_planes = max(1, int(mag.max(initial=0)).bit_length())
+    lead = w.shape[:-2]
+    words = k // PACK_LANES
+    shifts = np.arange(PACK_LANES, dtype=np.uint32)
+
+    def pack_mag(m: np.ndarray) -> np.ndarray:
+        planes = []
+        for b in range(n_planes):
+            bits = ((m >> np.uint32(b)) & np.uint32(1))
+            r = bits.reshape(*lead, words, PACK_LANES, n)
+            planes.append(np.bitwise_or.reduce(
+                r << shifts[:, None], axis=-2))
+        return np.stack(planes, axis=-3)          # (..., P, words, N)
+
+    pos = pack_mag(np.maximum(w, 0).astype(np.uint32))
+    neg = pack_mag(np.maximum(-w, 0).astype(np.uint32))
+    return pos, neg, n_planes
+
+
+_FORMS = ("dense", "packed", "planes")
+
+
+def lower_circuit(circuit: Circuit, *, packed: bool = False,
+                  form: str | None = None) -> ExecutionPlan:
     """Lower a *regular* optimized circuit into an ExecutionPlan — the
     single weight-extraction step every array backend compiles through.
-    Raises IrregularCircuitError for shared/CSE circuits (which have no
+    `form` picks the datapath ("dense" / "packed" / "planes"; the
+    legacy `packed=True` flag means form="packed"). Raises
+    IrregularCircuitError for shared/CSE circuits (which have no
     layered tensor form; see `graph.as_layered_weights`)."""
+    if form is None:
+        form = "packed" if packed else "dense"
+    if form not in _FORMS:
+        raise ValueError(f"unknown plan form {form!r} (have {_FORMS})")
     mats = as_layered_weights(circuit)
     layers = tuple(
         PlanLayer(weights=np.asarray(w, dtype=np.int32),
@@ -151,7 +236,11 @@ def lower_circuit(circuit: Circuit, *, packed: bool = False) -> ExecutionPlan:
         n_inputs=circuit.n_inputs,
         input_threshold=circuit.input_threshold,
         layers=layers)
-    return plan.pack() if packed else plan
+    if form == "packed":
+        return plan.pack()
+    if form == "planes":
+        return plan.planes()
+    return plan
 
 
 def stack_plans(plans: Sequence[ExecutionPlan]) -> ExecutionPlan:

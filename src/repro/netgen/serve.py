@@ -121,11 +121,13 @@ class CompileCache:
     """LRU-bounded, thread-safe, content-addressed compile cache — the
     in-memory tier over an optional persistent `ArtifactStore`."""
 
-    def __init__(self, capacity: int = 32, store: ArtifactStore | None = None):
+    def __init__(self, capacity: int = 32, store: ArtifactStore | None = None,
+                 tuner=None):
         if capacity < 1:
             raise ValueError(f"capacity must be >= 1, got {capacity}")
         self.capacity = int(capacity)
         self.store = store
+        self.tuner = tuner       # forwarded to wants_tuner target compiles
         self._lock = threading.RLock()
         self._entries: "OrderedDict[CacheKey, Artifact]" = OrderedDict()
         self._compile_seconds: dict[CacheKey, float] = {}
@@ -204,7 +206,7 @@ class CompileCache:
             if compiled is None:
                 t0 = time.perf_counter()
                 compiled = compile_resolved(
-                    ws, thr, key.digest, spec, tgt, opts)
+                    ws, thr, key.digest, spec, tgt, opts, tuner=self.tuner)
                 dt = time.perf_counter() - t0
                 self._stats.compiles += 1
                 self._stats.compile_seconds += dt
@@ -334,6 +336,9 @@ class NetServer:
         else:
             self.cache = cache if cache is not None else CompileCache()
         self.session = session
+        # tuned=true stacked dispatch builds reuse the same persistent
+        # tuning records as the single-version compiles
+        self._tuner = getattr(self.cache, "tuner", None)
         self.backend = self._target.name
         self.passes = pipeline if pipeline is not None else passes
         self.slot_capacity = int(slot_capacity)
@@ -478,7 +483,8 @@ class NetServer:
                 try:
                     plan = stack_plans([lower_circuit(c) for c in circuits])
                     fn = compile_multi(
-                        plan, backend=self._target.name, **self._opts)
+                        plan, backend=self._target.name, tuner=self._tuner,
+                        **self._opts)
                     sharded_fn = (None if mesh is None else
                                   _shard_stacked(fn, mesh, self.slot_capacity))
                     entry = ((sharded_fn, True) if sharded_fn is not None

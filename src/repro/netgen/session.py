@@ -18,12 +18,24 @@ This module is the compiler's front door (the ISSUE-3 redesign):
       so concurrent processes can share one store.
 
   Session — the object users hold: an in-memory tier (the serving
-      layer's `CompileCache`) over an optional `ArtifactStore`.
+      layer's `CompileCache`) over an optional `ArtifactStore`, plus an
+      optional persistent kernel-tuning store and a background compile
+      queue.
 
-      session = Session(store=ArtifactStore("~/.cache/netgen"))
-      art = session.compile(qnet, target="pallas", pipeline="hw")
+      session = Session(store=ArtifactStore("~/.cache/netgen"),
+                        tune_store="~/.cache/netgen-tune")
+      art = session.compile(qnet, target="pallas[tuned=true]")
       art(images)                   # callable artifact
       print(art.report())           # pass savings + cell estimate
+      handle = session.compile_async(qnet2, target="pallas")
+      ...                           # keep serving while it compiles
+      handle.result()               # the Artifact, store now warm
+
+  Tuning records (`repro.netgen.tune`) ride the same lifecycle as
+  artifacts: `tuned=true` targets receive the session's `KernelTuner`,
+  whose store is consulted before any measurement — including when an
+  artifact is REBUILT from the ArtifactStore in a fresh process, so a
+  warm process performs zero compiles AND zero tuning measurements.
 
 `repro.netgen.compile_net` remains as a deprecated shim routed through a
 default Session.
@@ -36,6 +48,7 @@ import io
 import json
 import os
 import shutil
+import threading
 import time
 import uuid
 from pathlib import Path
@@ -155,7 +168,7 @@ class Artifact:
                 f"{self.backend} artifacts have no execution plan "
                 f"(kind: {self.kind})")
         from repro.netgen.plan import lower_circuit
-        return lower_circuit(self.circuit, packed=self.plan_form == "packed")
+        return lower_circuit(self.circuit, form=self.plan_form or "dense")
 
     def __call__(self, x_uint8):
         if not callable(self.artifact):
@@ -188,10 +201,13 @@ def compile_artifact(net, *, target="jnp", pipeline=None,
 
 
 def compile_resolved(ws, thr: int, digest: str, spec: PipelineSpec,
-                     tgt, opts: dict) -> Artifact:
+                     tgt, opts: dict, tuner=None) -> Artifact:
     """The compile driver proper, for callers (the cache tiers) that
     already extracted/canonicalized the inputs while computing the
-    content address — weights are not re-copied or re-hashed here."""
+    content address — weights are not re-copied or re-hashed here.
+    `tuner` reaches targets that declare `wants_tuner` (as `_tuner`),
+    so `tuned=true` kernel builds hit the session's persistent tuning
+    records instead of re-measuring."""
     tstring = target_string(tgt, opts)
 
     t0 = time.perf_counter()
@@ -207,12 +223,18 @@ def compile_resolved(ws, thr: int, digest: str, spec: PipelineSpec,
     kwargs = dict(opts)
     if tgt.wants_pass_trace:
         kwargs["_pass_trace"] = tuple(trace)
+    if tgt.wants_tuner:
+        kwargs["_tuner"] = tuner
     raw = tgt.compile(circuit, **kwargs)
     t_backend = time.perf_counter()
 
     plan_form = None
     if tgt.kind == "callable":
-        plan_form = "packed" if opts.get("packed") else "dense"
+        # tuned=true backends choose the datapath at build time and
+        # stamp it on the predictor; explicit options say it up front
+        plan_form = getattr(raw, "plan_form", None) or (
+            "planes" if opts.get("planes")
+            else "packed" if opts.get("packed") else "dense")
     return Artifact(
         plan_form=plan_form,
         digest=digest,
@@ -272,7 +294,7 @@ class ArtifactStore:
     """
 
     def __init__(self, root, *, max_entries: int | None = None,
-                 max_bytes: int | None = None):
+                 max_bytes: int | None = None, tuner=None):
         if max_entries is not None and max_entries < 1:
             raise ValueError(f"max_entries must be >= 1, got {max_entries}")
         if max_bytes is not None and max_bytes < 1:
@@ -281,6 +303,10 @@ class ArtifactStore:
         self.root.mkdir(parents=True, exist_ok=True)
         self.max_entries = max_entries
         self.max_bytes = max_bytes
+        # Rebuilding a tuned=true callable re-invokes its backend, which
+        # consults this tuner's store — a warm-started artifact must not
+        # re-measure block sizes the first process already searched.
+        self.tuner = tuner
         self.stats = StoreStats()
 
     def _dir(self, key: str) -> Path:
@@ -426,7 +452,15 @@ class ArtifactStore:
         elif meta["kind"] == "report":
             raw = CostReport.from_dict(meta["cost_report"])
         else:
+            if tgt.wants_tuner:
+                opts = {**opts, "_tuner": self.tuner}
             raw = tgt.compile(circuit, **opts)
+            # a tuned=true rebuild may legitimately pick a different
+            # datapath than the original process (different device kind,
+            # evicted tuning record): trust what was actually built over
+            # the stored meta, or plan() would describe the wrong form
+            meta["plan_form"] = getattr(raw, "plan_form",
+                                        meta.get("plan_form"))
         stats = tuple(
             PassStats(name=s["name"],
                       before=CircuitOps(**s["before"]),
@@ -461,17 +495,33 @@ def _ops_from_dict(d: dict) -> CircuitOps:
 class Session:
     """The compiler's stateful front door: an in-memory LRU tier (the
     serving layer's `CompileCache`) over an optional persistent
-    `ArtifactStore`. `capacity=0` disables in-memory retention (every
-    compile still reads/writes the store when one is configured)."""
+    `ArtifactStore`, plus the kernel-tuning tier (`tune_store`) and a
+    background compile queue (`compile_async`). `capacity=0` disables
+    in-memory retention (every compile still reads/writes the store
+    when one is configured). `tune_store` points `tuned=true` kernel
+    builds at a persistent `repro.netgen.tune.TuneStore` directory;
+    without it the process-wide in-memory tuner is used."""
 
-    def __init__(self, *, store=None, capacity: int = 64):
+    def __init__(self, *, store=None, capacity: int = 64, tune_store=None):
         from repro.netgen.serve import CacheStats, CompileCache
+        from repro.netgen.tune import KernelTuner, TuneStore
         if store is not None and not isinstance(store, ArtifactStore):
             store = ArtifactStore(store)
         self.store = store
+        if tune_store is not None and not isinstance(tune_store, TuneStore):
+            tune_store = TuneStore(tune_store)
+        self.tuner = KernelTuner(store=tune_store) if tune_store is not None \
+            else None
+        if store is not None and self.tuner is not None \
+                and store.tuner is None:
+            # don't re-wire a shared store another session already
+            # attached its tuner to — first configuration wins
+            store.tuner = self.tuner
+        self._executor = None
+        self._executor_lock = threading.Lock()
         if capacity > 0:
             self.cache: "CompileCache | None" = CompileCache(
-                capacity, store=store)
+                capacity, store=store, tuner=self.tuner)
             self._stats = None
         else:
             self.cache = None
@@ -498,12 +548,44 @@ class Session:
                 self._stats.store_hits += 1
                 return art
         t0 = time.perf_counter()
-        art = compile_resolved(ws, thr, digest, spec, tgt, opts)
+        art = compile_resolved(ws, thr, digest, spec, tgt, opts,
+                               tuner=self.tuner)
         self._stats.compiles += 1
         self._stats.compile_seconds += time.perf_counter() - t0
         if self.store is not None:
             self.store.put(art)
         return art
+
+    def compile_async(self, net, *, target="jnp", pipeline="default",
+                      input_threshold: int | None = None, **target_opts):
+        """Queue `compile` on the session's background executor and
+        return a `concurrent.futures.Future` resolving to the Artifact.
+
+        The ROADMAP's session-level async compile queue: kick off the
+        expensive specializations early (`handle = compile_async(...)`),
+        keep serving, and by the time a `NetServer.register` asks for
+        the same content it hits the warm memory tier / ArtifactStore
+        instead of blocking on a cold compile. The queue is small and
+        daemonic (two workers — compiles are CPU-bound passes, not I/O
+        fan-out); `CompileCache` is thread-safe, so a concurrent sync
+        compile of the same key coalesces rather than racing."""
+        import concurrent.futures
+
+        with self._executor_lock:
+            if self._executor is None:
+                self._executor = concurrent.futures.ThreadPoolExecutor(
+                    max_workers=2, thread_name_prefix="netgen-compile")
+        return self._executor.submit(
+            self.compile, net, target=target, pipeline=pipeline,
+            input_threshold=input_threshold, **target_opts)
+
+    def shutdown(self, wait: bool = True) -> None:
+        """Stop the async compile executor (idempotent; queued compiles
+        finish when `wait`)."""
+        with self._executor_lock:
+            executor, self._executor = self._executor, None
+        if executor is not None:
+            executor.shutdown(wait=wait)
 
     def stats(self):
         """Hit/miss/compile counters (memory tier's when one exists)."""
@@ -513,3 +595,8 @@ class Session:
 
     def store_stats(self) -> StoreStats | None:
         return None if self.store is None else self.store.stats
+
+    def tune_stats(self):
+        """The tuner's hit/measurement counters (None without a
+        tune_store; see `repro.netgen.tune.TuneStats`)."""
+        return None if self.tuner is None else self.tuner.stats

@@ -38,9 +38,12 @@ class Target:
     "report"); `opts` declares the accepted options as (name, type)
     pairs; `compile_multi`, when present, builds the stacked multi-net
     dispatch (a stacked `repro.netgen.plan.ExecutionPlan` plus the same
-    declared opts -> callable); and `wants_pass_trace` asks the Session
+    declared opts -> callable); `wants_pass_trace` asks the Session
     driver to hand the pipeline's per-pass circuit trace to `compile`
-    as `_pass_trace`."""
+    as `_pass_trace`; and `wants_tuner` asks every compile entry point
+    (single and multi) to receive the caller's `repro.netgen.tune
+    .KernelTuner` as `_tuner` — how `Session(tune_store=...)` threads
+    persisted tuning records into `tuned=true` kernel builds."""
     name: str
     kind: str
     description: str
@@ -48,6 +51,7 @@ class Target:
     opts: tuple = ()                       # ((opt_name, type), ...)
     compile_multi: Callable | None = None
     wants_pass_trace: bool = False
+    wants_tuner: bool = False
 
     @property
     def callable(self) -> bool:
@@ -174,14 +178,23 @@ register_target(Target(
 register_target(Target(
     name="pallas", kind="callable",
     description="per-layer binary_matvec TPU kernel chain "
-                "(interpret-mode on CPU; packed=true bit-packs "
-                "activations 32-per-uint32 lane)",
-    compile=_compile_pallas, opts=(("interpret", bool), ("packed", bool)),
-    compile_multi=_compile_pallas_multi))
+                "(interpret-mode on CPU; packed=true chains bit-packed "
+                "activations end to end, planes=true additionally "
+                "decomposes weights into packed bit-planes accumulated "
+                "by popcount, tuned=true grid-searches the form and the "
+                "bm/bn/bkw block sizes per plan shape and persists the "
+                "winner)",
+    compile=_compile_pallas,
+    opts=(("interpret", bool), ("packed", bool), ("planes", bool),
+          ("tuned", bool), ("bm", int), ("bn", int), ("bkw", int)),
+    compile_multi=_compile_pallas_multi, wants_tuner=True))
 register_target(Target(
     name="fused", kind="callable",
-    description="single-launch whole-net Pallas kernel (2-layer only)",
-    compile=_compile_fused, opts=(("interpret", bool),)))
+    description="single-launch whole-net Pallas kernel (2-layer only; "
+                "tuned=true searches the bm batch tile)",
+    compile=_compile_fused,
+    opts=(("interpret", bool), ("tuned", bool), ("bm", int)),
+    wants_tuner=True))
 register_target(Target(
     name="verilog", kind="text",
     description="the paper's clockless combinational Verilog module",

@@ -1,0 +1,288 @@
+"""Persistent kernel autotuner: search tile parameters once, reuse forever.
+
+Guo et al.'s FPGA-accelerator survey frames the lesson this module
+operationalizes: tile/loop parameters must be *searched per workload*,
+not hard-coded. The pallas kernels' block sizes (`bm`, `bn`, `bkw`) and
+the datapath form (dense / packed / bit-plane) interact with the plan
+shape and the device, so `pallas[tuned=true]` grid-searches them —
+and, because the search is pure measurement over content-addressed
+inputs, the winner is persisted so it is NEVER re-measured:
+
+  KernelTuner — the search driver. `get_or_tune(key_fields, candidates,
+      measure)` consults an in-memory dict, then the persistent
+      `TuneStore`, and only on a double miss times each candidate
+      (best-of-`reps` wall clock) and records the winner. `stats`
+      counts hits / store hits / tunes / individual measurements, so a
+      warm-started process can assert it measured NOTHING.
+
+  TuneStore — one JSON file per record under a directory, addressed by
+      sha256 over the canonical key fields (tune format version, target,
+      device kind, plan signature, candidate grid). Writes are atomic
+      (temp file + rename) so concurrent processes share a store the
+      same way they share an `ArtifactStore`; corrupt entries degrade
+      to a re-tune, never a failure. CI caches this directory alongside
+      `.netgen-store`.
+
+  TuneRecord — the persisted artifact: the winning parameter dict plus
+      every (candidate, microseconds) measurement, so a benchmark (or a
+      curious human) can see the whole search surface, not just the
+      argmin.
+
+The tuner is deliberately backend-agnostic: `backends/pallas.py` builds
+the candidate list and the measure closure; this module only owns
+keying, persistence, and the search loop. `Session(tune_store=...)`
+threads a shared tuner through compiles, artifact-store reloads, and
+the `NetServer`'s stacked dispatch; without one, a process-wide
+in-memory tuner (`default_tuner`) keeps `tuned=true` working, just
+without cross-process reuse.
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import json
+import os
+import threading
+import time
+import uuid
+from pathlib import Path
+from typing import Callable, Mapping, Sequence
+
+__all__ = [
+    "KernelTuner", "TuneRecord", "TuneStats", "TuneStore", "default_tuner",
+    "tune_key",
+]
+
+_FORMAT = "netgen-tune-v1"
+
+
+def tune_key(key_fields) -> str:
+    """Content address of one tuning problem: sha256 over the canonical
+    JSON of (format, *key_fields). Every field must be JSON-stable —
+    shapes and names, not arrays — so the same problem keys identically
+    across processes and machines of the same device kind."""
+    blob = json.dumps([_FORMAT, key_fields], sort_keys=True,
+                      separators=(",", ":"), default=_jsonify)
+    return hashlib.sha256(blob.encode()).hexdigest()
+
+
+def _jsonify(obj):
+    if isinstance(obj, tuple):
+        return list(obj)
+    raise TypeError(f"tune key field {obj!r} is not JSON-stable")
+
+
+@dataclasses.dataclass(frozen=True)
+class TuneRecord:
+    """One persisted search result: the problem's content address, the
+    winning parameters, and the full measurement table (each candidate's
+    best-of-reps wall clock in microseconds, search order preserved)."""
+    key: str
+    best: dict
+    measurements: tuple          # ((params_dict, us), ...)
+    device_kind: str
+    created_unix: float
+
+    def as_dict(self) -> dict:
+        return {
+            "format": _FORMAT,
+            "key": self.key,
+            "best": self.best,
+            "measurements": [[p, us] for p, us in self.measurements],
+            "device_kind": self.device_kind,
+            "created_unix": self.created_unix,
+        }
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "TuneRecord":
+        return cls(
+            key=d["key"],
+            best=dict(d["best"]),
+            measurements=tuple((dict(p), float(us))
+                               for p, us in d["measurements"]),
+            device_kind=d["device_kind"],
+            created_unix=float(d["created_unix"]),
+        )
+
+
+@dataclasses.dataclass
+class TuneStats:
+    hits: int = 0              # in-memory record reuse
+    store_hits: int = 0        # records loaded from the persistent store
+    tunes: int = 0             # full searches actually performed
+    measurements: int = 0      # individual candidate timings taken
+    measure_seconds: float = 0.0
+
+    def row(self) -> str:
+        return (f"tune: {self.hits} hits, {self.store_hits} store hits, "
+                f"{self.tunes} tunes ({self.measurements} measurements, "
+                f"{self.measure_seconds * 1e3:.1f} ms measuring)")
+
+
+class TuneStore:
+    """On-disk tuning records: `<root>/<key>.json`, atomic writes, a
+    corrupt or stale-format entry reads as a miss and is evicted (a
+    tuning cache must degrade to a re-tune, never fail the compile)."""
+
+    def __init__(self, root):
+        self.root = Path(root).expanduser()
+        self.root.mkdir(parents=True, exist_ok=True)
+
+    def _path(self, key: str) -> Path:
+        return self.root / f"{key}.json"
+
+    def __contains__(self, key: str) -> bool:
+        return self._path(key).exists()
+
+    def keys(self) -> list[str]:
+        return sorted(p.stem for p in self.root.glob("*.json"))
+
+    def get(self, key: str) -> TuneRecord | None:
+        path = self._path(key)
+        try:
+            with open(path) as f:
+                d = json.load(f)
+            if d.get("format") != _FORMAT or d.get("key") != key:
+                raise ValueError(f"stale tune record {key}")
+            return TuneRecord.from_dict(d)
+        except FileNotFoundError:
+            return None
+        except Exception:
+            try:
+                os.unlink(path)
+            except OSError:
+                pass
+            return None
+
+    def put(self, record: TuneRecord) -> None:
+        tmp = self.root / f".tmp-{record.key[:16]}-{uuid.uuid4().hex[:8]}"
+        try:
+            with open(tmp, "w") as f:
+                json.dump(record.as_dict(), f, indent=1)
+            os.replace(tmp, self._path(record.key))
+        except BaseException:
+            try:
+                os.unlink(tmp)
+            except OSError:
+                pass
+            raise
+
+
+class KernelTuner:
+    """Two-tier tuning cache + the grid-search driver (see module doc).
+
+    Thread-safe: a tuner-wide lock guards the record tiers and stats,
+    while searches measure under a per-key lock — concurrent callers of
+    the same key search once, and a long search for one shape never
+    blocks lookups or searches for other shapes.
+    """
+
+    def __init__(self, store: TuneStore | None = None):
+        if store is not None and not isinstance(store, TuneStore):
+            store = TuneStore(store)
+        self.store = store
+        self._mem: dict[str, TuneRecord] = {}
+        self._lock = threading.RLock()
+        self._inflight: dict[str, threading.Lock] = {}   # per-key searches
+        self.stats = TuneStats()
+
+    def record_for(self, key: str) -> TuneRecord | None:
+        """The resident (memory or store) record under `key`, without
+        triggering a search; counts no hit/miss."""
+        with self._lock:
+            rec = self._mem.get(key)
+        if rec is None and self.store is not None:
+            rec = self.store.get(key)
+        return rec
+
+    def get_or_tune(self, key_fields, candidates: Sequence[Mapping],
+                    measure: Callable[[Mapping], float], *,
+                    reps: int = 2) -> dict:
+        """The winning parameter dict for this problem — from memory,
+        then the store, then by timing every candidate.
+
+        `key_fields` is the JSON-stable problem identity (target, device
+        kind, plan signature, the candidate grid itself — so a changed
+        grid re-tunes instead of serving a winner the new grid cannot
+        express). `measure(params)` runs one candidate once and returns
+        its wall-clock seconds; the driver takes best-of-`reps` after
+        one untimed warmup call (jit tracing must not pollute the
+        measurement).
+        """
+        if not candidates:
+            raise ValueError("no tuning candidates")
+        key = tune_key(key_fields)
+
+        def lookup() -> TuneRecord | None:
+            rec = self._mem.get(key)
+            if rec is not None:
+                self.stats.hits += 1
+                return rec
+            if self.store is not None:
+                rec = self.store.get(key)
+                if rec is not None:
+                    self._mem[key] = rec
+                    self.stats.store_hits += 1
+                    return rec
+            return None
+
+        with self._lock:
+            rec = lookup()
+            if rec is not None:
+                return dict(rec.best)
+            key_lock = self._inflight.setdefault(key, threading.Lock())
+
+        # Measure OUTSIDE the tuner-wide lock (a paper-sized interpret
+        # search takes seconds — unrelated keys must not queue behind
+        # it); the per-key lock still ensures concurrent compiles of the
+        # SAME shape run one search, with losers re-reading the result.
+        with key_lock:
+            with self._lock:
+                rec = lookup()
+            if rec is not None:
+                return dict(rec.best)
+            t0 = time.perf_counter()
+            table = []
+            for cand in candidates:
+                cand = dict(cand)
+                measure(cand)                      # warmup (trace/compile)
+                best = min(measure(cand) for _ in range(max(1, reps)))
+                table.append((cand, best * 1e6))
+            dt = time.perf_counter() - t0
+            rec = TuneRecord(
+                key=key,
+                best=dict(min(table, key=lambda t: t[1])[0]),
+                measurements=tuple(table),
+                device_kind=_field(key_fields, "device_kind"),
+                created_unix=time.time(),
+            )
+            with self._lock:
+                self.stats.measurements += len(table)
+                self.stats.tunes += 1
+                self.stats.measure_seconds += dt
+                self._mem[key] = rec
+                self._inflight.pop(key, None)
+            if self.store is not None:
+                self.store.put(rec)
+            return dict(rec.best)
+
+
+def _field(key_fields, name: str) -> str:
+    if isinstance(key_fields, Mapping):
+        return str(key_fields.get(name, "unknown"))
+    return "unknown"
+
+
+_DEFAULT_TUNER: KernelTuner | None = None
+_DEFAULT_LOCK = threading.Lock()
+
+
+def default_tuner() -> KernelTuner:
+    """The process-wide in-memory tuner `tuned=true` compiles fall back
+    to when no `Session(tune_store=...)` tuner is threaded through —
+    same-process reuse only; configure a store for cross-process."""
+    global _DEFAULT_TUNER
+    with _DEFAULT_LOCK:
+        if _DEFAULT_TUNER is None:
+            _DEFAULT_TUNER = KernelTuner()
+        return _DEFAULT_TUNER

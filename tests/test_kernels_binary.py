@@ -77,3 +77,110 @@ def test_binary_matmul_property(b, k, n, seed):
     w = rng.integers(-9, 10, size=(k, n)).astype(np.int32)
     got = np.asarray(ops.binary_matmul(jnp.asarray(x), jnp.asarray(w)))
     np.testing.assert_array_equal(got, x.astype(np.int64) @ w.astype(np.int64))
+
+
+# ---------------------------------------------------------------------------
+# Bit-plane kernel: both operands packed, popcount accumulation
+# ---------------------------------------------------------------------------
+
+def _planes_for(w: np.ndarray):
+    """Decompose a dense int32 (K, N) into packed signed bit-planes,
+    zero-padding K up to a lane multiple (what `plan.planes()` does)."""
+    from repro.netgen.plan import decompose_planes
+    k, n = w.shape
+    kp = ((k + 31) // 32) * 32
+    if kp != k:
+        w = np.pad(w, ((0, kp - k), (0, 0)))
+    return decompose_planes(w.astype(np.int32))
+
+
+@pytest.mark.parametrize("b,k,n,lo,hi", [
+    (4, 256, 64, -9, 9),
+    (2, 784, 500, -5, 5),      # the paper's layer-1 shape
+    (5, 96, 40, -1, 1),        # single plane (pure BNN case)
+    (3, 77, 13, -300, 300),    # 9 planes: wide post-pass magnitudes
+    (1, 33, 3, 0, 0),          # all-zero weights: one zero plane
+])
+def test_binary_matmul_planes_matches_matmul(b, k, n, lo, hi):
+    rng = np.random.default_rng(k * 31 + n)
+    x = rng.integers(0, 2, size=(b, k)).astype(np.int8)
+    w = rng.integers(lo, hi + 1, size=(k, n)).astype(np.int32)
+    xp = ops.pack_bits(jnp.asarray(x))
+    pos, neg, p = _planes_for(w)
+    assert p == max(1, int(np.abs(w).max(initial=0)).bit_length())
+    got = np.asarray(ops.binary_matmul_planes(
+        xp, jnp.asarray(pos), jnp.asarray(neg)))
+    np.testing.assert_array_equal(got, x.astype(np.int64) @ w.astype(np.int64))
+
+
+def test_binary_matmul_planes_matches_plane_oracle():
+    """Kernel vs the unpack-and-matmul oracle on the same plane arrays
+    (isolates kernel arithmetic from the decomposition)."""
+    rng = np.random.default_rng(5)
+    x = rng.integers(0, 2, size=(6, 64)).astype(np.int8)
+    w = rng.integers(-7, 8, size=(64, 20)).astype(np.int32)
+    xp = ops.pack_bits(jnp.asarray(x))
+    pos, neg, _ = _planes_for(w)
+    pos, neg = jnp.asarray(pos), jnp.asarray(neg)
+    np.testing.assert_array_equal(
+        np.asarray(ops.binary_matmul_planes(xp, pos, neg)),
+        np.asarray(ref.plane_matmul_ref(xp, pos, neg)))
+
+
+@pytest.mark.parametrize("bm,bn,bkw", [(64, 64, 4), (128, 32, 2), (8, 8, 1)])
+def test_binary_matmul_planes_block_sizes(bm, bn, bkw):
+    """The tuner's search axes: every block-size choice is exact (ragged
+    shapes force padding on all three grid axes)."""
+    rng = np.random.default_rng(bm + bn + bkw)
+    x = rng.integers(0, 2, size=(9, 200)).astype(np.int8)
+    w = rng.integers(-6, 7, size=(200, 77)).astype(np.int32)
+    xp = ops.pack_bits(jnp.asarray(x))
+    pos, neg, _ = _planes_for(w)
+    got = np.asarray(ops.binary_matmul_planes(
+        xp, jnp.asarray(pos), jnp.asarray(neg), bm=bm, bn=bn, bkw=bkw))
+    np.testing.assert_array_equal(got, x.astype(np.int64) @ w.astype(np.int64))
+
+
+def test_step_pack_fuses_step_and_pack():
+    """step_pack == strict step then pack_bits, without the int8 hop
+    (the packed chains' layer boundary)."""
+    rng = np.random.default_rng(3)
+    acc = rng.integers(-40, 41, size=(7, 45)).astype(np.int32)
+    got = ops.step_pack(jnp.asarray(acc), words=2)
+    want = ops.pack_bits(jnp.asarray((acc > 0).astype(np.int8)))
+    assert got.dtype == jnp.uint32 and got.shape == (7, 2)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+    # extra padded words stay zero (next layer's wider padded fan_in)
+    wide = np.asarray(ops.step_pack(jnp.asarray(acc), words=4))
+    np.testing.assert_array_equal(wide[:, :2], np.asarray(want))
+    assert not wide[:, 2:].any()
+
+
+def test_binarize_pack_matches_threshold_then_pack():
+    rng = np.random.default_rng(4)
+    x = rng.integers(0, 256, size=(5, 70)).astype(np.uint8)
+    thr = 128
+    got = ops.binarize_pack(jnp.asarray(x), threshold=thr, words=3)
+    want = ops.pack_bits(jnp.asarray((x > thr).astype(np.int8)))
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    b=st.integers(1, 6),
+    k=st.integers(1, 150),
+    n=st.integers(1, 40),
+    mag=st.integers(0, 500),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_binary_matmul_planes_property(b, k, n, mag, seed):
+    """Property: the bit-plane kernel == int matmul for any binary input
+    and any signed weight magnitude range (plane count adapts)."""
+    rng = np.random.default_rng(seed)
+    x = rng.integers(0, 2, size=(b, k)).astype(np.int8)
+    w = rng.integers(-mag, mag + 1, size=(k, n)).astype(np.int32)
+    xp = ops.pack_bits(jnp.asarray(x))
+    pos, neg, _ = _planes_for(w)
+    got = np.asarray(ops.binary_matmul_planes(
+        xp, jnp.asarray(pos), jnp.asarray(neg)))
+    np.testing.assert_array_equal(got, x.astype(np.int64) @ w.astype(np.int64))

@@ -113,18 +113,35 @@ def test_stacked_dispatch_differential(seed, n_in, n_h, n_out):
        n_h=st.integers(1, 40), n_out=st.integers(2, 6),
        depth3=st.booleans())
 def test_packed_datapath_differential(seed, n_in, n_h, n_out, depth3):
-    """ISSUE 4 satellite: the bit-packed activation datapath
-    (`pallas[packed=true]`) vs the dense kernel chain vs the dense
-    reference, on widths that straddle the 32-lane boundary (fan_in
-    padding must be exact, not approximately right)."""
+    """ISSUE 4/5 satellite: the three pallas datapaths — dense, the
+    end-to-end bit-packed activation chain (`packed=true`), and the
+    fully bit-packed bit-plane chain (`planes=true`) — vs the dense
+    reference, on random depths and widths that straddle the 32-lane
+    boundary (fan_in padding and plane decomposition must be exact,
+    not approximately right)."""
     sizes = (n_in, n_h, n_h, n_out) if depth3 else (n_in, n_h, n_out)
     net = _random_net(seed, sizes)
     x = _images(seed, 10, n_in)
     ref = np.asarray(quantize.predict_quantized(net)(jnp.asarray(x)))
-    dense = netgen.specialize(net, backend="pallas")
-    packed = netgen.specialize(net, backend="pallas[packed=true]")
-    np.testing.assert_array_equal(np.asarray(dense(jnp.asarray(x))), ref)
-    np.testing.assert_array_equal(np.asarray(packed(jnp.asarray(x))), ref)
+    for target in ("pallas", "pallas[packed=true]", "pallas[planes=true]"):
+        fn = netgen.specialize(net, backend=target)
+        np.testing.assert_array_equal(
+            np.asarray(fn(jnp.asarray(x))), ref, err_msg=target)
+
+
+@settings(max_examples=4, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), n_in=st.integers(2, 36),
+       n_h=st.integers(1, 36), n_out=st.integers(2, 5),
+       mag=st.integers(1, 40))
+def test_planes_weight_range_differential(seed, n_in, n_h, n_out, mag):
+    """ISSUE 5 satellite: the bit-plane decomposition is exact for any
+    signed weight magnitude range — the plane count adapts to the
+    layer's actual post-pass weights, including heavily negative ones."""
+    net = _random_net(seed, (n_in, n_h, n_out), lo=-mag, hi=mag)
+    x = _images(seed, 10, n_in)
+    ref = np.asarray(quantize.predict_quantized(net)(jnp.asarray(x)))
+    planes = netgen.specialize(net, backend="pallas[planes=true]")
+    np.testing.assert_array_equal(np.asarray(planes(jnp.asarray(x))), ref)
 
 
 def test_msb_divergence_is_reachable():

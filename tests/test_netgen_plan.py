@@ -112,6 +112,91 @@ def test_packed_full_784_500_10_bit_exact():
 
 
 # ---------------------------------------------------------------------------
+# Bit-plane form
+# ---------------------------------------------------------------------------
+
+def _unpack_planes(pos, neg, n_planes):
+    """Reconstruct the int64 weight matrix a (P, KW, N) plane pair
+    encodes — the decomposition's correctness oracle."""
+    shifts = np.arange(32, dtype=np.uint32)
+    def unpack(plane):
+        kw, n = plane.shape
+        return ((plane[:, None, :] >> shifts[None, :, None])
+                & np.uint32(1)).reshape(kw * 32, n).astype(np.int64)
+    return sum((unpack(pos[b]) - unpack(neg[b])) << b
+               for b in range(n_planes))
+
+
+def test_planes_form_reconstructs_weights_exactly():
+    """`plan.planes()` is a lossless re-representation: unpacking the
+    signed bit-planes gives back the packed weight matrices bit for
+    bit, and the plane count tracks each layer's actual magnitude."""
+    c = _circuit(_random_net(20, sizes=(37, 45, 10), lo=-9, hi=9))
+    plan = lower_circuit(c)
+    lp = plan.planes()
+    assert lp.bitplanes and lp.packed and lp.form == "planes"
+    assert lp.planes() is lp                       # idempotent
+    assert lp.describe().endswith("(planes)")
+    packed = plan.pack()
+    for lyr, plyr in zip(lp.layers, packed.layers):
+        assert lyr.n_planes == max(
+            1, int(np.abs(plyr.weights).max(initial=0)).bit_length())
+        assert lyr.pos_planes.shape == \
+            (lyr.n_planes, lyr.words, lyr.fan_out)
+        assert lyr.pos_planes.dtype == np.uint32
+        # a weight is never in both the pos and neg plane sets
+        assert not np.bitwise_and(lyr.pos_planes, lyr.neg_planes).any()
+        np.testing.assert_array_equal(
+            _unpack_planes(lyr.pos_planes, lyr.neg_planes, lyr.n_planes),
+            plyr.weights)
+
+
+def test_decompose_planes_rejects_unpadded():
+    with pytest.raises(ValueError, match="multiple of 32"):
+        netgen.decompose_planes(np.zeros((33, 4), np.int32))
+
+
+def test_lower_circuit_form_argument():
+    c = _circuit(_random_net(21))
+    assert lower_circuit(c, form="dense").form == "dense"
+    assert lower_circuit(c, form="packed").form == "packed"
+    assert lower_circuit(c, form="planes").form == "planes"
+    assert lower_circuit(c, packed=True).form == "packed"   # legacy flag
+    with pytest.raises(ValueError, match="unknown plan form"):
+        lower_circuit(c, form="sparse")
+
+
+@pytest.mark.parametrize("sizes", [(37, 45, 10), (12, 32, 4), (5, 3, 33, 2)])
+def test_planes_pallas_bit_exact_irregular_widths(sizes):
+    """ISSUE 5 acceptance: `pallas[planes=true]` vs dense vs
+    predict_quantized on widths that are not multiples of 32."""
+    net = _random_net(22, sizes=sizes)
+    x = _images(22, 16, sizes[0])
+    ref = _ref(net, x)
+    dense = netgen.compile_artifact(net, target="pallas")
+    planes = netgen.compile_artifact(net, target="pallas[planes=true]")
+    np.testing.assert_array_equal(np.asarray(dense(x)), ref)
+    np.testing.assert_array_equal(np.asarray(planes(x)), ref)
+
+
+def test_packed_and_planes_options_are_exclusive():
+    net = _random_net(23)
+    with pytest.raises(ValueError, match="exclusive"):
+        netgen.compile_artifact(net, target="pallas[packed=true,planes=true]")
+
+
+@pytest.mark.slow
+def test_planes_full_784_500_10_bit_exact():
+    """ISSUE 5 acceptance: the fully bit-packed datapath is bit-exact
+    with dense on the full paper-sized net."""
+    net = _random_net(24, sizes=(784, 500, 10))
+    x = _images(24, 256, 784)
+    ref = _ref(net, x)
+    planes = netgen.compile_artifact(net, target="pallas[planes=true]")
+    np.testing.assert_array_equal(np.asarray(planes(x)), ref)
+
+
+# ---------------------------------------------------------------------------
 # Stacked form
 # ---------------------------------------------------------------------------
 
@@ -180,6 +265,26 @@ def test_compile_multi_validates_declared_options():
             np.asarray(fn(block))[i], _ref(net, x))
 
 
+def test_compile_multi_planes_stacked():
+    """The stacked multi-net dispatch through the bit-plane datapath:
+    plane decomposition happens over the stacked (M, K, N) weights
+    (shared plane count), bit-exact per version."""
+    from repro.netgen.backends import compile_multi
+    nets = [_random_net(30, sizes=(13, 9, 4)),
+            _random_net(31, sizes=(13, 6, 4))]    # padded hidden widths
+    plan = stack_plans([lower_circuit(_circuit(n)) for n in nets])
+    lp = plan.planes()
+    assert lp.stacked and lp.form == "planes"
+    lyr = lp.layers[0]
+    assert lyr.pos_planes.shape == (2, lyr.n_planes, lyr.words, lyr.fan_out)
+    fn = compile_multi(plan, backend="pallas[planes=true]")
+    x = _images(30, 8, 13)
+    block = np.stack([x, x])
+    for i, net in enumerate(nets):
+        np.testing.assert_array_equal(
+            np.asarray(fn(block))[i], _ref(net, x), err_msg=f"version {i}")
+
+
 # ---------------------------------------------------------------------------
 # Artifacts record the plan form
 # ---------------------------------------------------------------------------
@@ -189,20 +294,26 @@ def test_artifact_records_plan_form(tmp_path):
     session = netgen.Session(store=netgen.ArtifactStore(tmp_path / "s"))
     dense = session.compile(net, target="pallas")
     packed = session.compile(net, target="pallas[packed=true]")
+    planes = session.compile(net, target="pallas[planes=true]")
     assert dense.plan_form == "dense" and packed.plan_form == "packed"
-    assert dense.key != packed.key          # distinct store entries
+    assert planes.plan_form == "planes"
+    assert len({dense.key, packed.key, planes.key}) == 3  # distinct entries
     assert not dense.plan().packed and packed.plan().packed
+    assert planes.plan().bitplanes
     text = session.compile(net, target="verilog")
     assert text.plan_form is None
     with pytest.raises(TypeError, match="no execution plan"):
         text.plan()
 
-    # a second session warm-starts both forms from disk, form preserved
+    # a second session warm-starts every form from disk, form preserved
     warm = netgen.Session(store=netgen.ArtifactStore(tmp_path / "s"))
     wd = warm.compile(net, target="pallas")
     wp = warm.compile(net, target="pallas[packed=true]")
+    wl = warm.compile(net, target="pallas[planes=true]")
     assert warm.stats().compiles == 0
     assert wd.plan_form == "dense" and wp.plan_form == "packed"
+    assert wl.plan_form == "planes"
     x = _images(11, 8, 12)
     np.testing.assert_array_equal(np.asarray(wp(x)), np.asarray(packed(x)))
+    np.testing.assert_array_equal(np.asarray(wl(x)), _ref(net, x))
     np.testing.assert_array_equal(np.asarray(wp(x)), _ref(net, x))

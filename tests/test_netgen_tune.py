@@ -1,0 +1,261 @@
+"""Persistent kernel autotuner tests (ISSUE 5): the `repro.netgen.tune`
+search driver and its two-tier (memory -> TuneStore) reuse, the
+`pallas[tuned=true]` / `fused[tuned=true]` target options, the zero
+re-measurement warm start across PROCESSES (the tuning analogue of the
+PR-3 zero-compile test), the tuned stacked dispatch through NetServer,
+and the session-level async compile queue satellite."""
+import json
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+import jax.numpy as jnp
+
+from repro.core import quantize
+from repro import netgen
+from repro.netgen.tune import KernelTuner, TuneRecord, TuneStore, tune_key
+
+from _netgen_helpers import images, random_net
+
+SRC = os.path.join(os.path.dirname(os.path.dirname(__file__)), "src")
+
+
+def _random_net(seed: int, sizes=(20, 16, 4), lo=-5, hi=5):
+    return random_net(seed, sizes, lo=lo, hi=hi)
+
+
+def _images(seed: int, b: int, n_in: int) -> np.ndarray:
+    return images(seed, b, n_in, salt=77)
+
+
+def _ref(net, x):
+    return np.asarray(quantize.predict_quantized(net)(jnp.asarray(x)))
+
+
+# ---------------------------------------------------------------------------
+# Search driver
+# ---------------------------------------------------------------------------
+
+def test_tuner_picks_argmin_and_caches_in_memory():
+    tuner = KernelTuner()
+    costs = {"a": 0.003, "b": 0.001, "c": 0.002}
+    calls = []
+
+    def measure(cand):
+        calls.append(cand["name"])
+        return costs[cand["name"]]
+
+    cands = [{"name": n} for n in costs]
+    fields = {"target": "t", "device_kind": "cpu", "candidates": cands}
+    best = tuner.get_or_tune(fields, cands, measure, reps=1)
+    assert best == {"name": "b"}
+    # warmup + 1 timed rep per candidate
+    assert calls == ["a", "a", "b", "b", "c", "c"]
+    assert tuner.stats.tunes == 1 and tuner.stats.measurements == 3
+
+    calls.clear()
+    assert tuner.get_or_tune(fields, cands, measure) == {"name": "b"}
+    assert calls == [] and tuner.stats.hits == 1
+    assert tuner.stats.measurements == 3       # nothing re-measured
+
+
+def test_tuner_key_distinguishes_problems():
+    base = {"target": "pallas", "device_kind": "cpu",
+            "signature": {"widths": [9, 4]}}
+    assert tune_key(base) == tune_key(dict(base))
+    assert tune_key(base) != tune_key({**base, "device_kind": "tpu-v4"})
+    assert tune_key(base) != tune_key(
+        {**base, "signature": {"widths": [9, 5]}})
+    with pytest.raises(ValueError, match="no tuning candidates"):
+        KernelTuner().get_or_tune(base, [], lambda c: 0.0)
+
+
+def test_tune_store_round_trip_and_corruption(tmp_path):
+    store = TuneStore(tmp_path / "tune")
+    rec = TuneRecord(key=tune_key({"q": 1}), best={"bm": 64},
+                     measurements=(({"bm": 64}, 12.5), ({"bm": 128}, 20.0)),
+                     device_kind="cpu", created_unix=1.0)
+    store.put(rec)
+    assert rec.key in store and store.keys() == [rec.key]
+    back = store.get(rec.key)
+    assert back.best == {"bm": 64} and back.measurements == rec.measurements
+    # corrupt entry: evicted, read as a miss
+    (tmp_path / "tune" / f"{rec.key}.json").write_text("{not json")
+    assert store.get(rec.key) is None
+    assert rec.key not in store
+    assert store.get("0" * 64) is None
+
+
+def test_tuner_second_instance_reuses_store(tmp_path):
+    """A fresh KernelTuner over the same TuneStore serves the persisted
+    winner with zero measurements — the in-process version of the
+    cross-process guarantee below."""
+    store_dir = tmp_path / "tune"
+    cands = [{"bm": 64}, {"bm": 128}]
+    fields = {"target": "t", "device_kind": "cpu", "candidates": cands}
+
+    first = KernelTuner(store=store_dir)
+    first.get_or_tune(fields, cands, lambda c: 0.001 * c["bm"])
+    assert first.stats.tunes == 1
+
+    def boom(cand):
+        raise AssertionError("a warm tuner must not measure")
+
+    warm = KernelTuner(store=TuneStore(store_dir))
+    assert warm.get_or_tune(fields, cands, boom) == {"bm": 64}
+    assert warm.stats.store_hits == 1 and warm.stats.measurements == 0
+
+
+# ---------------------------------------------------------------------------
+# tuned=true through the Session / targets
+# ---------------------------------------------------------------------------
+
+def test_tuned_pallas_compile_is_bit_exact_and_records_choice(tmp_path):
+    net = _random_net(0)
+    x = _images(0, 12, 20)
+    session = netgen.Session(store=tmp_path / "art",
+                             tune_store=tmp_path / "tune")
+    art = session.compile(net, target="pallas[tuned=true]")
+    assert art.plan_form in ("dense", "packed", "planes")
+    assert set(art.artifact.blocks) == {"bm", "bn", "bkw"}
+    np.testing.assert_array_equal(np.asarray(art(x)), _ref(net, x))
+    st = session.tune_stats()
+    assert st.tunes == 1 and st.measurements > 0
+    # same session, same shape: the tuning record is reused outright
+    again = session.compile(net, target="pallas[tuned=true,bn=64]")
+    np.testing.assert_array_equal(np.asarray(again(x)), _ref(net, x))
+    assert session.tune_stats().tunes == 2     # pinned bn: new problem
+
+
+def test_tuned_form_pinning_restricts_search():
+    """`pallas[tuned=true,planes=true]` searches block sizes only — the
+    datapath is pinned, and the winner must report it."""
+    net = _random_net(1, sizes=(16, 12, 3))
+    x = _images(1, 8, 16)
+    art = netgen.compile_artifact(net, target="pallas[tuned=true,planes=true]")
+    assert art.plan_form == "planes"
+    np.testing.assert_array_equal(np.asarray(art(x)), _ref(net, x))
+
+
+def test_tuned_fused_searches_batch_tile(tmp_path):
+    net = _random_net(2, sizes=(14, 9, 4))
+    x = _images(2, 8, 14)
+    session = netgen.Session(tune_store=tmp_path / "tune")
+    art = session.compile(net, target="fused[tuned=true]")
+    assert set(art.artifact.blocks) == {"bm"}
+    np.testing.assert_array_equal(np.asarray(art(x)), _ref(net, x))
+    assert session.tune_stats().tunes == 1
+
+
+def test_tuned_netserver_stacked_dispatch(tmp_path):
+    """NetServer forwards the session tuner into the stacked multi-net
+    build: tuned versions stack, stay bit-exact, and the stacked build
+    reuses/creates tuning records instead of silently untuned defaults."""
+    session = netgen.Session(store=tmp_path / "art",
+                             tune_store=tmp_path / "tune")
+    server = netgen.NetServer(session=session, target="pallas[tuned=true]",
+                              slot_capacity=8, warmup=False)
+    nets = {"a": _random_net(3, sizes=(15, 9, 4)),
+            "b": _random_net(4, sizes=(15, 7, 4))}
+    for name, net in nets.items():
+        server.register(name, net)
+    x = _images(3, 8, 15)
+    out = server.predict_many({"a": x, "b": x})
+    assert server.dispatch_counts["stacked"] == 1
+    for name, net in nets.items():
+        np.testing.assert_array_equal(out[name], _ref(net, x), err_msg=name)
+    # single-version tunes + one stacked tune
+    assert session.tune_stats().tunes >= 1
+
+
+# ---------------------------------------------------------------------------
+# Cross-process warm start: ZERO tuning measurements (ISSUE 5 acceptance)
+# ---------------------------------------------------------------------------
+
+def test_tuning_records_cross_process_zero_measurements(tmp_path):
+    """A fresh process pointed at the same ArtifactStore + TuneStore
+    rebuilds a `pallas[tuned=true]` artifact with zero compiles AND
+    zero tuning measurements — the persisted record is picked up even
+    though rebuilding the callable re-enters the tuned backend."""
+    art_dir, tune_dir = tmp_path / "art", tmp_path / "tune"
+    script = f"""
+import json, sys
+import numpy as np
+sys.path.insert(0, {os.path.dirname(os.path.abspath(__file__))!r})
+from _netgen_helpers import random_net, images
+from repro import netgen
+
+net = random_net(10, (20, 16, 4), lo=-5, hi=5)
+x = images(10, 12, 20, salt=77)
+session = netgen.Session(store={str(art_dir)!r}, tune_store={str(tune_dir)!r})
+art = session.compile(net, target="pallas[tuned=true]")
+ts = session.tune_stats()
+print(json.dumps({{
+    "key": art.key,
+    "plan_form": art.plan_form,
+    "blocks": art.artifact.blocks,
+    "compiles": session.stats().compiles,
+    "tunes": ts.tunes,
+    "measurements": ts.measurements,
+    "preds": np.asarray(art(x)).tolist(),
+}}))
+"""
+    out = subprocess.run(
+        [sys.executable, "-c", script], capture_output=True, text=True,
+        check=True, env={**os.environ, "PYTHONPATH": SRC})
+    child = json.loads(out.stdout.strip().splitlines()[-1])
+    assert child["compiles"] == 1 and child["tunes"] == 1
+    assert child["measurements"] > 0
+
+    session = netgen.Session(store=art_dir, tune_store=tune_dir)
+    net = _random_net(10)
+    x = _images(10, 12, 20)
+    art = session.compile(net, target="pallas[tuned=true]")
+    st, ts = session.stats(), session.tune_stats()
+    assert (st.compiles, st.store_hits) == (0, 1)       # zero compiles
+    assert ts.measurements == 0 and ts.tunes == 0       # zero measurements
+    assert ts.store_hits == 1
+    assert art.key == child["key"]
+    assert art.plan_form == child["plan_form"]
+    assert art.artifact.blocks == child["blocks"]
+    np.testing.assert_array_equal(
+        np.asarray(art(x)), np.asarray(child["preds"], dtype=np.int64))
+
+
+# ---------------------------------------------------------------------------
+# Session.compile_async (ROADMAP satellite)
+# ---------------------------------------------------------------------------
+
+def test_compile_async_returns_future_and_warms_cache(tmp_path):
+    session = netgen.Session(store=tmp_path / "art")
+    net = _random_net(20)
+    x = _images(20, 8, 20)
+    handle = session.compile_async(net, target="pallas[planes=true]")
+    art = handle.result(timeout=120)
+    assert handle.done() and art.plan_form == "planes"
+    np.testing.assert_array_equal(np.asarray(art(x)), _ref(net, x))
+    # the synchronous path now hits the warm memory tier — registration
+    # through a NetServer never blocks on a cold compile
+    before = session.stats().compiles
+    server = netgen.NetServer(session=session, target="pallas[planes=true]",
+                              slot_capacity=8, warmup=False)
+    server.register("v", net)
+    assert session.stats().compiles == before  # cache hit, no new compile
+    assert session.stats().hits >= 1
+    session.shutdown()
+    session.shutdown()                          # idempotent
+
+
+def test_compile_async_coalesces_with_sync_compile(tmp_path):
+    """Concurrent async + sync compiles of the same key compile once —
+    the CompileCache lock serializes them."""
+    session = netgen.Session()
+    net = _random_net(21)
+    futures = [session.compile_async(net, target="jnp") for _ in range(4)]
+    sync = session.compile(net, target="jnp")
+    arts = [f.result(timeout=120) for f in futures]
+    assert all(a is sync for a in arts)         # the same Artifact object
+    assert session.stats().compiles == 1
+    session.shutdown()
