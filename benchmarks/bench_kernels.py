@@ -4,21 +4,21 @@ reports correctness/op-counts, not TPU speed (see roofline for that).
 """
 from __future__ import annotations
 
-import time
-
 import numpy as np
+
+from repro.netgen import telemetry
 
 
 def _time(fn, *args, reps=3):
     fn(*args)  # warm
-    t0 = time.perf_counter()
-    for _ in range(reps):
-        r = fn(*args)
-        if hasattr(r, "block_until_ready"):
-            r.block_until_ready()
-        elif isinstance(r, tuple):
-            r[0].block_until_ready()
-    return (time.perf_counter() - t0) / reps
+    with telemetry.timed("bench_kernel_seconds") as t:
+        for _ in range(reps):
+            r = fn(*args)
+            if hasattr(r, "block_until_ready"):
+                r.block_until_ready()
+            elif isinstance(r, tuple):
+                r[0].block_until_ready()
+    return t.elapsed / reps
 
 
 def run(full: bool = False) -> list[str]:

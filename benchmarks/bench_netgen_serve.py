@@ -62,6 +62,17 @@ def _images(b: int, n_in: int, seed: int = 9) -> np.ndarray:
         0, 256, size=(b, n_in)).astype(np.uint8)
 
 
+def _timed_mean(section: str, fn, reps: int) -> float:
+    """Mean seconds per call over `reps` calls, timed through
+    `telemetry.timed` — the SAME histogram code path production latency
+    metrics use, so bench numbers and serving metrics cannot drift."""
+    from repro.netgen import telemetry
+    with telemetry.timed("bench_serve_seconds", section=section) as t:
+        for _ in range(reps):
+            fn()
+    return t.elapsed / reps
+
+
 def run(full: bool = False, json_path: str | None = None) -> list[str]:
     from repro import netgen
 
@@ -86,11 +97,10 @@ def run(full: bool = False, json_path: str | None = None) -> list[str]:
         results["cold_ms"].append((time.perf_counter() - t0) * 1e3)
     cold_s = float(np.mean(results["cold_ms"])) / 1e3
 
-    t0 = time.perf_counter()
-    for _ in range(warm_reps):
-        for net in nets:
-            cache.get_or_compile(net)
-    warm_s = (time.perf_counter() - t0) / (warm_reps * len(nets))
+    warm_s = _timed_mean(
+        "warm_acquire",
+        lambda: [cache.get_or_compile(net) for net in nets],
+        warm_reps) / len(nets)
     speedup = cold_s / warm_s
     results["warm_us"] = warm_s * 1e6
     results["warm_vs_cold_speedup"] = speedup
@@ -153,10 +163,8 @@ def run(full: bool = False, json_path: str | None = None) -> list[str]:
     for form, art in forms.items():
         got = np.asarray(art(px))                    # warm + exactness
         assert np.array_equal(got, want), f"{form} diverged from jnp oracle"
-        t0 = time.perf_counter()
-        for _ in range(reps):
-            np.asarray(art(px))
-        dt = (time.perf_counter() - t0) / reps
+        dt = _timed_mean(f"pallas_{form}",
+                         lambda art=art: np.asarray(art(px)), reps)
         results["packed"][form] = {
             "us_per_batch": dt * 1e6, "preds_per_s": pb / dt,
             "plan_form": art.plan_form, "exact_vs_jnp": True,
@@ -189,10 +197,8 @@ def run(full: bool = False, json_path: str | None = None) -> list[str]:
     tuner = netgen.default_tuner()
     got = np.asarray(tuned(px))
     assert np.array_equal(got, want), "tuned datapath diverged from oracle"
-    t0 = time.perf_counter()
-    for _ in range(reps):
-        np.asarray(tuned(px))
-    dt_tuned = (time.perf_counter() - t0) / reps
+    dt_tuned = _timed_mean("pallas_tuned",
+                           lambda: np.asarray(tuned(px)), reps)
     results["tuned"] = {
         "search_ms": tune_s * 1e3,
         "plan_form": tuned.plan_form,
@@ -223,16 +229,14 @@ def run(full: bool = False, json_path: str | None = None) -> list[str]:
     shard_reqs = {f"v{i}": _images(b, sizes[0], seed=200 + i)
                   for i in range(m)}
     single_out = shard_server.predict_many(shard_reqs)     # warm
-    t0 = time.perf_counter()
-    for _ in range(reps):
-        shard_server.predict_many(shard_reqs)
-    dt_single = (time.perf_counter() - t0) / reps
+    dt_single = _timed_mean(
+        "stacked_single_device",
+        lambda: shard_server.predict_many(shard_reqs), reps)
     with shd.use_mesh(make_host_mesh(data=n_dev)):
         sharded_out = shard_server.predict_many(shard_reqs)  # warm
-        t0 = time.perf_counter()
-        for _ in range(reps):
-            shard_server.predict_many(shard_reqs)
-        dt_sharded = (time.perf_counter() - t0) / reps
+        dt_sharded = _timed_mean(
+            "stacked_sharded",
+            lambda: shard_server.predict_many(shard_reqs), reps)
     exact = all(np.array_equal(single_out[v], sharded_out[v])
                 for v in shard_reqs)
     assert exact, "sharded dispatch diverged from single-device"
@@ -264,16 +268,14 @@ def run(full: bool = False, json_path: str | None = None) -> list[str]:
                           for v, x in reqs.items()}
             exact = all(np.array_equal(out[v], individual[v]) for v in reqs)
 
-            t0 = time.perf_counter()
-            for _ in range(reps):
-                server.predict_many(reqs)
-            dt_stacked = (time.perf_counter() - t0) / reps
+            dt_stacked = _timed_mean(
+                f"stacked_m{m}_b{b}",
+                lambda: server.predict_many(reqs), reps)
 
-            t0 = time.perf_counter()
-            for _ in range(reps):
+            def _individual():
                 for v, x in reqs.items():
                     np.asarray(server.compiled_for(v)(x))
-            dt_indiv = (time.perf_counter() - t0) / reps
+            dt_indiv = _timed_mean(f"individual_m{m}_b{b}", _individual, reps)
 
             preds = m * b
             results["multi"].append({
@@ -289,6 +291,54 @@ def run(full: bool = False, json_path: str | None = None) -> list[str]:
                         f"{dt_stacked*1e6:.1f},{preds/dt_stacked:.0f}")
             rows.append(f"netgen_serve_individual_m{m}_b{b},"
                         f"{dt_indiv*1e6:.1f},{preds/dt_indiv:.0f}")
+
+    # -- telemetry overhead (ISSUE 6 acceptance) ----------------------------
+    # Same paper-sized net as the datapath section, served through the
+    # instrumented dispatch path with span tracing ON vs OFF. Metrics
+    # are always live (they back the stats everyone reads), so "off"
+    # here means what production pays by default: no span recording.
+    from repro.netgen import telemetry
+
+    ov_server = netgen.NetServer(cache=cache, slot_capacity=pb)
+    ov_server.register("ov", pnet)
+    ov_reqs = {"ov": px}
+    ov_server.predict_many(ov_reqs)                          # warm
+    ov_reps = 30 if full else 15
+    was_enabled = telemetry.get_registry().enabled
+
+    def _ov():
+        ov_server.predict_many(ov_reqs)
+
+    telemetry.disable()
+    dt_off = min(_timed_mean("telemetry_off", _ov, ov_reps) for _ in range(3))
+    telemetry.enable()
+    dt_on = min(_timed_mean("telemetry_on", _ov, ov_reps) for _ in range(3))
+    if not was_enabled:
+        telemetry.disable()
+    overhead = dt_on / dt_off - 1.0
+    results["telemetry_overhead"] = {
+        "sizes": list(psizes), "batch": pb,
+        "tracing_off_us": dt_off * 1e6, "tracing_on_us": dt_on * 1e6,
+        "overhead_frac": overhead,
+    }
+    rows.append(f"netgen_serve_telemetry_overhead,{dt_on*1e6:.1f},"
+                f"{overhead*100:+.2f}%")
+    # <= 5% when enabled (with a small absolute slack so a sub-ms
+    # dispatch cannot fail on scheduler jitter alone)
+    assert dt_on <= dt_off * 1.05 + 5e-4, (
+        f"telemetry tracing overhead too high: on={dt_on*1e6:.1f}us "
+        f"off={dt_off*1e6:.1f}us ({overhead*100:.1f}%)")
+
+    # -- roofline inputs: XLA cost analysis of the compiled oracle ----------
+    prof = telemetry.jit_cost(oracle.artifact, (pb, psizes[0]))
+    if prof is not None:
+        results["roofline_jit"] = {
+            "target": "jnp", "sizes": list(psizes), "batch": pb, **prof}
+        rows.append(f"netgen_serve_jit_cost_jnp,0,"
+                    f"flops={prof['flops']:.0f};"
+                    f"bytes={prof['bytes_accessed']:.0f}")
+
+    results["telemetry"] = telemetry.summary()
 
     if json_path:
         with open(json_path, "w") as f:

@@ -58,6 +58,14 @@ def write_bench_json(path, rows: list[str], suite_seconds: dict,
         "suite_seconds": {k: round(v, 3) for k, v in suite_seconds.items()},
         "rows": parsed,
     }
+    try:
+        # fold the run's telemetry (compile/store/dispatch counters, the
+        # bench timing histograms, cost_analysis gauges) into the
+        # trajectory artifact — the roofline inputs ride along for free
+        from repro.netgen import telemetry
+        payload["telemetry"] = telemetry.summary()
+    except Exception:  # noqa: BLE001 — a bench artifact must still be written
+        pass
     with open(path, "w") as f:
         json.dump(payload, f, indent=1)
         f.write("\n")

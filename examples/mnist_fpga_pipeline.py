@@ -9,22 +9,29 @@ re-registration is a cache hit, and same-topology versions share one
 stacked multi-net dispatch.
 
   PYTHONPATH=src python examples/mnist_fpga_pipeline.py [--fast] [--deep]
-      [--store DIR]
+      [--store DIR] [--trace DIR]
 
 --deep swaps in a 3-layer hidden stack, which the paper's hardwired
 script could not express — the IR compiles it through the same passes
 and backends. --store points the Session at a persistent ArtifactStore
 directory: a second run (or a second process — CI caches this directory
 between workflow runs) warm-starts every compilation from disk.
+--trace DIR turns on `repro.netgen.telemetry` span tracing (plus the
+jit cost_analysis profiling hook) and writes DIR/trace.jsonl (one JSON
+span per line — `benchmarks/check_trace.py` gates CI on it) and
+DIR/metrics.prom (Prometheus text exposition), then prints the
+telemetry report table.
 """
 import argparse
 import time
+from pathlib import Path
 
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core import dataset, mlp, quantize
 from repro import netgen
+from repro.netgen import telemetry
 
 
 def main():
@@ -39,7 +46,13 @@ def main():
                     help="TuneStore directory (persist kernel tuning "
                          "records; a second run re-measures nothing)")
     ap.add_argument("--verilog-out", default="/tmp/nn_inference_full.v")
+    ap.add_argument("--trace", default=None, metavar="DIR",
+                    help="enable telemetry tracing + profiling; write "
+                         "DIR/trace.jsonl and DIR/metrics.prom and print "
+                         "the telemetry report at the end")
     args = ap.parse_args()
+    if args.trace:
+        telemetry.enable(profile=True)
     if args.deep:
         n_hidden = (128, 64) if args.fast else (500, 128)
     else:
@@ -168,6 +181,14 @@ def main():
     if session.store is not None:
         print(f"  {session.store.stats.row()}  "
               f"({len(session.store.keys())} artifacts on disk)")
+
+    if args.trace:
+        trace_dir = Path(args.trace)
+        trace_dir.mkdir(parents=True, exist_ok=True)
+        n = telemetry.export_jsonl(trace_dir / "trace.jsonl")
+        (trace_dir / "metrics.prom").write_text(telemetry.prometheus())
+        print(f"\n== telemetry ({n} spans -> {trace_dir}/trace.jsonl) ==")
+        print(telemetry.report())
 
 
 if __name__ == "__main__":

@@ -121,6 +121,32 @@ See `benchmarks/bench_netgen_serve.py` for cold-vs-warm,
 cold-process-vs-warm-store, and stacked-vs-individual numbers, and the
 top-level README.md for the end-to-end quickstart.
 
+Observability (`repro.netgen.telemetry`)
+----------------------------------------
+Every layer above reports into one zero-dependency, thread-safe
+registry: counters/gauges/histograms are ALWAYS live (they back
+`CacheStats` / `StoreStats` / `TuneStats` / `NetServer.dispatch_counts`
+atomically), while nested trace spans are opt-in:
+
+    from repro.netgen import telemetry
+    telemetry.enable(profile=True)   # spans on + jit cost_analysis/artifact
+    ... compile and serve ...
+    print(telemetry.report())        # human table: metrics + span totals
+    telemetry.prometheus()           # text exposition (scrape or file)
+    telemetry.export_jsonl(path)     # one finished span per line
+    telemetry.summary()              # JSON-stable dict (BENCH_netgen.json)
+    telemetry.disable(); telemetry.reset()
+
+API surface: `counter/gauge/histogram(name, **labels)` (get-or-create;
+histograms have exact nearest-rank `p50/p95/p99`), `span(name, **attrs)`
+(nested per-thread; no-op context unless enabled), `timed(name,
+**labels)` (time a block into a histogram — the benches use this),
+`jit_cost(fn, shape)` (XLA flops/bytes for roofline rows),
+`new_scope(prefix)` (per-instance label), `get_registry()`. The traced
+span tree and metric names are documented in the telemetry module
+docstring; `examples/mnist_fpga_pipeline.py --trace DIR` shows the
+whole thing end to end.
+
 `repro.core.netgen` remains as a thin compatibility shim with the old
 `specialize` / `emit_verilog` / `prune` / `stats` names.
 """
@@ -129,7 +155,7 @@ from __future__ import annotations
 import dataclasses
 import warnings
 
-from repro.netgen import backends
+from repro.netgen import backends, telemetry
 from repro.netgen.backends.cost import CellCounts, CostReport
 from repro.netgen.frontend import lower
 from repro.netgen.graph import (
@@ -176,7 +202,7 @@ __all__ = [
     "prune_dead_units", "register_pass", "register_pipeline",
     "register_target", "resolve_target", "run_pipeline", "serve",
     "share_common_addends", "specialize", "stack_layered_weights",
-    "stack_plans",
+    "stack_plans", "telemetry",
 ]
 
 

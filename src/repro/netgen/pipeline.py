@@ -41,6 +41,7 @@ import re
 from typing import Callable, Mapping, Sequence
 
 from repro.netgen import passes as _passes
+from repro.netgen import telemetry
 from repro.netgen.graph import Circuit
 from repro.netgen.passes import PassStats, ops
 
@@ -350,17 +351,28 @@ class PipelineSpec:
             ) -> tuple[Circuit, tuple[PassStats, ...]]:
         """Apply the pipeline, recording per-pass stats. `observe`, if
         given, is called as observe(stage_name, circuit) for the lowered
-        circuit and after every pass (the cost target's pass trace)."""
-        if observe is not None:
-            observe("lowered", circuit)
-        stats = []
-        for step, fn in zip(self.steps, self.build()):
-            before = ops(circuit)
-            circuit = fn(circuit)
-            stats.append(PassStats(
-                name=step.item_string(), before=before, after=ops(circuit)))
+        circuit and after every pass (the cost target's pass trace).
+        With tracing enabled each pass runs under a `netgen.pass` span
+        (nested in `netgen.pipeline`) carrying its before/after node
+        and term counts."""
+        tel = telemetry.get_registry()
+        with tel.span("netgen.pipeline", pipeline=self.spec_string(),
+                      steps=len(self.steps)):
             if observe is not None:
-                observe(step.item_string(), circuit)
+                observe("lowered", circuit)
+            stats = []
+            for step, fn in zip(self.steps, self.build()):
+                before = ops(circuit)
+                with tel.span("netgen.pass", name=step.item_string()) as sp:
+                    circuit = fn(circuit)
+                    after = ops(circuit)
+                    sp.set_attr("terms_before", before.terms)
+                    sp.set_attr("terms_after", after.terms)
+                    sp.set_attr("nodes_deleted", before.nodes - after.nodes)
+                stats.append(PassStats(
+                    name=step.item_string(), before=before, after=after))
+                if observe is not None:
+                    observe(step.item_string(), circuit)
         return circuit, tuple(stats)
 
 

@@ -53,6 +53,7 @@ from typing import Sequence
 import numpy as np
 
 from repro.core.quantize import weights_digest
+from repro.netgen import telemetry
 from repro.netgen.backends import compile_multi
 from repro.netgen.frontend import _extract_weights
 from repro.netgen.graph import Circuit, IrregularCircuitError
@@ -65,8 +66,9 @@ from repro.netgen.targets import resolve_target, target_string
 from repro.serve.slots import pad_slots
 
 __all__ = [
-    "CacheKey", "CacheStats", "CompileCache", "DEFAULT_CACHE", "NetServer",
-    "cached_compile_net", "stack_layered_weights",
+    "CacheCounters", "CacheKey", "CacheStats", "CompileCache",
+    "DEFAULT_CACHE", "NetServer", "cached_compile_net",
+    "stack_layered_weights",
 ]
 
 
@@ -102,6 +104,8 @@ class CacheKey:
 
 @dataclasses.dataclass
 class CacheStats:
+    """Point-in-time snapshot of a compile tier's counters (see
+    `CacheCounters` for the live, atomic backing metrics)."""
     hits: int = 0              # memory-tier hits
     misses: int = 0            # memory-tier misses (store hit OR compile)
     evictions: int = 0
@@ -115,6 +119,47 @@ class CacheStats:
                 f"({self.store_hits} from store), {self.evictions} "
                 f"evictions, {self.compile_seconds * 1e3:.1f} ms compiling, "
                 f"{self.load_seconds * 1e3:.1f} ms loading")
+
+
+class CacheCounters:
+    """The live telemetry metrics behind one compile tier's `CacheStats`
+    — atomic `telemetry.Counter`s plus two duration histograms, labelled
+    with a process-unique `cache=` scope so two tiers never merge in the
+    shared registry. `CompileCache` and the uncached `Session` path both
+    mutate these (increments are race-free without the owner's lock);
+    `snapshot()` is the dataclass read API everything else consumes."""
+
+    __slots__ = ("scope", "hits", "misses", "evictions", "compiles",
+                 "store_hits", "compile_seconds", "load_seconds")
+
+    def __init__(self, scope: str | None = None,
+                 registry: "telemetry.Registry | None" = None):
+        tel = registry if registry is not None else telemetry.get_registry()
+        self.scope = scope if scope is not None else telemetry.new_scope(
+            "cache")
+        self.hits = tel.counter("netgen_cache_hits_total", cache=self.scope)
+        self.misses = tel.counter(
+            "netgen_cache_misses_total", cache=self.scope)
+        self.evictions = tel.counter(
+            "netgen_cache_evictions_total", cache=self.scope)
+        self.compiles = tel.counter(
+            "netgen_cache_compiles_total", cache=self.scope)
+        self.store_hits = tel.counter(
+            "netgen_cache_store_hits_total", cache=self.scope)
+        self.compile_seconds = tel.histogram(
+            "netgen_cache_compile_seconds", cache=self.scope)
+        self.load_seconds = tel.histogram(
+            "netgen_cache_load_seconds", cache=self.scope)
+
+    def snapshot(self) -> CacheStats:
+        return CacheStats(
+            hits=int(self.hits.value),
+            misses=int(self.misses.value),
+            evictions=int(self.evictions.value),
+            compiles=int(self.compiles.value),
+            store_hits=int(self.store_hits.value),
+            compile_seconds=float(self.compile_seconds.sum),
+            load_seconds=float(self.load_seconds.sum))
 
 
 class CompileCache:
@@ -131,7 +176,7 @@ class CompileCache:
         self._lock = threading.RLock()
         self._entries: "OrderedDict[CacheKey, Artifact]" = OrderedDict()
         self._compile_seconds: dict[CacheKey, float] = {}
-        self._stats = CacheStats()
+        self._counters = CacheCounters()
 
     def __len__(self) -> int:
         with self._lock:
@@ -146,9 +191,9 @@ class CompileCache:
             return list(self._entries)
 
     def stats(self) -> CacheStats:
-        """Snapshot of the hit/miss/eviction counters."""
-        with self._lock:
-            return dataclasses.replace(self._stats)
+        """Snapshot of the hit/miss/eviction counters (atomic; safe to
+        read while other threads compile)."""
+        return self._counters.snapshot()
 
     def compile_seconds(self, key: CacheKey) -> float | None:
         """Recorded compile time of a resident entry (None if evicted)."""
@@ -192,24 +237,24 @@ class CompileCache:
             hit = self._entries.get(key)
             if hit is not None:
                 self._entries.move_to_end(key)
-                self._stats.hits += 1
+                self._counters.hits.inc()
                 return hit
-            self._stats.misses += 1
+            self._counters.misses.inc()
             compiled = None
             skey = artifact_key(key.digest, spec, target_string(tgt, opts))
             if self.store is not None:
                 compiled = self.store.get(skey)
                 if compiled is not None:
-                    self._stats.store_hits += 1
-                    self._stats.load_seconds += compiled.timings.get(
-                        "load_s", 0.0)
+                    self._counters.store_hits.inc()
+                    self._counters.load_seconds.observe(
+                        compiled.timings.get("load_s", 0.0))
             if compiled is None:
                 t0 = time.perf_counter()
                 compiled = compile_resolved(
                     ws, thr, key.digest, spec, tgt, opts, tuner=self.tuner)
                 dt = time.perf_counter() - t0
-                self._stats.compiles += 1
-                self._stats.compile_seconds += dt
+                self._counters.compiles.inc()
+                self._counters.compile_seconds.observe(dt)
                 self._compile_seconds[key] = dt
                 if self.store is not None:
                     self.store.put(compiled)
@@ -217,7 +262,7 @@ class CompileCache:
             while len(self._entries) > self.capacity:
                 evicted, _ = self._entries.popitem(last=False)
                 self._compile_seconds.pop(evicted, None)
-                self._stats.evictions += 1
+                self._counters.evictions.inc()
             return compiled
 
 
@@ -347,8 +392,26 @@ class NetServer:
         self._versions: "OrderedDict[str, _Version]" = OrderedDict()
         self._multi: dict[tuple, tuple] = {}
         self._generation = 0   # bumped by register/unregister; guards _multi
-        self.dispatch_counts = {
-            "single": 0, "stacked": 0, "sharded": 0, "fallback": 0}
+        self._tel = telemetry.get_registry()
+        self._scope = telemetry.new_scope("server")
+        self._dispatch = {
+            path: self._tel.counter(
+                "netgen_dispatch_total", server=self._scope, path=path)
+            for path in ("single", "stacked", "sharded", "fallback")}
+        self._h_occupancy = self._tel.histogram(
+            "netgen_slot_occupancy", server=self._scope)
+
+    @property
+    def dispatch_counts(self) -> dict:
+        """Per-path dispatch counts as a plain dict snapshot (the live
+        values are atomic telemetry counters labelled with this
+        server's scope)."""
+        return {path: int(c.value) for path, c in self._dispatch.items()}
+
+    def _latency(self, version: str):
+        return self._tel.histogram(
+            "netgen_predict_latency_seconds",
+            server=self._scope, version=version)
 
     # -- registry ------------------------------------------------------------
 
@@ -392,14 +455,19 @@ class NetServer:
     def predict(self, version: str, x_uint8) -> np.ndarray:
         """Route one batch to one version. Returns predictions (B,)."""
         compiled = self.compiled_for(version)
-        with self._lock:
-            self.dispatch_counts["single"] += 1
-        return self._run_slots(compiled, np.asarray(x_uint8))
+        self._dispatch["single"].inc()
+        t0 = time.perf_counter()
+        with self._tel.span("netgen.dispatch", path="single",
+                            versions=version):
+            out = self._run_slots(compiled, np.asarray(x_uint8))
+        self._latency(version).observe(time.perf_counter() - t0)
+        return out
 
     def predict_many(self, requests: dict) -> dict:
         """Serve {version: uint8 batch} in one cross-model stacked dispatch
         when the requested versions are stack-compatible (else per-version
         fallback). Returns {version: predictions}."""
+        t0 = time.perf_counter()
         names = tuple(sorted(requests))
         compiled = {v: self.compiled_for(v) for v in names}
         for v in names:
@@ -407,36 +475,54 @@ class NetServer:
                             compiled[v].circuit.n_inputs)
         if len(names) == 1:
             (v,) = names
-            with self._lock:
-                self.dispatch_counts["single"] += 1
-            return {v: self._run_slots(compiled[v], np.asarray(requests[v]))}
+            self._dispatch["single"].inc()
+            with self._tel.span("netgen.dispatch", path="single",
+                                versions=v):
+                out = {v: self._run_slots(compiled[v],
+                                          np.asarray(requests[v]))}
+            self._latency(v).observe(time.perf_counter() - t0)
+            return out
 
         fn, sharded = self._stacked_fn(names)
         if fn is None:
-            with self._lock:
-                self.dispatch_counts["fallback"] += 1
-            return {v: self._run_slots(compiled[v], np.asarray(requests[v]))
-                    for v in names}
+            self._dispatch["fallback"].inc()
+            with self._tel.span("netgen.dispatch", path="fallback",
+                                versions=len(names)):
+                out = {v: self._run_slots(compiled[v],
+                                          np.asarray(requests[v]))
+                       for v in names}
+            dt = time.perf_counter() - t0
+            for v in names:
+                self._latency(v).observe(dt)
+            return out
 
-        with self._lock:
-            self.dispatch_counts["stacked"] += 1
-            if sharded:
-                self.dispatch_counts["sharded"] += 1
+        self._dispatch["stacked"].inc()
+        if sharded:
+            self._dispatch["sharded"].inc()
         cap = self.slot_capacity
         n_in = compiled[names[0]].circuit.n_inputs
         xs = {v: np.asarray(requests[v]) for v in names}
         rounds = max((x.shape[0] + cap - 1) // cap for x in xs.values())
         out: dict[str, list] = {v: [] for v in names}
-        for r in range(rounds):
-            block = np.zeros((len(names), cap, n_in), np.uint8)
-            valid = []
-            for i, v in enumerate(names):
-                chunk = xs[v][r * cap:(r + 1) * cap]
-                block[i], n = pad_slots(chunk, cap)
-                valid.append(n)
-            preds = np.asarray(fn(block))            # (M, cap)
-            for i, v in enumerate(names):
-                out[v].append(preds[i, :valid[i]])
+        with self._tel.span("netgen.dispatch",
+                            path="sharded" if sharded else "stacked",
+                            versions=len(names), rounds=rounds):
+            for r in range(rounds):
+                block = np.zeros((len(names), cap, n_in), np.uint8)
+                valid = []
+                for i, v in enumerate(names):
+                    chunk = xs[v][r * cap:(r + 1) * cap]
+                    block[i], n = pad_slots(chunk, cap)
+                    valid.append(n)
+                self._h_occupancy.observe(sum(valid) / (len(names) * cap))
+                with self._tel.span("netgen.kernel", round=r,
+                                    valid=sum(valid)):
+                    preds = np.asarray(fn(block))    # (M, cap)
+                for i, v in enumerate(names):
+                    out[v].append(preds[i, :valid[i]])
+        dt = time.perf_counter() - t0
+        for v in names:
+            self._latency(v).observe(dt)
         return {v: (np.concatenate(out[v]) if out[v]
                     else np.zeros((0,), np.int64)) for v in names}
 
@@ -450,7 +536,9 @@ class NetServer:
         outs = []
         for i in range(0, x.shape[0], cap):
             padded, n = pad_slots(x[i:i + cap], cap)
-            outs.append(np.asarray(compiled(padded))[:n])
+            self._h_occupancy.observe(n / cap)
+            with self._tel.span("netgen.kernel", valid=n):
+                outs.append(np.asarray(compiled(padded))[:n])
         return np.concatenate(outs)
 
     def _stacked_fn(self, names: tuple) -> tuple:

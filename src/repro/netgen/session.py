@@ -51,11 +51,13 @@ import shutil
 import threading
 import time
 import uuid
+import weakref
 from pathlib import Path
 
 import numpy as np
 
 from repro.core.quantize import weights_digest
+from repro.netgen import telemetry
 from repro.netgen.backends.cost import CellCounts, CostReport, logic_cells
 from repro.netgen.frontend import _extract_weights, lower
 from repro.netgen.graph import (
@@ -209,25 +211,38 @@ def compile_resolved(ws, thr: int, digest: str, spec: PipelineSpec,
     so `tuned=true` kernel builds hit the session's persistent tuning
     records instead of re-measuring."""
     tstring = target_string(tgt, opts)
+    tel = telemetry.get_registry()
 
-    t0 = time.perf_counter()
-    circuit = lower(ws, input_threshold=thr)
-    t_lower = time.perf_counter()
+    with tel.span("netgen.compile", target=tstring,
+                  pipeline=spec.spec_string(), digest=digest[:12]):
+        t0 = time.perf_counter()
+        with tel.span("netgen.lower"):
+            circuit = lower(ws, input_threshold=thr)
+        t_lower = time.perf_counter()
 
-    trace: list | None = [] if tgt.wants_pass_trace else None
-    circuit, stats = spec.run(
-        circuit, observe=(lambda name, c: trace.append((name, c)))
-        if trace is not None else None)
-    t_passes = time.perf_counter()
+        trace: list | None = [] if tgt.wants_pass_trace else None
+        circuit, stats = spec.run(
+            circuit, observe=(lambda name, c: trace.append((name, c)))
+            if trace is not None else None)
+        t_passes = time.perf_counter()
 
-    kwargs = dict(opts)
-    if tgt.wants_pass_trace:
-        kwargs["_pass_trace"] = tuple(trace)
-    if tgt.wants_tuner:
-        kwargs["_tuner"] = tuner
-    raw = tgt.compile(circuit, **kwargs)
-    t_backend = time.perf_counter()
+        kwargs = dict(opts)
+        if tgt.wants_pass_trace:
+            kwargs["_pass_trace"] = tuple(trace)
+        if tgt.wants_tuner:
+            kwargs["_tuner"] = tuner
+        with tel.span("netgen.backend", target=tstring):
+            raw = tgt.compile(circuit, **kwargs)
+        t_backend = time.perf_counter()
 
+    tel.histogram("netgen_compile_seconds", target=tgt.name).observe(
+        t_backend - t0)
+    timings = {
+        "lower_s": t_lower - t0,
+        "passes_s": t_passes - t_lower,
+        "backend_s": t_backend - t_passes,
+        "total_s": t_backend - t0,
+    }
     plan_form = None
     if tgt.kind == "callable":
         # tuned=true backends choose the datapath at build time and
@@ -235,6 +250,18 @@ def compile_resolved(ws, thr: int, digest: str, spec: PipelineSpec,
         plan_form = getattr(raw, "plan_form", None) or (
             "planes" if opts.get("planes")
             else "packed" if opts.get("packed") else "dense")
+        if tel.profile:
+            # roofline inputs per compiled artifact: flops/bytes from
+            # XLA's cost analysis at a canonical sample batch. Persists
+            # with the artifact (timings live in meta.json) and lands
+            # in BENCH_netgen.json via telemetry.summary().
+            prof = telemetry.jit_cost(raw, (8, circuit.n_inputs))
+            if prof is not None:
+                timings["cost_analysis"] = prof
+                tel.gauge("netgen_artifact_flops",
+                          target=tgt.name).set(prof["flops"])
+                tel.gauge("netgen_artifact_bytes",
+                          target=tgt.name).set(prof["bytes_accessed"])
     return Artifact(
         plan_form=plan_form,
         digest=digest,
@@ -245,12 +272,7 @@ def compile_resolved(ws, thr: int, digest: str, spec: PipelineSpec,
         circuit=circuit,
         pass_stats=stats,
         cost=logic_cells(circuit),
-        timings={
-            "lower_s": t_lower - t0,
-            "passes_s": t_passes - t_lower,
-            "backend_s": t_backend - t_passes,
-            "total_s": t_backend - t0,
-        },
+        timings=timings,
         source="compile",
         artifact=raw,
     )
@@ -262,6 +284,9 @@ def compile_resolved(ws, thr: int, digest: str, spec: PipelineSpec,
 
 @dataclasses.dataclass
 class StoreStats:
+    """Point-in-time snapshot of one store's telemetry counters (the
+    live values are atomic `telemetry.Counter`s labelled with the
+    store's scope; this dataclass is the read API)."""
     saves: int = 0
     loads: int = 0          # get() found and rebuilt an artifact
     misses: int = 0         # get() found nothing under the key
@@ -307,7 +332,32 @@ class ArtifactStore:
         # consults this tuner's store — a warm-started artifact must not
         # re-measure block sizes the first process already searched.
         self.tuner = tuner
-        self.stats = StoreStats()
+        self._tel = telemetry.get_registry()
+        scope = telemetry.new_scope("store")
+        self._c_saves = self._tel.counter(
+            "netgen_store_saves_total", store=scope)
+        self._c_loads = self._tel.counter(
+            "netgen_store_loads_total", store=scope)
+        self._c_misses = self._tel.counter(
+            "netgen_store_misses_total", store=scope)
+        self._c_corrupt = self._tel.counter(
+            "netgen_store_corrupt_total", store=scope)
+        self._c_gc = self._tel.counter(
+            "netgen_store_gc_evictions_total", store=scope)
+        self._h_load = self._tel.histogram(
+            "netgen_store_load_seconds", store=scope)
+
+    @property
+    def stats(self) -> StoreStats:
+        """Snapshot of the store's counters (atomic; safe to read while
+        other threads load/put)."""
+        return StoreStats(
+            saves=int(self._c_saves.value),
+            loads=int(self._c_loads.value),
+            misses=int(self._c_misses.value),
+            corrupt=int(self._c_corrupt.value),
+            gc_evictions=int(self._c_gc.value),
+            load_seconds=float(self._h_load.sum))
 
     def _dir(self, key: str) -> Path:
         return self.root / key
@@ -366,7 +416,7 @@ class ArtifactStore:
         except BaseException:
             shutil.rmtree(tmp, ignore_errors=True)
             raise
-        self.stats.saves += 1
+        self._c_saves.inc()
         if self.max_entries is not None or self.max_bytes is not None:
             self.gc()
 
@@ -402,7 +452,7 @@ class ArtifactStore:
             evicted.append(key)
             count -= 1
             total -= size
-        self.stats.gc_evictions += len(evicted)
+        self._c_gc.inc(len(evicted))
         return evicted
 
     def get(self, key: str) -> Artifact | None:
@@ -416,23 +466,26 @@ class ArtifactStore:
         d = self._dir(key)
         meta_path = d / "meta.json"
         if not meta_path.exists():
-            self.stats.misses += 1
+            self._c_misses.inc()
             return None
         t0 = time.perf_counter()
-        try:
-            art = self._load(d, key)
-        except Exception:
-            shutil.rmtree(d, ignore_errors=True)
-            self.stats.corrupt += 1
-            self.stats.misses += 1
-            return None
+        with self._tel.span("netgen.store.load", key=key[:12]) as sp:
+            try:
+                art = self._load(d, key)
+            except Exception:
+                shutil.rmtree(d, ignore_errors=True)
+                self._c_corrupt.inc()
+                self._c_misses.inc()
+                sp.set_attr("outcome", "corrupt")
+                return None
+            sp.set_attr("outcome", "hit" if art is not None else "miss")
         if art is None:
-            self.stats.misses += 1
+            self._c_misses.inc()
             return None
         dt = time.perf_counter() - t0
         art.timings["load_s"] = dt
-        self.stats.loads += 1
-        self.stats.load_seconds += dt
+        self._c_loads.inc()
+        self._h_load.observe(dt)
         try:
             os.utime(meta_path)      # refresh LRU recency for gc()
         except OSError:
@@ -492,6 +545,12 @@ def _ops_from_dict(d: dict) -> CircuitOps:
 # Session
 # ---------------------------------------------------------------------------
 
+def _shutdown_executor(executor) -> None:
+    """weakref.finalize callback — module-level so the finalizer holds
+    no reference back to the Session (which would keep it alive)."""
+    executor.shutdown(wait=True, cancel_futures=True)
+
+
 class Session:
     """The compiler's stateful front door: an in-memory LRU tier (the
     serving layer's `CompileCache`) over an optional persistent
@@ -500,10 +559,15 @@ class Session:
     in-memory retention (every compile still reads/writes the store
     when one is configured). `tune_store` points `tuned=true` kernel
     builds at a persistent `repro.netgen.tune.TuneStore` directory;
-    without it the process-wide in-memory tuner is used."""
+    without it the process-wide in-memory tuner is used.
+
+    Sessions are context managers (`with Session(...) as s:`); exiting
+    calls `shutdown()`. A session that is simply dropped is safe too:
+    the async executor is tied to the object with a weakref finalizer,
+    so its worker threads are joined at GC or interpreter exit."""
 
     def __init__(self, *, store=None, capacity: int = 64, tune_store=None):
-        from repro.netgen.serve import CacheStats, CompileCache
+        from repro.netgen.serve import CacheCounters, CompileCache
         from repro.netgen.tune import KernelTuner, TuneStore
         if store is not None and not isinstance(store, ArtifactStore):
             store = ArtifactStore(store)
@@ -519,13 +583,14 @@ class Session:
             store.tuner = self.tuner
         self._executor = None
         self._executor_lock = threading.Lock()
+        self._finalizer = None
         if capacity > 0:
             self.cache: "CompileCache | None" = CompileCache(
                 capacity, store=store, tuner=self.tuner)
-            self._stats = None
+            self._counters = None
         else:
             self.cache = None
-            self._stats = CacheStats()
+            self._counters = CacheCounters(telemetry.new_scope("session"))
 
     def compile(self, net, *, target="jnp", pipeline="default",
                 input_threshold: int | None = None, **target_opts) -> Artifact:
@@ -541,17 +606,17 @@ class Session:
         ws, thr = _extract_weights(net, input_threshold)
         digest = weights_digest(ws, thr)
         key = artifact_key(digest, spec, target_string(tgt, opts))
-        self._stats.misses += 1
+        self._counters.misses.inc()
         if self.store is not None:
             art = self.store.get(key)
             if art is not None:
-                self._stats.store_hits += 1
+                self._counters.store_hits.inc()
                 return art
         t0 = time.perf_counter()
         art = compile_resolved(ws, thr, digest, spec, tgt, opts,
                                tuner=self.tuner)
-        self._stats.compiles += 1
-        self._stats.compile_seconds += time.perf_counter() - t0
+        self._counters.compiles.inc()
+        self._counters.compile_seconds.observe(time.perf_counter() - t0)
         if self.store is not None:
             self.store.put(art)
         return art
@@ -575,6 +640,13 @@ class Session:
             if self._executor is None:
                 self._executor = concurrent.futures.ThreadPoolExecutor(
                     max_workers=2, thread_name_prefix="netgen-compile")
+                # the executor's workers are non-daemon threads; a
+                # caller that forgets shutdown() must not hang (or leak
+                # threads at) interpreter exit, so tie the executor's
+                # lifetime to the Session object — weakref.finalize runs
+                # both at GC and atexit
+                self._finalizer = weakref.finalize(
+                    self, _shutdown_executor, self._executor)
         return self._executor.submit(
             self.compile, net, target=target, pipeline=pipeline,
             input_threshold=input_threshold, **target_opts)
@@ -584,14 +656,23 @@ class Session:
         finish when `wait`)."""
         with self._executor_lock:
             executor, self._executor = self._executor, None
+            finalizer, self._finalizer = self._finalizer, None
+        if finalizer is not None:
+            finalizer.detach()
         if executor is not None:
             executor.shutdown(wait=wait)
+
+    def __enter__(self) -> "Session":
+        return self
+
+    def __exit__(self, et, ev, tb) -> None:
+        self.shutdown()
 
     def stats(self):
         """Hit/miss/compile counters (memory tier's when one exists)."""
         if self.cache is not None:
             return self.cache.stats()
-        return dataclasses.replace(self._stats)
+        return self._counters.snapshot()
 
     def store_stats(self) -> StoreStats | None:
         return None if self.store is None else self.store.stats

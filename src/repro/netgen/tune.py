@@ -48,6 +48,8 @@ import uuid
 from pathlib import Path
 from typing import Callable, Mapping, Sequence
 
+from repro.netgen import telemetry
+
 __all__ = [
     "KernelTuner", "TuneRecord", "TuneStats", "TuneStore", "default_tuner",
     "tune_key",
@@ -107,6 +109,9 @@ class TuneRecord:
 
 @dataclasses.dataclass
 class TuneStats:
+    """Point-in-time snapshot of one tuner's telemetry counters (the
+    live values are atomic `telemetry.Counter`s under the tuner's
+    scope; `KernelTuner.stats` builds this)."""
     hits: int = 0              # in-memory record reuse
     store_hits: int = 0        # records loaded from the persistent store
     tunes: int = 0             # full searches actually performed
@@ -184,7 +189,29 @@ class KernelTuner:
         self._mem: dict[str, TuneRecord] = {}
         self._lock = threading.RLock()
         self._inflight: dict[str, threading.Lock] = {}   # per-key searches
-        self.stats = TuneStats()
+        self._tel = telemetry.get_registry()
+        scope = telemetry.new_scope("tuner")
+        self._c_hits = self._tel.counter(
+            "netgen_tune_hits_total", tuner=scope)
+        self._c_store_hits = self._tel.counter(
+            "netgen_tune_store_hits_total", tuner=scope)
+        self._c_tunes = self._tel.counter(
+            "netgen_tune_searches_total", tuner=scope)
+        self._c_measurements = self._tel.counter(
+            "netgen_tune_measurements_total", tuner=scope)
+        self._h_measure = self._tel.histogram(
+            "netgen_tune_measure_seconds", tuner=scope)
+
+    @property
+    def stats(self) -> TuneStats:
+        """Snapshot of the tuner's counters (atomic; safe to read while
+        other threads search)."""
+        return TuneStats(
+            hits=int(self._c_hits.value),
+            store_hits=int(self._c_store_hits.value),
+            tunes=int(self._c_tunes.value),
+            measurements=int(self._c_measurements.value),
+            measure_seconds=float(self._h_measure.sum))
 
     def record_for(self, key: str) -> TuneRecord | None:
         """The resident (memory or store) record under `key`, without
@@ -216,13 +243,13 @@ class KernelTuner:
         def lookup() -> TuneRecord | None:
             rec = self._mem.get(key)
             if rec is not None:
-                self.stats.hits += 1
+                self._c_hits.inc()
                 return rec
             if self.store is not None:
                 rec = self.store.get(key)
                 if rec is not None:
                     self._mem[key] = rec
-                    self.stats.store_hits += 1
+                    self._c_store_hits.inc()
                     return rec
             return None
 
@@ -242,24 +269,28 @@ class KernelTuner:
             if rec is not None:
                 return dict(rec.best)
             t0 = time.perf_counter()
-            table = []
-            for cand in candidates:
-                cand = dict(cand)
-                measure(cand)                      # warmup (trace/compile)
-                best = min(measure(cand) for _ in range(max(1, reps)))
-                table.append((cand, best * 1e6))
+            with self._tel.span("netgen.tune.search", key=key[:12],
+                                candidates=len(candidates)) as sp:
+                table = []
+                for cand in candidates:
+                    cand = dict(cand)
+                    measure(cand)                  # warmup (trace/compile)
+                    best = min(measure(cand) for _ in range(max(1, reps)))
+                    table.append((cand, best * 1e6))
+                winner = dict(min(table, key=lambda t: t[1])[0])
+                sp.set_attr("winner", winner)
             dt = time.perf_counter() - t0
             rec = TuneRecord(
                 key=key,
-                best=dict(min(table, key=lambda t: t[1])[0]),
+                best=winner,
                 measurements=tuple(table),
                 device_kind=_field(key_fields, "device_kind"),
                 created_unix=time.time(),
             )
+            self._c_measurements.inc(len(table))
+            self._c_tunes.inc()
+            self._h_measure.observe(dt)
             with self._lock:
-                self.stats.measurements += len(table)
-                self.stats.tunes += 1
-                self.stats.measure_seconds += dt
                 self._mem[key] = rec
                 self._inflight.pop(key, None)
             if self.store is not None:
