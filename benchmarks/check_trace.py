@@ -17,7 +17,10 @@ telemetry invariants:
   metrics.prom  every counter non-negative; per cache scope
                 misses == compiles + store_hits (each memory miss is
                 served by exactly one of the two lower tiers); slot
-                occupancy quantiles in (0, 1]; latency p50 <= p99.
+                occupancy quantiles in (0, 1]; latency p50 <= p99; per
+                (server, version) the latency histogram count equals
+                netgen_requests_total (every dispatch observed exactly
+                one per-version service time).
 
   PYTHONPATH=src python benchmarks/check_trace.py DIR \\
       [--compile-budget-s 300]
@@ -115,6 +118,8 @@ def check_metrics(samples: list[tuple[str, dict, float]]) -> list[str]:
     errors: list[str] = []
     per_cache: dict[str, dict[str, float]] = defaultdict(dict)
     latency: dict[tuple, dict[str, float]] = defaultdict(dict)
+    latency_counts: dict[tuple, float] = {}
+    request_counts: dict[tuple, float] = {}
     # an idle server's occupancy summary legitimately exports 0-valued
     # quantiles (empty histogram): only gate scopes that saw traffic
     occ_counts = {labels.get("server"): value
@@ -140,6 +145,12 @@ def check_metrics(samples: list[tuple[str, dict, float]]) -> list[str]:
         if name == "netgen_predict_latency_seconds" and "quantile" in labels:
             key = (labels.get("server"), labels.get("version"))
             latency[key][labels["quantile"]] = value
+        if name == "netgen_predict_latency_seconds_count":
+            latency_counts[(labels.get("server"),
+                            labels.get("version"))] = value
+        if name == "netgen_requests_total":
+            request_counts[(labels.get("server"),
+                            labels.get("version"))] = value
     for cache, c in sorted(per_cache.items()):
         if {"misses", "compiles", "store_hits"} <= set(c) and \
                 c["misses"] != c["compiles"] + c["store_hits"]:
@@ -150,6 +161,18 @@ def check_metrics(samples: list[tuple[str, dict, float]]) -> list[str]:
         if "0.5" in qs and "0.99" in qs and qs["0.5"] > qs["0.99"]:
             errors.append(f"latency p50 > p99 for server={key[0]} "
                           f"version={key[1]}: {qs['0.5']} > {qs['0.99']}")
+    # every dispatched request produced exactly one per-version latency
+    # observation — the identity that catches the whole-call-dt
+    # misattribution bug (ISSUE 7): predict_many must observe each
+    # version's own service time once, not the shared wall clock N times
+    # (or zero times)
+    for key in sorted(set(latency_counts) | set(request_counts)):
+        n_lat = latency_counts.get(key, 0.0)
+        n_req = request_counts.get(key, 0.0)
+        if n_lat != n_req:
+            errors.append(
+                f"latency observations ({n_lat:.0f}) != requests "
+                f"({n_req:.0f}) for server={key[0]} version={key[1]}")
     return errors
 
 

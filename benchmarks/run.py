@@ -74,7 +74,8 @@ def write_bench_json(path, rows: list[str], suite_seconds: dict,
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true")
-    ap.add_argument("--only", default=None)
+    ap.add_argument("--only", default=None,
+                    help="comma-separated suite names to run")
     ap.add_argument("--fake-devices", type=int, default=0, metavar="N",
                     help="fake N host devices for the sharded serving rows")
     ap.add_argument("--bench-json", default=str(REPO_ROOT / "BENCH_netgen.json"),
@@ -90,8 +91,9 @@ def main() -> None:
             + f" --xla_force_host_platform_device_count={args.fake_devices}")
 
     from benchmarks import (bench_kernels, bench_ladder, bench_netgen,
-                            bench_netgen_passes, bench_netgen_serve,
-                            bench_throughput, roofline_table)
+                            bench_netgen_engine, bench_netgen_passes,
+                            bench_netgen_serve, bench_throughput,
+                            roofline_table)
 
     suites = {
         "ladder": bench_ladder.run,          # paper §III accuracy table
@@ -99,6 +101,7 @@ def main() -> None:
         "netgen_passes": bench_netgen_passes.run,  # per-pass IR attribution
         "netgen_serve": lambda full: bench_netgen_serve.run(
             full=full, json_path=args.serve_json),  # compile cache + multi-net
+        "netgen_engine": bench_netgen_engine.run,  # online serving load gen
         "throughput": bench_throughput.run,  # paper §V.E FPGA-vs-CPU table
         "kernels": bench_kernels.run,
         "roofline": roofline_table.run,      # dry-run summary counts
@@ -107,8 +110,9 @@ def main() -> None:
     failed = 0
     all_rows: list[str] = []
     suite_seconds: dict[str, float] = {}
+    only = (set(args.only.split(",")) if args.only else None)
     for name, fn in suites.items():
-        if args.only and name != args.only:
+        if only is not None and name not in only:
             continue
         t0 = time.perf_counter()
         try:

@@ -182,6 +182,23 @@ def main():
         print(f"  {session.store.stats.row()}  "
               f"({len(session.store.keys())} artifacts on disk)")
 
+    print("\n== online serving: single requests, continuous slot batching ==")
+    # the async front door: clients submit ONE image at a time, the
+    # engine forms slot blocks (fill the slot or wait max_batch_delay)
+    # and serves them through the same stacked dispatch as above
+    n_online = 64 if args.fast else 256
+    with netgen.ServingEngine(server, max_batch_delay=0.002,
+                              max_queue_depth=4096) as eng:
+        futs = [(i, eng.submit("ladder-a" if i % 2 else "ladder-b", x))
+                for i, x in enumerate(xte[:n_online])]
+        online = np.array([f.result(timeout=30) for _, f in futs])
+        acc = float(np.mean(online == yte[:n_online]))
+        st = eng.stats()
+    print(f"  {st.row()}")
+    print(f"  acc={acc:.1%} over {n_online} single-request submits "
+          f"({st.batches} dispatches — continuous batching amortized "
+          f"{n_online}/{st.batches} requests per round)")
+
     if args.trace:
         trace_dir = Path(args.trace)
         trace_dir.mkdir(parents=True, exist_ok=True)

@@ -117,9 +117,24 @@ otherwise):
     with shd.use_mesh(make_host_mesh(data=8)):    # 8-way batch sharding
         out = server.predict_many({"v1": imgs_a, "v2": imgs_b})
 
+Online serving (`repro.netgen.engine`) is the async front door over
+that dispatch: clients `submit()` SINGLE uint8 requests (getting a
+Future) or call the blocking `infer()`, and a batcher thread performs
+continuous slot formation — fill a slot block or wait `max_batch_delay`,
+whichever first — grouping stack-compatible versions into one stacked
+dispatch per round. SLO knobs: `max_batch_delay`, `max_queue_depth`
+(explicit `QueueFullError` rejection), per-request `deadline`
+(`DeadlineExceededError`); exiting the context manager drains the queue:
+
+    with session.engine(slot_capacity=256, max_batch_delay=0.002) as eng:
+        eng.register("v1", qnet)
+        label = eng.submit("v1", image).result()   # or eng.infer(...)
+
 See `benchmarks/bench_netgen_serve.py` for cold-vs-warm,
-cold-process-vs-warm-store, and stacked-vs-individual numbers, and the
-top-level README.md for the end-to-end quickstart.
+cold-process-vs-warm-store, and stacked-vs-individual numbers,
+`benchmarks/bench_netgen_engine.py` for the closed/open-loop (Poisson)
+p50/p99/throughput sweep of the engine vs one-request-per-dispatch, and
+the top-level README.md for the end-to-end quickstart.
 
 Observability (`repro.netgen.telemetry`)
 ----------------------------------------
@@ -189,15 +204,17 @@ from repro.netgen.tune import (
 __all__ = [
     "Argmax", "Artifact", "ArtifactStore", "CacheKey", "CellCounts",
     "Circuit", "CircuitOps", "CompileCache", "CompiledNet", "CostReport",
-    "DEFAULT_PASSES", "ExecutionPlan", "HW_PASSES", "InputCompare",
+    "DEFAULT_PASSES", "DeadlineExceededError", "EngineClosedError",
+    "EngineStats", "ExecutionPlan", "HW_PASSES", "InputCompare",
     "IrregularCircuitError", "KernelTuner", "NetServer", "Pass",
-    "PassStats", "PipelineSpec", "PlanLayer", "Session", "SignStep",
+    "PassStats", "PipelineSpec", "PlanLayer", "QueueFullError",
+    "ServingEngine", "Session", "SignStep",
     "Target", "Term", "TuneRecord", "TuneStats", "TuneStore",
     "WeightedSum", "addend_rewrite", "as_layered_weights", "backends",
     "cached_compile_net", "circuit_from_arrays", "circuit_to_arrays",
     "compile_artifact", "compile_net", "decompose_planes",
     "default_session", "default_tuner", "delete_zero_terms",
-    "emit_verilog", "evaluate", "list_passes", "list_pipelines",
+    "emit_verilog", "engine", "evaluate", "list_passes", "list_pipelines",
     "list_targets", "lower", "lower_circuit", "node_widths", "ops",
     "prune_dead_units", "register_pass", "register_pipeline",
     "register_target", "resolve_target", "run_pipeline", "serve",
@@ -310,4 +327,9 @@ from repro.netgen import serve  # noqa: E402
 from repro.netgen.serve import (  # noqa: E402
     CacheKey, CompileCache, NetServer, cached_compile_net,
     stack_layered_weights,
+)
+from repro.netgen import engine  # noqa: E402  (builds on serve)
+from repro.netgen.engine import (  # noqa: E402
+    DeadlineExceededError, EngineClosedError, EngineStats, QueueFullError,
+    ServingEngine,
 )

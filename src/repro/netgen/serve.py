@@ -13,8 +13,10 @@ ROADMAP's "Serving specialized programs" item:
       optional persistent `ArtifactStore` (so a second process
       warm-starts without recompiling), then compiles, records
       wall-clock compile time, persists, and LRU-evicts past a fixed
-      capacity. Thread-safe (one lock; concurrent requests for the same
-      key compile exactly once).
+      capacity. Thread-safe: the lock covers lookup/insert only, a
+      per-key in-flight future coalesces concurrent requests for the
+      same key onto one compile, and compiles on unrelated keys never
+      block each other (no head-of-line blocking).
 
   NetServer — a multi-version predictor server in the style of
       `repro.serve.engine`: fixed-capacity slot batching (one live jit
@@ -162,9 +164,28 @@ class CacheCounters:
             load_seconds=float(self.load_seconds.sum))
 
 
+class _InFlight:
+    """One in-progress compile: waiters block on the event instead of on
+    the cache lock, so a cold compile of key A never serializes hits (or
+    other compiles) on unrelated keys behind it."""
+
+    __slots__ = ("event", "error")
+
+    def __init__(self):
+        self.event = threading.Event()
+        self.error: BaseException | None = None
+
+
 class CompileCache:
     """LRU-bounded, thread-safe, content-addressed compile cache — the
-    in-memory tier over an optional persistent `ArtifactStore`."""
+    in-memory tier over an optional persistent `ArtifactStore`.
+
+    Compiles run OUTSIDE the cache lock: the lock covers only lookup and
+    insert, while a per-key in-flight future makes concurrent requests
+    for the same key coalesce onto one compile. Requests for other keys
+    proceed concurrently — a cold compile cannot head-of-line-block a
+    hit on an unrelated key (the admission path of the serving engine
+    routes every request through here, so this matters under load)."""
 
     def __init__(self, capacity: int = 32, store: ArtifactStore | None = None,
                  tuner=None):
@@ -175,6 +196,7 @@ class CompileCache:
         self.tuner = tuner       # forwarded to wants_tuner target compiles
         self._lock = threading.RLock()
         self._entries: "OrderedDict[CacheKey, Artifact]" = OrderedDict()
+        self._inflight: dict[CacheKey, _InFlight] = {}
         self._compile_seconds: dict[CacheKey, float] = {}
         self._counters = CacheCounters()
 
@@ -233,14 +255,35 @@ class CompileCache:
         by compiling (and persisting) on first sight anywhere."""
         key, spec, tgt, opts, ws, thr = self._resolve(
             net, backend, passes, input_threshold, backend_opts)
-        with self._lock:
-            hit = self._entries.get(key)
-            if hit is not None:
-                self._entries.move_to_end(key)
-                self._counters.hits.inc()
-                return hit
-            self._counters.misses.inc()
+        while True:
+            owner = False
+            with self._lock:
+                hit = self._entries.get(key)
+                if hit is not None:
+                    self._entries.move_to_end(key)
+                    self._counters.hits.inc()
+                    return hit
+                flight = self._inflight.get(key)
+                if flight is None:
+                    flight = self._inflight[key] = _InFlight()
+                    self._counters.misses.inc()   # this call owns the miss
+                    owner = True
+            if owner:
+                return self._compile_owner(
+                    key, flight, spec, tgt, opts, ws, thr)
+            # joiner: block until the owner resolves this key, then
+            # re-check the table (a hit in the common case — counted as
+            # one; an immediate eviction falls through to a fresh miss)
+            flight.event.wait()
+            if flight.error is not None:
+                raise flight.error
+
+    def _compile_owner(self, key, flight, spec, tgt, opts, ws, thr):
+        """Resolve one miss outside the lock: store lookup, then a full
+        compile; publish into the table and release the waiters."""
+        try:
             compiled = None
+            dt = None
             skey = artifact_key(key.digest, spec, target_string(tgt, opts))
             if self.store is not None:
                 compiled = self.store.get(skey)
@@ -255,15 +298,25 @@ class CompileCache:
                 dt = time.perf_counter() - t0
                 self._counters.compiles.inc()
                 self._counters.compile_seconds.observe(dt)
-                self._compile_seconds[key] = dt
                 if self.store is not None:
                     self.store.put(compiled)
+        except BaseException as e:
+            with self._lock:
+                self._inflight.pop(key, None)
+            flight.error = e
+            flight.event.set()
+            raise
+        with self._lock:
             self._entries[key] = compiled
+            if dt is not None:
+                self._compile_seconds[key] = dt
+            self._inflight.pop(key, None)
             while len(self._entries) > self.capacity:
                 evicted, _ = self._entries.popitem(last=False)
                 self._compile_seconds.pop(evicted, None)
                 self._counters.evictions.inc()
-            return compiled
+        flight.event.set()
+        return compiled
 
 
 DEFAULT_CACHE = CompileCache(capacity=64)
@@ -413,23 +466,36 @@ class NetServer:
             "netgen_predict_latency_seconds",
             server=self._scope, version=version)
 
+    def _requests(self, version: str):
+        """Per-version request counter: incremented exactly once per
+        dispatch call per version, so `benchmarks/check_trace.py` can
+        gate that every request produced exactly one latency
+        observation (the misattribution bug fixed in ISSUE 7)."""
+        return self._tel.counter(
+            "netgen_requests_total", server=self._scope, version=version)
+
     # -- registry ------------------------------------------------------------
 
     def register(self, version: str, net) -> Artifact:
         """Compile (through the cache, and the session's store when one
         is configured) and register a model version. When `warmup` is
-        on, the serving shape is traced and executed once so the first
-        real request pays no jit latency."""
+        on, the serving shape is traced and executed BEFORE the version
+        is published into the routing table — a concurrent `predict`
+        either sees the old state (KeyError / previous weights) or a
+        fully warm predictor, never a registered-but-cold one whose
+        first request pays the jit latency `warmup=True` promises to
+        hide (and whose warmup a concurrent stacked dispatch would then
+        redundantly re-run)."""
         compiled = self.cache.get_or_compile(
             net, backend=self.backend, passes=self.passes, **self._opts)
-        with self._lock:
-            self._versions[version] = _Version(version, compiled)
-            self._multi.clear()
-            self._generation += 1
         if self.warmup:
             z = np.zeros((self.slot_capacity, compiled.circuit.n_inputs),
                          np.uint8)
             np.asarray(compiled(z))
+        with self._lock:
+            self._versions[version] = _Version(version, compiled)
+            self._multi.clear()
+            self._generation += 1
         return compiled
 
     def unregister(self, version: str) -> None:
@@ -460,73 +526,109 @@ class NetServer:
         with self._tel.span("netgen.dispatch", path="single",
                             versions=version):
             out = self._run_slots(compiled, np.asarray(x_uint8))
+        self._requests(version).inc()
         self._latency(version).observe(time.perf_counter() - t0)
         return out
 
     def predict_many(self, requests: dict) -> dict:
         """Serve {version: uint8 batch} in one cross-model stacked dispatch
         when the requested versions are stack-compatible (else per-version
-        fallback). Returns {version: predictions}."""
+        fallback). Returns {version: predictions}.
+
+        Skewed batches do not waste rounds: each slot round dispatches
+        only the versions that still have requested rows (an exhausted
+        version's padded all-zero block would burn kernel work and skew
+        the occupancy histogram with rows nobody asked for), and the
+        last remaining version finishes through the single-version slot
+        path. `netgen_predict_latency_seconds` records per-version
+        SERVICE time — the rounds a version actually participated in —
+        so a 1-row version no longer inherits the whole-call latency of
+        a 4096-row co-batched one."""
         t0 = time.perf_counter()
         names = tuple(sorted(requests))
         compiled = {v: self.compiled_for(v) for v in names}
+        xs = {v: np.asarray(requests[v]) for v in names}
         for v in names:
-            _validate_batch(np.asarray(requests[v]),
-                            compiled[v].circuit.n_inputs)
+            _validate_batch(xs[v], compiled[v].circuit.n_inputs)
         if len(names) == 1:
             (v,) = names
             self._dispatch["single"].inc()
             with self._tel.span("netgen.dispatch", path="single",
                                 versions=v):
-                out = {v: self._run_slots(compiled[v],
-                                          np.asarray(requests[v]))}
+                out = {v: self._run_slots(compiled[v], xs[v])}
+            self._requests(v).inc()
             self._latency(v).observe(time.perf_counter() - t0)
             return out
 
         fn, sharded = self._stacked_fn(names)
         if fn is None:
             self._dispatch["fallback"].inc()
+            out = {}
             with self._tel.span("netgen.dispatch", path="fallback",
                                 versions=len(names)):
-                out = {v: self._run_slots(compiled[v],
-                                          np.asarray(requests[v]))
-                       for v in names}
-            dt = time.perf_counter() - t0
-            for v in names:
-                self._latency(v).observe(dt)
+                for v in names:
+                    t1 = time.perf_counter()
+                    out[v] = self._run_slots(compiled[v], xs[v])
+                    self._requests(v).inc()
+                    self._latency(v).observe(time.perf_counter() - t1)
             return out
 
         self._dispatch["stacked"].inc()
         if sharded:
             self._dispatch["sharded"].inc()
         cap = self.slot_capacity
-        n_in = compiled[names[0]].circuit.n_inputs
-        xs = {v: np.asarray(requests[v]) for v in names}
         rounds = max((x.shape[0] + cap - 1) // cap for x in xs.values())
         out: dict[str, list] = {v: [] for v in names}
+        service = {v: 0.0 for v in names}
         with self._tel.span("netgen.dispatch",
                             path="sharded" if sharded else "stacked",
                             versions=len(names), rounds=rounds):
             for r in range(rounds):
-                block = np.zeros((len(names), cap, n_in), np.uint8)
-                valid = []
-                for i, v in enumerate(names):
-                    chunk = xs[v][r * cap:(r + 1) * cap]
-                    block[i], n = pad_slots(chunk, cap)
-                    valid.append(n)
-                self._h_occupancy.observe(sum(valid) / (len(names) * cap))
-                with self._tel.span("netgen.kernel", round=r,
-                                    valid=sum(valid)):
-                    preds = np.asarray(fn(block))    # (M, cap)
-                for i, v in enumerate(names):
+                active = tuple(v for v in names if xs[v].shape[0] > r * cap)
+                if len(active) == 1:
+                    (v,) = active
+                    t1 = time.perf_counter()
+                    out[v].append(self._run_slots(
+                        compiled[v], xs[v][r * cap:]))
+                    service[v] += time.perf_counter() - t1
+                    break
+                # a strict subset of a stackable set is itself stackable;
+                # its multi-net fn is cached in _multi like the full set's
+                afn = fn if active == names else self._stacked_fn(active)[0]
+                chunks = [xs[v][r * cap:(r + 1) * cap] for v in active]
+                t1 = time.perf_counter()
+                preds, valid = self._stacked_round(afn, chunks, round=r)
+                dt = time.perf_counter() - t1
+                for i, v in enumerate(active):
                     out[v].append(preds[i, :valid[i]])
-        dt = time.perf_counter() - t0
+                    service[v] += dt
         for v in names:
-            self._latency(v).observe(dt)
+            self._requests(v).inc()
+            self._latency(v).observe(service[v])
         return {v: (np.concatenate(out[v]) if out[v]
                     else np.zeros((0,), np.int64)) for v in names}
 
     # -- internals -----------------------------------------------------------
+
+    def _stacked_round(self, fn, chunks: list, round: int = 0
+                       ) -> tuple[np.ndarray, list]:
+        """ONE stacked dispatch round — the slot mechanics shared by
+        `predict_many` and the async serving engine
+        (`repro.netgen.engine`): pad each version's chunk into the
+        (M, cap, n_in) slot block, observe occupancy over the slots
+        actually requested, run the jitted multi-net fn. Returns the
+        (M, cap) predictions and the per-version valid row counts."""
+        cap = self.slot_capacity
+        block = np.zeros((len(chunks), cap, chunks[0].shape[1]), np.uint8)
+        valid = []
+        for i, chunk in enumerate(chunks):
+            block[i], n = pad_slots(chunk, cap)
+            valid.append(n)
+        self._h_occupancy.observe(sum(valid) / (len(chunks) * cap))
+        with self._tel.span("netgen.kernel", round=round,
+                            valid=sum(valid)):
+            preds = np.asarray(fn(block))            # (M, cap)
+        return preds, valid
 
     def _run_slots(self, compiled: Artifact, x: np.ndarray) -> np.ndarray:
         _validate_batch(x, compiled.circuit.n_inputs)

@@ -651,6 +651,23 @@ class Session:
             self.compile, net, target=target, pipeline=pipeline,
             input_threshold=input_threshold, **target_opts)
 
+    def engine(self, *, target: str = "jnp", pipeline=None,
+               slot_capacity: int = 256, warmup: bool = True,
+               max_batch_delay: float = 0.002, max_queue_depth: int = 4096):
+        """Build an async online `ServingEngine` over this session: the
+        engine's `NetServer` compiles through this session's memory tier
+        and persistent store, so `register` warm-starts from artifacts a
+        previous process (or a `compile_async` kicked off earlier)
+        already produced. See `repro.netgen.engine` for the admission /
+        continuous-slot-batching semantics and the SLO knobs."""
+        from repro.netgen.engine import ServingEngine
+
+        return ServingEngine(
+            session=self, target=target, pipeline=pipeline,
+            slot_capacity=slot_capacity, warmup=warmup,
+            max_batch_delay=max_batch_delay,
+            max_queue_depth=max_queue_depth)
+
     def shutdown(self, wait: bool = True) -> None:
         """Stop the async compile executor (idempotent; queued compiles
         finish when `wait`)."""

@@ -56,10 +56,25 @@ Instrumented span tree (what a trace of one request lifecycle nests):
       netgen.pipeline       pipeline string
         netgen.pass         per pass: terms/nodes before -> after
       netgen.backend
-    netgen.dispatch         path=single|stacked|sharded|fallback
-      netgen.kernel         one per jitted call (slot round)
+    netgen.engine.batch     one formed batch (engine, versions, rows) —
+                            opened on the batcher thread, so it roots
+                            its own trace and parents the dispatch
+      netgen.dispatch       path=single|stacked|sharded|fallback
+        netgen.kernel       one per jitted call (slot round)
     netgen.store.load       artifact rebuilt from disk
     netgen.tune.search      candidates, winner, measure seconds
+
+Serving metrics: `netgen_predict_latency_seconds{server,version}`
+records per-version SERVICE time and `netgen_requests_total` counts one
+increment per dispatch call per version — `benchmarks/check_trace.py`
+gates latency count == request count. The online engine
+(`repro.netgen.engine`) adds, per `engine=` scope:
+`netgen_engine_submitted/completed/batches_total`,
+`netgen_engine_rejected_total{reason=queue_full|deadline|closed}`, the
+`netgen_engine_queue_depth` gauge, and the
+`netgen_engine_queue_wait_seconds` / `netgen_engine_batch_rows`
+histograms — queue wait is recorded separately from service time, so
+SLO analysis can split time-in-queue from time-on-kernel.
 """
 from __future__ import annotations
 

@@ -478,3 +478,155 @@ def test_pad_slots():
     assert same is x and n_same == 3
     with pytest.raises(ValueError):
         pad_slots(x, 2)
+
+
+# ---------------------------------------------------------------------------
+# ISSUE 7 regression tests: the latent serving-path concurrency bugs
+# ---------------------------------------------------------------------------
+
+def test_cache_compile_does_not_block_unrelated_keys():
+    """Head-of-line blocking regression: while key A sits in a slow
+    compile, a hit on key B — and even a fresh compile of key C — must
+    proceed (the old code held the cache lock across the compile)."""
+    import time
+
+    started, release = threading.Event(), threading.Event()
+
+    def slow_compile(circuit, **opts):
+        started.set()
+        assert release.wait(10.0), "test never released the slow compile"
+        return lambda x: np.zeros((np.asarray(x).shape[0],), np.int64)
+
+    netgen.register_target(netgen.Target(
+        name="slowfake_hol", kind="callable",
+        description="test-only gated-slow compile", compile=slow_compile))
+    cache = netgen.CompileCache()
+    net_a, net_b, net_c = _random_net(80), _random_net(81), _random_net(82)
+    warm_b = cache.get_or_compile(net_b)     # resident before the stall
+    out: dict = {}
+    slow = threading.Thread(target=lambda: out.update(
+        a=cache.get_or_compile(net_a, backend="slowfake_hol")))
+    slow.start()
+    try:
+        assert started.wait(10.0)
+        # watchdog thread instead of a bare call: under the old locking
+        # this blocked forever, which should fail the test, not hang it
+        hit: dict = {}
+        h = threading.Thread(target=lambda: hit.update(
+            b=cache.get_or_compile(net_b)))
+        h.start()
+        h.join(5.0)
+        assert hit.get("b") is warm_b, \
+            "hit on unrelated key blocked behind an in-flight compile"
+        miss: dict = {}
+        c = threading.Thread(target=lambda: miss.update(
+            c=cache.get_or_compile(net_c)))
+        c.start()
+        c.join(30.0)
+        assert "c" in miss, \
+            "compile of unrelated key blocked behind an in-flight compile"
+    finally:
+        release.set()
+        slow.join(10.0)
+    assert out["a"] is cache.get_or_compile(net_a, backend="slowfake_hol")
+    st = cache.stats()
+    assert st.misses == st.compiles == 3     # b, a, c: one compile each
+    assert st.hits == 2                      # the gated hit + the re-get
+
+
+def test_register_warms_up_before_publishing():
+    """Warmup race regression: a registering version must not be visible
+    to concurrent predicts until its warmup trace has executed (the old
+    code published into the routing table first)."""
+    import time
+
+    calls: list = []
+    gate = threading.Event()
+
+    def compile_cold(circuit, **opts):
+        def artifact(x):
+            calls.append(np.asarray(x).shape)
+            if len(calls) == 1:              # the warmup execution
+                assert gate.wait(10.0), "test never released the warmup"
+            return np.zeros((np.asarray(x).shape[0],), np.int64)
+        return artifact
+
+    netgen.register_target(netgen.Target(
+        name="coldfake_pub", kind="callable",
+        description="test-only gated warmup", compile=compile_cold))
+    server = netgen.NetServer(target="coldfake_pub", slot_capacity=4,
+                              warmup=True)
+    reg = threading.Thread(
+        target=lambda: server.register("v", _random_net(85)))
+    reg.start()
+    try:
+        deadline = time.time() + 10.0
+        while not calls and time.time() < deadline:
+            time.sleep(0.005)
+        assert calls, "warmup never ran"
+        # mid-warmup, the second thread must still see the OLD state
+        assert server.versions() == []
+        with pytest.raises(KeyError):
+            server.predict("v", _images(86, 2, 12))
+    finally:
+        gate.set()
+        reg.join(10.0)
+    assert server.versions() == ["v"]
+    assert len(calls) == 1                   # exactly one warmup execution
+    assert calls[0] == (4, 12)               # the serving slot shape
+    server.predict("v", _images(86, 2, 12))
+    assert len(calls) == 2
+
+
+def test_predict_many_skewed_batches_skip_empty_rounds():
+    """Skewed-batch regression: with batch sizes (1, 4*cap) the rounds
+    after the first must serve ONLY the longer version — no all-zero
+    padded block for the exhausted one — and occupancy is observed over
+    requested slots only."""
+    cap = 4
+    server = netgen.NetServer(slot_capacity=cap)
+    net_a, net_b = _random_net(87), _random_net(88)
+    server.register("a", net_a)
+    server.register("b", net_b)
+    xa, xb = _images(89, 1, 12), _images(90, 4 * cap, 12)
+    out = server.predict_many({"a": xa, "b": xb})
+    np.testing.assert_array_equal(out["a"], _ref(net_a, xa))
+    np.testing.assert_array_equal(out["b"], _ref(net_b, xb))
+    h = netgen.telemetry.get_registry().histogram(
+        "netgen_slot_occupancy", server=server._scope)
+    # round 0 stacks both: (1 + 4) / (2 * 4); rounds 1-3 are b alone
+    # through the single-version tail at full occupancy. The old code
+    # padded a's empty row into every round: 4 observations over 8
+    # slots each, summing to 2.125.
+    assert h.count == 4
+    assert abs(h.sum - (5 / 8 + 3 * 1.0)) < 1e-9, h.snapshot()
+    assert server.dispatch_counts["stacked"] == 1
+
+
+def test_predict_many_records_per_version_service_time():
+    """Latency misattribution regression: a 1-row version co-batched
+    with a 16*cap-row one must record only the rounds it participated
+    in, not the whole-call wall clock — and every version gets exactly
+    one latency observation per dispatch (the check_trace.py gate)."""
+    cap = 4
+    server = netgen.NetServer(slot_capacity=cap)
+    net_s, net_b = _random_net(91), _random_net(92)
+    server.register("small", net_s)
+    server.register("big", net_b)
+    reqs = {"small": _images(93, 1, 12), "big": _images(94, 16 * cap, 12)}
+    out = server.predict_many(reqs)
+    np.testing.assert_array_equal(out["small"], _ref(net_s, reqs["small"]))
+    np.testing.assert_array_equal(out["big"], _ref(net_b, reqs["big"]))
+    tel = netgen.telemetry.get_registry()
+    for v in ("small", "big"):
+        lat = tel.histogram("netgen_predict_latency_seconds",
+                            server=server._scope, version=v)
+        req = tel.counter("netgen_requests_total",
+                          server=server._scope, version=v)
+        assert lat.count == 1 and int(req.value) == 1
+    small = tel.histogram("netgen_predict_latency_seconds",
+                          server=server._scope, version="small")
+    big = tel.histogram("netgen_predict_latency_seconds",
+                        server=server._scope, version="big")
+    # small saw round 0 only; big additionally paid 15 more rounds
+    assert small.sum < big.sum
