@@ -8,7 +8,10 @@ Two tables the old flat §V.D numbers could not show:
     O(terms^2) greedy search is affordable, share_common_addends;
   * compiled-backend throughput — predictions/s of the jnp vs pallas vs
     fused artifacts for the same circuit (pallas/fused run interpret-mode
-    on CPU containers; on TPU the same path compiles to Mosaic).
+    on CPU containers; on TPU the same path compiles to Mosaic);
+  * static-analysis overhead — one `analysis.analyze()` (structural
+    verifier + range dataflow, what every compile runs pre-backend) as a
+    percentage of pipeline time, asserted <= 10%.
 
 Rows: name,us_per_call,derived.
 """
@@ -35,12 +38,28 @@ def run(full: bool = False) -> list[str]:
     circuit = netgen.lower(qnet)
     spec = netgen.PipelineSpec.parse("zeros,prune,addends")
     t0 = time.time()
-    _, stats = spec.run(circuit)
-    dt = (time.time() - t0) * 1e6 / len(spec.steps)
+    compiled, stats = spec.run(circuit, verify=False)
+    pipe_s = time.time() - t0
+    dt = pipe_s * 1e6 / len(spec.steps)
     for s in stats:
         rows.append(f"pass_{s.name}_terms,{dt:.0f},{s.before.terms}->{s.after.terms}")
         rows.append(f"pass_{s.name}_mults,0,{s.before.mults}->{s.after.mults}")
         rows.append(f"pass_{s.name}_adds,0,{s.before.adds}->{s.after.adds}")
+
+    # --- static analysis overhead (verifier + range dataflow) --------------
+    # One full analyze() — what Session.compile_resolved always runs
+    # pre-backend — must stay a small fraction of pipeline time.
+    from repro.netgen import analysis
+    reps = []
+    for _ in range(3):
+        t0 = time.perf_counter()
+        analysis.analyze(compiled)
+        reps.append(time.perf_counter() - t0)
+    an_s = min(reps)
+    pct = 100.0 * an_s / pipe_s
+    rows.append(f"analysis_overhead,{an_s*1e6:.0f},{pct:.1f}pct_of_pipeline")
+    assert pct <= 10.0, (
+        f"analysis overhead {pct:.1f}% exceeds 10% of pipeline time")
 
     # --- CSE on a small net (greedy pair search is O(terms^2)) -------------
     rng = np.random.default_rng(0)

@@ -15,8 +15,8 @@ telemetry invariants:
                 --compile-budget-s (generous — it catches a
                 pathological compile-time regression, not jitter).
   metrics.prom  every counter non-negative; per cache scope
-                misses == compiles + store_hits (each memory miss is
-                served by exactly one of the two lower tiers); slot
+                misses == compiles + store_hits + failures (each memory
+                miss is served by exactly one lower tier, or raised); slot
                 occupancy quantiles in (0, 1]; latency p50 <= p99; per
                 (server, version) the latency histogram count equals
                 netgen_requests_total (every dispatch observed exactly
@@ -142,6 +142,8 @@ def check_metrics(samples: list[tuple[str, dict, float]]) -> list[str]:
                 per_cache[cache]["compiles"] = value
             elif name == "netgen_cache_store_hits_total":
                 per_cache[cache]["store_hits"] = value
+            elif name == "netgen_cache_compile_failures_total":
+                per_cache[cache]["failures"] = value
         if name == "netgen_predict_latency_seconds" and "quantile" in labels:
             key = (labels.get("server"), labels.get("version"))
             latency[key][labels["quantile"]] = value
@@ -152,11 +154,16 @@ def check_metrics(samples: list[tuple[str, dict, float]]) -> list[str]:
             request_counts[(labels.get("server"),
                             labels.get("version"))] = value
     for cache, c in sorted(per_cache.items()):
+        # failures: misses whose compile raised (a VerificationError from
+        # the pre-backend analysis, a backend error) — counted so the
+        # three lower-tier outcomes still sum to the misses exactly.
         if {"misses", "compiles", "store_hits"} <= set(c) and \
-                c["misses"] != c["compiles"] + c["store_hits"]:
+                c["misses"] != (c["compiles"] + c["store_hits"]
+                                + c.get("failures", 0)):
             errors.append(
                 f"cache {cache}: misses ({c['misses']:.0f}) != compiles "
-                f"({c['compiles']:.0f}) + store_hits ({c['store_hits']:.0f})")
+                f"({c['compiles']:.0f}) + store_hits ({c['store_hits']:.0f})"
+                f" + failures ({c.get('failures', 0):.0f})")
     for key, qs in sorted(latency.items()):
         if "0.5" in qs and "0.99" in qs and qs["0.5"] > qs["0.99"]:
             errors.append(f"latency p50 > p99 for server={key[0]} "

@@ -11,7 +11,7 @@ function, and verifies both are exact rewrites.
 import numpy as np
 import jax.numpy as jnp
 
-from repro.core import dataset, mlp, netgen, quantize
+from repro.core import netgen, quantize
 from repro.core.ladder import run_ladder
 
 

@@ -9,7 +9,6 @@ same driver, pointed at the production mesh via repro.launch, is the
 multi-pod entry point.
 """
 import argparse
-import dataclasses
 import time
 
 from repro.models.base import ArchConfig, ShapeConfig

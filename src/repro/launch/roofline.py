@@ -19,8 +19,6 @@ import dataclasses
 import json
 import re
 
-import numpy as np
-
 from repro.launch.mesh import HW
 
 _DTYPE_BYTES = {
@@ -148,8 +146,6 @@ def active_param_count(cfg) -> float:
     if cfg.tie_embeddings:
         total += emb                   # tied head still does the matmul
     if cfg.family == "moe":
-        import jax
-        from repro.models.base import is_info
         moe_params = tree["layers"]["moe"]
         moe_total = count_params({k: v for k, v in moe_params.items()
                                   if k != "router"})

@@ -14,8 +14,6 @@ from __future__ import annotations
 
 import argparse
 
-import jax
-
 from repro import configs
 from repro.launch.mesh import make_host_mesh, make_production_mesh
 from repro.models.base import SHAPES, ShapeConfig

@@ -1,7 +1,6 @@
 """Token embedding, LM head, and input assembly for text/vlm/audio."""
 from __future__ import annotations
 
-import jax
 import jax.numpy as jnp
 
 from repro.layers import rotary

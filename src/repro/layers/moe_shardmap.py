@@ -15,8 +15,6 @@ Differentiable end-to-end (all_to_all / all_gather are linear).
 """
 from __future__ import annotations
 
-import functools
-
 import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P

@@ -9,9 +9,6 @@ configurable remat policy on the block body. Hidden states are re-annotated
 """
 from __future__ import annotations
 
-import functools
-from typing import Any
-
 import jax
 import jax.numpy as jnp
 

@@ -136,6 +136,42 @@ cold-process-vs-warm-store, and stacked-vs-individual numbers,
 p50/p99/throughput sweep of the engine vs one-request-per-dispatch, and
 the top-level README.md for the end-to-end quickstart.
 
+Static analysis & verification (`repro.netgen.analysis`)
+--------------------------------------------------------
+The invariants the paper's Verilog relies on — exact accumulator
+ranges, sound bit-widths, lossless packed/bit-plane lowering — are
+machine-checked instead of assumed:
+
+    verify_circuit(c)     structural IR verifier: DAG well-formedness,
+                          src validity, kind-specific invariants, and
+                          per-pass postconditions ("no zero-weight
+                          terms after zeros", ...)
+    analyze_ranges(c)     interval dataflow: per-node exact [lo, hi]
+                          plus the magnitude bound that sizes widths —
+                          proves every accumulator fits its emitted
+                          `signed_width` (subsumes `value_bounds` /
+                          `evaluate(check_widths=True)`)
+    verify_plan(p)        ExecutionPlan certification: chain shapes,
+                          packed-padding exactness, `decompose_planes`
+                          losslessness, int32 popcount-accumulation
+                          safety (also `plan.verify()`)
+    diagnose_stack(cs)    structured stack-compatibility report (the
+                          NetServer records it as `stack_report()`
+                          instead of silently falling back)
+
+Wiring: `PipelineSpec.run(verify=True)` checks the full suite at every
+pass boundary (default follows the NETGEN_VERIFY env var — on in
+tests/CI, off in prod, where violations count
+`netgen_verify_failures_total` instead of raising);
+`Session.compile_resolved` runs one pre-backend analysis, hands the
+proven widths to the verilog/cost backends (`Target.wants_analysis`),
+and records a proof summary on the Artifact (`artifact.analysis`,
+persisted in meta.json, shown by `artifact.report()`); the kernel
+tuner statically rejects illegal/duplicate tile candidates before
+measuring them (`analysis.tile_legality`); and
+`python -m repro.netgen.analysis <store-dir>` lints every artifact in
+an ArtifactStore, failing on corrupt, stale, or unsound entries.
+
 Observability (`repro.netgen.telemetry`)
 ----------------------------------------
 Every layer above reports into one zero-dependency, thread-safe
@@ -170,7 +206,11 @@ from __future__ import annotations
 import dataclasses
 import warnings
 
-from repro.netgen import backends, telemetry
+from repro.netgen import analysis, backends, telemetry
+from repro.netgen.analysis import (
+    Diagnostic, RangeAnalysis, StackReport, VerificationError,
+    analyze_ranges, diagnose_stack, verify_circuit, verify_plan,
+)
 from repro.netgen.backends.cost import CellCounts, CostReport
 from repro.netgen.frontend import lower
 from repro.netgen.graph import (
@@ -204,22 +244,24 @@ from repro.netgen.tune import (
 __all__ = [
     "Argmax", "Artifact", "ArtifactStore", "CacheKey", "CellCounts",
     "Circuit", "CircuitOps", "CompileCache", "CompiledNet", "CostReport",
-    "DEFAULT_PASSES", "DeadlineExceededError", "EngineClosedError",
-    "EngineStats", "ExecutionPlan", "HW_PASSES", "InputCompare",
-    "IrregularCircuitError", "KernelTuner", "NetServer", "Pass",
-    "PassStats", "PipelineSpec", "PlanLayer", "QueueFullError",
-    "ServingEngine", "Session", "SignStep",
-    "Target", "Term", "TuneRecord", "TuneStats", "TuneStore",
-    "WeightedSum", "addend_rewrite", "as_layered_weights", "backends",
+    "DEFAULT_PASSES", "DeadlineExceededError", "Diagnostic",
+    "EngineClosedError", "EngineStats", "ExecutionPlan", "HW_PASSES",
+    "InputCompare", "IrregularCircuitError", "KernelTuner", "NetServer",
+    "Pass", "PassStats", "PipelineSpec", "PlanLayer", "QueueFullError",
+    "RangeAnalysis", "ServingEngine", "Session", "SignStep",
+    "StackReport", "Target", "Term", "TuneRecord", "TuneStats",
+    "TuneStore", "VerificationError", "WeightedSum", "addend_rewrite",
+    "analysis", "analyze_ranges", "as_layered_weights", "backends",
     "cached_compile_net", "circuit_from_arrays", "circuit_to_arrays",
     "compile_artifact", "compile_net", "decompose_planes",
     "default_session", "default_tuner", "delete_zero_terms",
-    "emit_verilog", "engine", "evaluate", "list_passes", "list_pipelines",
-    "list_targets", "lower", "lower_circuit", "node_widths", "ops",
-    "prune_dead_units", "register_pass", "register_pipeline",
-    "register_target", "resolve_target", "run_pipeline", "serve",
-    "share_common_addends", "specialize", "stack_layered_weights",
-    "stack_plans", "telemetry",
+    "diagnose_stack", "emit_verilog", "engine", "evaluate",
+    "list_passes", "list_pipelines", "list_targets", "lower",
+    "lower_circuit", "node_widths", "ops", "prune_dead_units",
+    "register_pass", "register_pipeline", "register_target",
+    "resolve_target", "run_pipeline", "serve", "share_common_addends",
+    "specialize", "stack_layered_weights", "stack_plans", "telemetry",
+    "verify_circuit", "verify_plan",
 ]
 
 

@@ -62,12 +62,20 @@ def compile_multi(plan, backend: str = "jnp", tuner=None, **opts):
     door. `tuner` (a `repro.netgen.tune.KernelTuner`, not a declared
     option) reaches targets that want one — the serving layer passes
     its session's tuner so stacked dispatch builds reuse persisted
-    tuning records."""
+    tuning records.
+
+    The plan is certified by `repro.netgen.analysis.verify_plan` before
+    any backend sees it: chain/padding/plane-decomposition violations
+    raise a structured `VerificationError` (a ValueError — the serving
+    layer's fallback path still catches it) instead of a backend shape
+    error deep inside a jit trace."""
     target, merged = resolve_target(backend, opts)
     if target.compile_multi is None:
         raise ValueError(
             f"target {target.name!r} has no multi-net dispatch "
             f"(have {MULTI_BACKENDS})")
+    from repro.netgen import analysis
+    analysis.verify_plan(plan, stage="compile_multi")
     if target.wants_tuner:
         merged["_tuner"] = tuner
     return target.compile_multi(plan, **merged)

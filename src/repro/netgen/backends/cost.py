@@ -72,12 +72,23 @@ class CellCounts:
                 f"argmax {self.argmax_cells})")
 
 
-def logic_cells(circuit: Circuit) -> CellCounts:
-    """Price one circuit with the LUT model in the module doc."""
-    bounds = value_bounds(circuit)
-    width = {nid: (1 if isinstance(circuit.node(nid), (InputCompare, SignStep))
-                   else signed_width(b))
-             for nid, b in bounds.items()}
+def logic_cells(circuit: Circuit, *, analysis=None) -> CellCounts:
+    """Price one circuit with the LUT model in the module doc.
+
+    `analysis`, when given, is the driver's pre-backend
+    `repro.netgen.analysis.RangeAnalysis`: its proven widths are used
+    directly instead of re-deriving them from `value_bounds` (the two
+    agree by construction — the analysis subsumes the ad-hoc width
+    inference)."""
+    if analysis is not None:
+        width = analysis.widths()
+    else:
+        bounds = value_bounds(circuit)
+        width = {
+            nid: (1 if isinstance(circuit.node(nid),
+                                  (InputCompare, SignStep))
+                  else signed_width(b))
+            for nid, b in bounds.items()}
     compare = adder = mult = argmax = 0
     cmp_cost = math.ceil(8 / LUT_INPUTS) + 1
     for n in circuit.nodes:
@@ -133,11 +144,16 @@ class CostReport:
         return "\n".join(lines)
 
 
-def compile_cost(circuit: Circuit, *, _pass_trace=None) -> CostReport:
+def compile_cost(circuit: Circuit, *, _pass_trace=None,
+                 _analysis=None) -> CostReport:
     """The `cost` target entry point. `_pass_trace`, supplied by the
     Session driver, is the ((stage_name, circuit), ...) sequence of
     pipeline boundaries — each is priced so the report shows which pass
-    bought which cells, the paper's Figure-7 story per rewrite."""
+    bought which cells, the paper's Figure-7 story per rewrite.
+    `_analysis` is the driver's range analysis of the FINAL circuit;
+    intermediate trace circuits differ structurally, so they are priced
+    with freshly derived widths."""
     per_pass = tuple(
         (name, logic_cells(c)) for name, c in (_pass_trace or ()))
-    return CostReport(final=logic_cells(circuit), per_pass=per_pass)
+    return CostReport(final=logic_cells(circuit, analysis=_analysis),
+                      per_pass=per_pass)

@@ -268,7 +268,13 @@ def _tuned_params(plan: ExecutionPlan, kw: dict, blocks: dict,
         "signature": _plan_signature(plan),
         "candidates": candidates,
     }
-    best = tuner.get_or_tune(key_fields, candidates, measure)
+    # static tile legality: candidates whose blocks are non-positive or
+    # clamp to a kernel another candidate already launches are rejected
+    # before spending a measurement (repro.netgen.analysis)
+    from repro.netgen.analysis import tile_legality
+    best = tuner.get_or_tune(
+        key_fields, candidates, measure,
+        legal=tile_legality(plan, batch=batch, multi=multi))
     return best, built.get(tuple(sorted(best.items())))
 
 

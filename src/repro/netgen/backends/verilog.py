@@ -24,9 +24,10 @@ from __future__ import annotations
 
 import math
 
+from repro.netgen.analysis import RangeAnalysis, analyze_ranges
 from repro.netgen.graph import (
     Argmax, Circuit, InputCompare, IrregularCircuitError, SignStep,
-    WeightedSum, node_widths, signed_width, value_bounds,
+    WeightedSum,
 )
 from repro.netgen.plan import lower_circuit
 
@@ -81,39 +82,47 @@ def emit_verilog(
     module_name: str = "nn_inference",
     style: str = "auto",
     addend: bool | None = None,
+    _analysis: RangeAnalysis | None = None,
 ) -> str:
     """Emit the circuit as a combinational Verilog module. `addend`
-    controls only the header comment (None: detect from the terms)."""
+    controls only the header comment (None: detect from the terms).
+    Accumulator widths come from the shared range analysis — the
+    Session driver passes its pre-backend `RangeAnalysis` as
+    `_analysis` (the verilog target declares `wants_analysis`), so the
+    emitted widths are exactly the ones the analysis proved; direct
+    callers get the same analysis computed here."""
     if style not in ("auto", "legacy", "generic"):
         raise ValueError(f"unknown style {style!r}")
     if addend is None:
         addend = _is_addend_form(circuit)
+    ranges = analyze_ranges(circuit) if _analysis is None else _analysis
     if style in ("auto", "legacy"):
         try:
             if circuit.depth == 2:
                 lower_circuit(circuit)       # regularity check only
-                return _emit_legacy(circuit, module_name, addend)
+                return _emit_legacy(circuit, module_name, addend, ranges)
         except IrregularCircuitError:
             if style == "legacy":
                 raise
         if style == "legacy":
             raise IrregularCircuitError(
                 "legacy style requires the regular 2-layer form")
-    return _emit_generic(circuit, module_name, addend)
+    return _emit_generic(circuit, module_name, addend, ranges)
 
 
 # ---------------------------------------------------------------------------
 # Legacy style (paper Figure 6; byte-compatible with the seed emitter)
 # ---------------------------------------------------------------------------
 
-def _emit_legacy(circuit: Circuit, module_name: str, addend: bool) -> str:
+def _emit_legacy(circuit: Circuit, module_name: str, addend: bool,
+                 ranges: RangeAnalysis) -> str:
     inputs = sorted(circuit.by_kind(InputCompare), key=lambda n: n.pixel)
     sums = circuit.by_kind(WeightedSum)
     hidden = [n for n in sums if n.layer == 1]
     final = [n for n in sums if n.layer == 2]
     steps = circuit.by_kind(SignStep)
     step_of = {s.src: s for s in steps}
-    bounds = value_bounds(circuit)
+    bounds = ranges.bounds()
 
     n_in, n_h, n_out = len(inputs), len(hidden), len(final)
     bw1, bw2 = _layer_width(bounds, hidden), _layer_width(bounds, final)
@@ -167,14 +176,15 @@ def _emit_legacy(circuit: Circuit, module_name: str, addend: bool) -> str:
 # Generic style (any depth, irregular DAGs, per-node widths)
 # ---------------------------------------------------------------------------
 
-def _emit_generic(circuit: Circuit, module_name: str, addend: bool) -> str:
+def _emit_generic(circuit: Circuit, module_name: str, addend: bool,
+                  ranges: RangeAnalysis) -> str:
     inputs = sorted(circuit.by_kind(InputCompare), key=lambda n: n.pixel)
     sums = circuit.by_kind(WeightedSum)
     steps = circuit.by_kind(SignStep)
     argmax = circuit.node(circuit.output)
     assert isinstance(argmax, Argmax)
     step_of = {s.src: s for s in steps}
-    widths = node_widths(circuit)
+    widths = ranges.widths()
     depth = circuit.depth
 
     final_ids = set(argmax.srcs)

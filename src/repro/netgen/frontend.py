@@ -17,8 +17,6 @@ cost. Run `repro.netgen.passes` to optimize.
 """
 from __future__ import annotations
 
-from typing import Sequence
-
 import numpy as np
 
 from repro.netgen.graph import (

@@ -142,7 +142,13 @@ class Circuit:
         return out
 
     def validate(self) -> None:
-        """Check topological order, id uniqueness, and output wiring."""
+        """Check topological order, id uniqueness, and output wiring.
+
+        This is the quick inline sanity check; the full structural
+        verifier (kind-specific arity/field invariants, pass
+        postconditions, range/overflow proofs) lives in
+        `repro.netgen.analysis.verify_circuit` and runs at every pass
+        boundary under `PipelineSpec.run(verify=True)`."""
         seen: set[NodeId] = set()
         for n in self.nodes:
             if n.id in seen:

@@ -33,7 +33,7 @@ from collections import Counter
 from typing import Callable, Sequence
 
 from repro.netgen.graph import (
-    Argmax, Circuit, InputCompare, SignStep, Term, WeightedSum,
+    Argmax, Circuit, SignStep, Term, WeightedSum,
 )
 
 Pass = Callable[[Circuit], Circuit]
@@ -280,13 +280,25 @@ HW_PASSES: tuple[Pass, ...] = (
 
 def run_pipeline(
     circuit: Circuit, passes: Sequence[Pass] = DEFAULT_PASSES,
+    *, verify: bool = False,
 ) -> tuple[Circuit, tuple[PassStats, ...]]:
-    """Apply `passes` in order, recording per-pass cost deltas."""
+    """Apply `passes` in order, recording per-pass cost deltas.
+
+    `verify=True` runs the `repro.netgen.analysis` structural verifier
+    (plus the pass's postconditions, matched by function name) after
+    every pass — the legacy-driver face of `PipelineSpec.run(verify=)`.
+    """
+    if verify:
+        from repro.netgen import analysis
+        analysis.verify_circuit(circuit, stage="lowered")
     stats = []
     for p in passes:
         before = ops(circuit)
         circuit = p(circuit)
+        name = getattr(p, "__name__", str(p))
+        if verify:
+            analysis.verify_circuit(circuit, after_pass=name, stage=name)
         stats.append(PassStats(
-            name=getattr(p, "__name__", str(p)), before=before,
+            name=name, before=before,
             after=ops(circuit)))
     return circuit, tuple(stats)

@@ -347,19 +347,40 @@ class PipelineSpec:
             fns.append(_build_step(step))
         return tuple(fns)
 
-    def run(self, circuit: Circuit, *, observe=None
+    def run(self, circuit: Circuit, *, observe=None,
+            verify: bool | None = None
             ) -> tuple[Circuit, tuple[PassStats, ...]]:
         """Apply the pipeline, recording per-pass stats. `observe`, if
         given, is called as observe(stage_name, circuit) for the lowered
         circuit and after every pass (the cost target's pass trace).
         With tracing enabled each pass runs under a `netgen.pass` span
         (nested in `netgen.pipeline`) carrying its before/after node
-        and term counts."""
+        and term counts.
+
+        `verify=True` checks the full `repro.netgen.analysis` invariant
+        suite at every pass boundary — structural well-formedness, the
+        pass's own postconditions, accumulator range proofs, and that
+        no pass *widened* a class score's value interval (an exact
+        rewrite may only tighten it). A violation raises
+        `analysis.VerificationError` naming the pass and the node, and
+        counts `netgen_verify_failures_total`. `verify=None` (default)
+        takes the `NETGEN_VERIFY` env var: on in tests/CI, off in prod
+        where per-pass sweeps would tax the compile path (the Session
+        driver still runs one pre-backend analysis regardless)."""
+        from repro.netgen import analysis
+
         tel = telemetry.get_registry()
+        check = analysis.strict_verify() if verify is None else bool(verify)
         with tel.span("netgen.pipeline", pipeline=self.spec_string(),
                       steps=len(self.steps)):
             if observe is not None:
                 observe("lowered", circuit)
+            envelope = None
+            if check:
+                verify_circuit = analysis.verify_circuit
+                verify_circuit(circuit, stage="lowered")
+                envelope = analysis.analyze_ranges(
+                    circuit).output_envelope(circuit)
             stats = []
             for step, fn in zip(self.steps, self.build()):
                 before = ops(circuit)
@@ -371,6 +392,20 @@ class PipelineSpec:
                     sp.set_attr("nodes_deleted", before.nodes - after.nodes)
                 stats.append(PassStats(
                     name=step.item_string(), before=before, after=after))
+                if check:
+                    stage = step.item_string()
+                    ranges, diags = analysis.analyze(
+                        circuit, after_pass=step.name, stage=stage,
+                        collect=True)
+                    if not diags:
+                        nxt = ranges.output_envelope(circuit)
+                        diags = analysis.check_envelope(
+                            envelope, nxt, stage=stage, collect=True)
+                        envelope = nxt
+                    if diags:
+                        tel.counter("netgen_verify_failures_total",
+                                    phase="pipeline").inc(len(diags))
+                        raise analysis.VerificationError(diags)
                 if observe is not None:
                     observe(step.item_string(), circuit)
         return circuit, tuple(stats)

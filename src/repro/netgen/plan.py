@@ -136,6 +136,16 @@ class ExecutionPlan:
         stacked = f"{self.n_models}x" if self.stacked else ""
         return f"{stacked}{self.n_inputs}-{shape} ({self.form})"
 
+    def verify(self, *, collect: bool = False):
+        """Certify the plan's invariants via `repro.netgen.analysis
+        .verify_plan`: layer chain shape agreement, packed lane-padding
+        exactness (padding rows all zero), bit-plane decomposition
+        losslessness, int32 kernel-accumulation safety at the actual
+        fan-in. Raises `analysis.VerificationError` on a violation;
+        `collect=True` returns the diagnostics instead."""
+        from repro.netgen.analysis import verify_plan
+        return verify_plan(self, collect=collect)
+
     # -- form conversions ----------------------------------------------------
 
     def pack(self) -> "ExecutionPlan":

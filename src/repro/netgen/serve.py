@@ -115,11 +115,13 @@ class CacheStats:
     compiles: int = 0          # actual full compilations
     store_hits: int = 0        # misses served by the persistent store
     load_seconds: float = 0.0  # wall-clock spent loading from the store
+    failures: int = 0          # misses whose compile raised (verify/backend)
 
     def row(self) -> str:
         return (f"cache: {self.hits} hits, {self.misses} misses "
-                f"({self.store_hits} from store), {self.evictions} "
-                f"evictions, {self.compile_seconds * 1e3:.1f} ms compiling, "
+                f"({self.store_hits} from store, {self.failures} failed), "
+                f"{self.evictions} evictions, "
+                f"{self.compile_seconds * 1e3:.1f} ms compiling, "
                 f"{self.load_seconds * 1e3:.1f} ms loading")
 
 
@@ -132,7 +134,7 @@ class CacheCounters:
     `snapshot()` is the dataclass read API everything else consumes."""
 
     __slots__ = ("scope", "hits", "misses", "evictions", "compiles",
-                 "store_hits", "compile_seconds", "load_seconds")
+                 "store_hits", "failures", "compile_seconds", "load_seconds")
 
     def __init__(self, scope: str | None = None,
                  registry: "telemetry.Registry | None" = None):
@@ -148,6 +150,12 @@ class CacheCounters:
             "netgen_cache_compiles_total", cache=self.scope)
         self.store_hits = tel.counter(
             "netgen_cache_store_hits_total", cache=self.scope)
+        # Misses that ended in a raised compile (e.g. a VerificationError
+        # from the pre-backend analysis): the third leg of the identity
+        # misses == compiles + store_hits + failures that the CI metrics
+        # gate (benchmarks/check_trace.py) holds per cache scope.
+        self.failures = tel.counter(
+            "netgen_cache_compile_failures_total", cache=self.scope)
         self.compile_seconds = tel.histogram(
             "netgen_cache_compile_seconds", cache=self.scope)
         self.load_seconds = tel.histogram(
@@ -160,6 +168,7 @@ class CacheCounters:
             evictions=int(self.evictions.value),
             compiles=int(self.compiles.value),
             store_hits=int(self.store_hits.value),
+            failures=int(self.failures.value),
             compile_seconds=float(self.compile_seconds.sum),
             load_seconds=float(self.load_seconds.sum))
 
@@ -301,6 +310,7 @@ class CompileCache:
                 if self.store is not None:
                     self.store.put(compiled)
         except BaseException as e:
+            self._counters.failures.inc()
             with self._lock:
                 self._inflight.pop(key, None)
             flight.error = e
@@ -444,6 +454,8 @@ class NetServer:
         self._lock = threading.RLock()
         self._versions: "OrderedDict[str, _Version]" = OrderedDict()
         self._multi: dict[tuple, tuple] = {}
+        # why a version set could not stack: {key: analysis.StackReport}
+        self._stack_reports: dict[tuple, object] = {}
         self._generation = 0   # bumped by register/unregister; guards _multi
         self._tel = telemetry.get_registry()
         self._scope = telemetry.new_scope("server")
@@ -495,6 +507,7 @@ class NetServer:
         with self._lock:
             self._versions[version] = _Version(version, compiled)
             self._multi.clear()
+            self._stack_reports.clear()
             self._generation += 1
         return compiled
 
@@ -502,7 +515,22 @@ class NetServer:
         with self._lock:
             del self._versions[version]
             self._multi.clear()
+            self._stack_reports.clear()
             self._generation += 1
+
+    def stack_report(self, names=None):
+        """Why a version set fell back to per-version dispatch: the
+        structured `repro.netgen.analysis.StackReport` recorded when
+        `_stacked_fn` diagnosed the set (None for sets that stacked
+        fine or were never requested). With `names`, the report for
+        that version set under the currently active mesh; without,
+        {version-name tuple: report} for every diagnosed set."""
+        from repro.parallel.sharding import active_mesh
+        with self._lock:
+            if names is None:
+                return {k[0]: r for k, r in self._stack_reports.items()}
+            return self._stack_reports.get(
+                (tuple(sorted(names)), active_mesh()))
 
     def versions(self) -> list[str]:
         with self._lock:
@@ -656,7 +684,14 @@ class NetServer:
         Compilation happens outside the lock; a generation check before
         storing guards against a concurrent (un)register racing the
         build — a stale fn must never enter `_multi`, or it would
-        silently serve old weights."""
+        silently serve old weights.
+
+        A set that cannot stack is no longer a silent fallback: the
+        static diagnosis (`repro.netgen.analysis.diagnose_stack`, or
+        the build error when compilation itself fails) is recorded as a
+        `StackReport` readable through `stack_report()` and counted in
+        `netgen_stack_incompat_total{reason}`."""
+        from repro.netgen import analysis
         from repro.parallel.sharding import active_mesh
 
         mesh = active_mesh()
@@ -667,22 +702,45 @@ class NetServer:
                     return self._multi[key]
                 generation = self._generation
                 circuits = [self._versions[v].compiled.circuit for v in names]
+            report = None
             if self._target.compile_multi is None:
                 entry = (None, False)
+                report = analysis.StackReport(
+                    compatible=False, n_versions=len(names),
+                    diagnostics=(analysis.Diagnostic(
+                        check="stack.target",
+                        message=f"target {self._target.name!r} has no "
+                                "multi-net dispatch"),))
             else:
-                try:
-                    plan = stack_plans([lower_circuit(c) for c in circuits])
-                    fn = compile_multi(
-                        plan, backend=self._target.name, tuner=self._tuner,
-                        **self._opts)
-                    sharded_fn = (None if mesh is None else
-                                  _shard_stacked(fn, mesh, self.slot_capacity))
-                    entry = ((sharded_fn, True) if sharded_fn is not None
-                             else (fn, False))
-                except (IrregularCircuitError, ValueError):
+                report = analysis.diagnose_stack(circuits)
+                if not report.compatible:
                     entry = (None, False)
+                else:
+                    try:
+                        plan = stack_plans(
+                            [lower_circuit(c) for c in circuits])
+                        fn = compile_multi(
+                            plan, backend=self._target.name,
+                            tuner=self._tuner, **self._opts)
+                        sharded_fn = (
+                            None if mesh is None else
+                            _shard_stacked(fn, mesh, self.slot_capacity))
+                        entry = ((sharded_fn, True) if sharded_fn is not None
+                                 else (fn, False))
+                        report = None
+                    except (IrregularCircuitError, ValueError) as e:
+                        entry = (None, False)
+                        report = analysis.StackReport(
+                            compatible=False, n_versions=len(names),
+                            diagnostics=(analysis.Diagnostic(
+                                check="stack.build", message=str(e)),))
             with self._lock:
                 if self._generation == generation:
                     self._multi[key] = entry
+                    if report is not None:
+                        self._stack_reports[key] = report
+                        self._tel.counter(
+                            "netgen_stack_incompat_total",
+                            server=self._scope, reason=report.reason).inc()
                     return entry
             # registry changed underneath the build: retry with fresh circuits

@@ -57,6 +57,7 @@ from pathlib import Path
 import numpy as np
 
 from repro.core.quantize import weights_digest
+from repro.netgen import analysis as _analysis
 from repro.netgen import telemetry
 from repro.netgen.backends.cost import CellCounts, CostReport, logic_cells
 from repro.netgen.frontend import _extract_weights, lower
@@ -142,6 +143,14 @@ class Artifact:
     ExecutionPlan datapath the predictor executes ("dense" or "packed"
     — see `repro.netgen.plan`); it persists with the artifact and
     `plan()` re-lowers the circuit into that exact form.
+
+    `analysis` is the range-analysis proof summary computed pre-backend
+    by `compile_resolved` (see `repro.netgen.analysis.proof_summary`):
+    how many accumulators were proven to fit their emitted widths, the
+    maximum |accumulator| and width, per-layer widths, slack bits, and
+    int32 kernel-accumulation safety. It persists in `meta.json` and
+    reloads with the artifact, so a warm-started process still knows
+    what was proven about the circuit it is serving.
     """
     digest: str
     pipeline: str              # canonical PipelineSpec string
@@ -155,6 +164,7 @@ class Artifact:
     source: str
     artifact: object
     plan_form: str | None = None   # "dense" | "packed" for callables
+    analysis: dict | None = None   # range-analysis proof summary
 
     @property
     def backend(self) -> str:
@@ -180,9 +190,12 @@ class Artifact:
         return self.artifact(x_uint8)
 
     def report(self) -> str:
-        """Per-pass savings table plus the final cell estimate."""
+        """Per-pass savings table, the final cell estimate, and the
+        range-analysis proof summary when one was recorded."""
         lines = [s.row() for s in self.pass_stats]
         lines.append(self.cost.row())
+        if self.analysis:
+            lines.append(_analysis.summary_row(self.analysis))
         return "\n".join(lines)
 
 
@@ -226,11 +239,29 @@ def compile_resolved(ws, thr: int, digest: str, spec: PipelineSpec,
             if trace is not None else None)
         t_passes = time.perf_counter()
 
+        # Pre-backend range analysis: prove every accumulator fits its
+        # inferred width before any backend bakes those widths into
+        # Verilog, cell counts, or kernel dtypes. Strict mode
+        # (NETGEN_VERIFY, on in tests/CI) raises on a violation; prod
+        # counts it and compiles anyway, matching the pipeline policy.
+        with tel.span("netgen.analysis"):
+            ranges, diags = _analysis.analyze(circuit, stage="pre-backend",
+                                              collect=True)
+            if diags:
+                tel.counter("netgen_verify_failures_total",
+                            phase="compile").inc(len(diags))
+                if _analysis.strict_verify():
+                    raise _analysis.VerificationError(diags)
+            summary = _analysis.proof_summary(circuit, ranges)
+        t_analysis = time.perf_counter()
+
         kwargs = dict(opts)
         if tgt.wants_pass_trace:
             kwargs["_pass_trace"] = tuple(trace)
         if tgt.wants_tuner:
             kwargs["_tuner"] = tuner
+        if tgt.wants_analysis:
+            kwargs["_analysis"] = ranges
         with tel.span("netgen.backend", target=tstring):
             raw = tgt.compile(circuit, **kwargs)
         t_backend = time.perf_counter()
@@ -240,7 +271,8 @@ def compile_resolved(ws, thr: int, digest: str, spec: PipelineSpec,
     timings = {
         "lower_s": t_lower - t0,
         "passes_s": t_passes - t_lower,
-        "backend_s": t_backend - t_passes,
+        "analysis_s": t_analysis - t_passes,
+        "backend_s": t_backend - t_analysis,
         "total_s": t_backend - t0,
     }
     plan_form = None
@@ -271,10 +303,11 @@ def compile_resolved(ws, thr: int, digest: str, spec: PipelineSpec,
         key=artifact_key(digest, spec, tstring),
         circuit=circuit,
         pass_stats=stats,
-        cost=logic_cells(circuit),
+        cost=logic_cells(circuit, analysis=ranges),
         timings=timings,
         source="compile",
         artifact=raw,
+        analysis=summary,
     )
 
 
@@ -396,6 +429,7 @@ class ArtifactStore:
                 "cost": artifact.cost.as_dict(),
                 "timings": artifact.timings,
                 "plan_form": artifact.plan_form,
+                "analysis": artifact.analysis,
                 "created_unix": time.time(),
             }
             if artifact.kind == "text":
@@ -534,6 +568,7 @@ class ArtifactStore:
             source="store",
             artifact=raw,
             plan_form=meta.get("plan_form"),
+            analysis=meta.get("analysis"),
         )
 
 
@@ -613,8 +648,12 @@ class Session:
                 self._counters.store_hits.inc()
                 return art
         t0 = time.perf_counter()
-        art = compile_resolved(ws, thr, digest, spec, tgt, opts,
-                               tuner=self.tuner)
+        try:
+            art = compile_resolved(ws, thr, digest, spec, tgt, opts,
+                                   tuner=self.tuner)
+        except BaseException:
+            self._counters.failures.inc()
+            raise
         self._counters.compiles.inc()
         self._counters.compile_seconds.observe(time.perf_counter() - t0)
         if self.store is not None:

@@ -40,10 +40,14 @@ class Target:
     dispatch (a stacked `repro.netgen.plan.ExecutionPlan` plus the same
     declared opts -> callable); `wants_pass_trace` asks the Session
     driver to hand the pipeline's per-pass circuit trace to `compile`
-    as `_pass_trace`; and `wants_tuner` asks every compile entry point
+    as `_pass_trace`; `wants_tuner` asks every compile entry point
     (single and multi) to receive the caller's `repro.netgen.tune
     .KernelTuner` as `_tuner` — how `Session(tune_store=...)` threads
-    persisted tuning records into `tuned=true` kernel builds."""
+    persisted tuning records into `tuned=true` kernel builds; and
+    `wants_analysis` asks the driver to hand its pre-backend
+    `repro.netgen.analysis.RangeAnalysis` to `compile` as `_analysis`,
+    so width-consuming backends (verilog, cost) emit the proven widths
+    instead of re-deriving them."""
     name: str
     kind: str
     description: str
@@ -52,6 +56,7 @@ class Target:
     compile_multi: Callable | None = None
     wants_pass_trace: bool = False
     wants_tuner: bool = False
+    wants_analysis: bool = False
 
     @property
     def callable(self) -> bool:
@@ -199,8 +204,9 @@ register_target(Target(
     name="verilog", kind="text",
     description="the paper's clockless combinational Verilog module",
     compile=_compile_verilog,
-    opts=(("module_name", str), ("style", str), ("addend", bool))))
+    opts=(("module_name", str), ("style", str), ("addend", bool)),
+    wants_analysis=True))
 register_target(Target(
     name="cost", kind="report",
     description="logic-cell estimate of the circuit vs paper Figure 7",
-    compile=_compile_cost, wants_pass_trace=True))
+    compile=_compile_cost, wants_pass_trace=True, wants_analysis=True))

@@ -55,6 +55,7 @@ Instrumented span tree (what a trace of one request lifecycle nests):
       netgen.lower
       netgen.pipeline       pipeline string
         netgen.pass         per pass: terms/nodes before -> after
+      netgen.analysis       pre-backend range analysis + proof summary
       netgen.backend
     netgen.engine.batch     one formed batch (engine, versions, rows) —
                             opened on the batcher thread, so it roots
@@ -75,6 +76,16 @@ gates latency count == request count. The online engine
 `netgen_engine_queue_wait_seconds` / `netgen_engine_batch_rows`
 histograms — queue wait is recorded separately from service time, so
 SLO analysis can split time-in-queue from time-on-kernel.
+
+Static-analysis metrics (`repro.netgen.analysis`):
+`netgen_verify_failures_total{phase=pipeline|compile}` counts invariant
+violations the verifier observed (prod compiles count-and-continue;
+strict mode raises instead — see NETGEN_VERIFY);
+`netgen_tune_rejected_total{tuner}` counts tile candidates the tuner
+skipped as statically illegal or duplicate kernels, without spending a
+measurement; `netgen_stack_incompat_total{server,reason}` counts
+version sets the NetServer diagnosed as unstackable, labelled with the
+first failing check (e.g. stack.depth, stack.classes, stack.build).
 """
 from __future__ import annotations
 

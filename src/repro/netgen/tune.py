@@ -116,11 +116,13 @@ class TuneStats:
     store_hits: int = 0        # records loaded from the persistent store
     tunes: int = 0             # full searches actually performed
     measurements: int = 0      # individual candidate timings taken
+    rejected: int = 0          # candidates statically rejected, unmeasured
     measure_seconds: float = 0.0
 
     def row(self) -> str:
         return (f"tune: {self.hits} hits, {self.store_hits} store hits, "
                 f"{self.tunes} tunes ({self.measurements} measurements, "
+                f"{self.rejected} rejected, "
                 f"{self.measure_seconds * 1e3:.1f} ms measuring)")
 
 
@@ -199,6 +201,8 @@ class KernelTuner:
             "netgen_tune_searches_total", tuner=scope)
         self._c_measurements = self._tel.counter(
             "netgen_tune_measurements_total", tuner=scope)
+        self._c_rejected = self._tel.counter(
+            "netgen_tune_rejected_total", tuner=scope)
         self._h_measure = self._tel.histogram(
             "netgen_tune_measure_seconds", tuner=scope)
 
@@ -211,6 +215,7 @@ class KernelTuner:
             store_hits=int(self._c_store_hits.value),
             tunes=int(self._c_tunes.value),
             measurements=int(self._c_measurements.value),
+            rejected=int(self._c_rejected.value),
             measure_seconds=float(self._h_measure.sum))
 
     def record_for(self, key: str) -> TuneRecord | None:
@@ -224,7 +229,9 @@ class KernelTuner:
 
     def get_or_tune(self, key_fields, candidates: Sequence[Mapping],
                     measure: Callable[[Mapping], float], *,
-                    reps: int = 2) -> dict:
+                    reps: int = 2,
+                    legal: Callable[[Mapping], str | None] | None = None,
+                    ) -> dict:
         """The winning parameter dict for this problem — from memory,
         then the store, then by timing every candidate.
 
@@ -235,6 +242,17 @@ class KernelTuner:
         its wall-clock seconds; the driver takes best-of-`reps` after
         one untimed warmup call (jit tracing must not pollute the
         measurement).
+
+        `legal(params)`, when given, is a static legality check (see
+        `repro.netgen.analysis.tile_legality`): it returns None for a
+        candidate worth measuring or a reason string for one that is
+        statically illegal / a duplicate kernel launch — rejected
+        candidates are skipped without spending a measurement and
+        counted in `netgen_tune_rejected_total`. The problem key is
+        computed over the FULL declared grid either way, so adding a
+        legality filter does not invalidate persisted records. All
+        candidates rejected is an error (the grid cannot express a
+        launchable kernel).
         """
         if not candidates:
             raise ValueError("no tuning candidates")
@@ -268,11 +286,26 @@ class KernelTuner:
                 rec = lookup()
             if rec is not None:
                 return dict(rec.best)
+            kept, rejected = list(candidates), []
+            if legal is not None:
+                kept = []
+                for cand in candidates:
+                    reason = legal(cand)
+                    (kept if reason is None else rejected).append(
+                        cand if reason is None else (cand, reason))
+                if rejected:
+                    self._c_rejected.inc(len(rejected))
+                if not kept:
+                    first = rejected[0][1]
+                    raise ValueError(
+                        f"all {len(candidates)} tuning candidates are "
+                        f"statically illegal (first: {first})")
             t0 = time.perf_counter()
             with self._tel.span("netgen.tune.search", key=key[:12],
-                                candidates=len(candidates)) as sp:
+                                candidates=len(kept),
+                                rejected=len(rejected)) as sp:
                 table = []
-                for cand in candidates:
+                for cand in kept:
                     cand = dict(cand)
                     measure(cand)                  # warmup (trace/compile)
                     best = min(measure(cand) for _ in range(max(1, reps)))

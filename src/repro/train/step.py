@@ -9,8 +9,6 @@ microbatch are remat'ed (`nothing_saveable`) over the layer scan.
 """
 from __future__ import annotations
 
-import functools
-
 import jax
 import jax.numpy as jnp
 

@@ -23,11 +23,10 @@ import dataclasses
 import time
 
 import jax
-import numpy as np
 
 from repro.checkpoint import ckpt as ckpt_lib
 from repro.data import pipeline
-from repro.models.base import ArchConfig, ShapeConfig, tree_init, tree_sds
+from repro.models.base import ArchConfig, ShapeConfig, tree_init
 from repro.optim import adamw
 from repro.train import step as step_lib
 

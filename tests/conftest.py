@@ -1,0 +1,11 @@
+"""Test-suite defaults.
+
+Strict verification is opt-in in production (`NETGEN_VERIFY` unset ->
+off, compiles count `netgen_verify_failures_total` and proceed) but
+every test run should catch a broken rewrite immediately, so the suite
+turns it on unless the environment already pinned a value (tests that
+need the permissive path set `verify=False` explicitly).
+"""
+import os
+
+os.environ.setdefault("NETGEN_VERIFY", "1")

@@ -9,7 +9,6 @@ import os
 import numpy as np
 import pytest
 import jax
-import jax.numpy as jnp
 
 from repro import configs
 from repro.checkpoint import ckpt as ckpt_lib

@@ -1,7 +1,6 @@
 """binary_matvec kernel vs jnp oracle: shape/dtype sweeps + properties."""
 import numpy as np
 import pytest
-import jax
 import jax.numpy as jnp
 try:
     from hypothesis import given, settings, strategies as st

@@ -1,8 +1,6 @@
 """Additional layer-level correctness tests: rotary embeddings vs naive
 references, norms, and W8-specialized serving equivalence."""
 import numpy as np
-import pytest
-import jax
 import jax.numpy as jnp
 try:
     from hypothesis import given, settings, strategies as st

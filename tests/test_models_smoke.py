@@ -1,7 +1,6 @@
 """Per-architecture smoke tests: reduced configs, one forward + one
 train-gradient step + a prefill->decode consistency check on CPU.
 Asserts output shapes and finiteness (no NaNs/Infs)."""
-import dataclasses
 
 import numpy as np
 import pytest

@@ -9,7 +9,7 @@ import jax.numpy as jnp
 
 from repro.core import quantize
 from repro import netgen
-from repro.netgen.plan import PACK_LANES, lower_circuit, stack_plans
+from repro.netgen.plan import lower_circuit, stack_plans
 
 from _netgen_helpers import images, random_net
 

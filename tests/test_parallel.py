@@ -1,6 +1,5 @@
 """Sharding-rule unit tests + MoE dispatch correctness + property tests."""
 import numpy as np
-import pytest
 import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
