@@ -13,13 +13,20 @@ Measures, in the `bench_throughput` CSV idiom:
     serving each compiled predictor individually, for M in 1..8 and
     batch sizes 1..1024, with a bit-exactness check on every
     configuration
-  * the pallas activation/weight datapaths (ISSUE 4 + 5): dense vs
+  * the pallas activation/weight datapaths (ISSUE 4 + 5 + 9): dense vs
     `pallas[packed=true]` (end-to-end bit-packed activations) vs
     `pallas[planes=true]` (fully bit-packed: weights decomposed into
-    popcount-accumulated signed bit-planes), measured on the
-    paper-sized 784-500-10 net under --full (bit-exact asserted
-    against the jnp oracle) — the ISSUE-5 acceptance row: planes must
-    beat the PR-4 packed path
+    popcount-accumulated signed bit-planes) vs `pallas[fusednet=true]`
+    (the whole-net megakernel: every layer in ONE persistent launch),
+    measured on the paper-sized 784-500-10 net under --full (bit-exact
+    asserted against the jnp oracle) — the ISSUE-5 acceptance row
+    (planes must beat the PR-4 packed path) and the ISSUE-9 one
+    (fusednet must beat the per-layer planes chain by >= 1.2x)
+  * the roofline gap (ISSUE 9): XLA `jit_cost` bytes/flops of the
+    fusednet megakernel vs its measured time — the bytes-bound time at
+    an assumed HBM bandwidth becomes the denominator of a tracked
+    gap-to-hardware ratio (`netgen_roofline_*` rows; enormous in
+    interpret mode on CPU, the point is the trend)
   * the persistent autotuner (ISSUE 5): `pallas[tuned=true]` grid
     search wall-clock, the winning (form, bm, bn, bkw), and the tuned
     predictor's timing next to the fixed-default forms
@@ -44,6 +51,12 @@ import tempfile
 import time
 
 import numpy as np
+
+# Roofline denominator: assumed HBM bandwidth of a TPU-class part. The
+# bytes-bound time `bytes_accessed / _HBM_GBPS` is a hardware floor, not
+# a CPU-interpret expectation — the measured/bound ratio it yields is
+# the tracked gap-to-hardware number (ROADMAP item 4).
+_HBM_GBPS = 900.0
 
 
 def _nets(m: int, sizes, seed: int = 0):
@@ -107,7 +120,12 @@ def run(full: bool = False, json_path: str | None = None) -> list[str]:
     results["cache_stats"] = vars(cache.stats())
     rows.append(f"netgen_serve_cold_compile,{cold_s*1e6:.0f},{1.0/cold_s:.1f}")
     rows.append(f"netgen_serve_warm_acquire,{warm_s*1e6:.2f},{1.0/warm_s:.0f}")
-    rows.append(f"netgen_serve_warm_vs_cold_speedup,{warm_s*1e6:.2f},{speedup:.0f}")
+    # ratio rows carry no us_per_call of their own (it used to duplicate
+    # the numerator row's): derived holds the ratio AND its measurement
+    # pair, so the row is self-contained in BENCH_netgen.json
+    rows.append(f"netgen_serve_warm_vs_cold_speedup,0,"
+                f"ratio={speedup:.1f};cold_us={cold_s*1e6:.0f};"
+                f"warm_us={warm_s*1e6:.2f}")
 
     # -- cold process vs warm store (persisted-artifact load) ----------------
     with tempfile.TemporaryDirectory() as store_dir:
@@ -137,8 +155,10 @@ def run(full: bool = False, json_path: str | None = None) -> list[str]:
                     f"{1.0/cold_process_s:.1f}")
         rows.append(f"netgen_serve_warm_store,{warm_store_s*1e6:.0f},"
                     f"{1.0/warm_store_s:.1f}")
-        rows.append(f"netgen_serve_store_speedup,{warm_store_s*1e6:.0f},"
-                    f"{cold_process_s/warm_store_s:.1f}")
+        rows.append(f"netgen_serve_store_speedup,0,"
+                    f"ratio={cold_process_s/warm_store_s:.1f};"
+                    f"cold_process_us={cold_process_s*1e6:.0f};"
+                    f"warm_store_us={warm_store_s*1e6:.0f}")
 
     # -- Figure-7-style logic-cell estimates (cost target) -------------------
     cost = netgen.compile_artifact(
@@ -157,14 +177,20 @@ def run(full: bool = False, json_path: str | None = None) -> list[str]:
              "packed": netgen.compile_artifact(
                  pnet, target="pallas[packed=true]"),
              "planes": netgen.compile_artifact(
-                 pnet, target="pallas[planes=true]")}
+                 pnet, target="pallas[planes=true]"),
+             "fusednet": netgen.compile_artifact(
+                 pnet, target="pallas[fusednet=true]")}
     want = np.asarray(oracle(px))
     results["packed"] = {"sizes": list(psizes), "batch": pb}
     for form, art in forms.items():
         got = np.asarray(art(px))                    # warm + exactness
         assert np.array_equal(got, want), f"{form} diverged from jnp oracle"
-        dt = _timed_mean(f"pallas_{form}",
-                         lambda art=art: np.asarray(art(px)), reps)
+        # best-of-3 means: the fusednet_vs_planes ratio below is a hard
+        # acceptance gate, so each form gets the low-noise protocol the
+        # telemetry-overhead section already uses
+        dt = min(_timed_mean(f"pallas_{form}",
+                             lambda art=art: np.asarray(art(px)), reps)
+                 for _ in range(3))
         results["packed"][form] = {
             "us_per_batch": dt * 1e6, "preds_per_s": pb / dt,
             "plan_form": art.plan_form, "exact_vs_jnp": True,
@@ -181,13 +207,28 @@ def run(full: bool = False, json_path: str | None = None) -> list[str]:
     results["packed"]["planes_vs_dense_speedup"] = (
         results["packed"]["dense"]["us_per_batch"]
         / results["packed"]["planes"]["us_per_batch"])
-    rows.append(f"netgen_serve_planes_vs_packed_speedup,"
-                f"{results['packed']['planes']['us_per_batch']:.0f},"
-                f"{planes_vs_packed:.2f}")
-    if full:    # the acceptance claim is about the paper-sized net; the
+    rows.append(f"netgen_serve_planes_vs_packed_speedup,0,"
+                f"ratio={planes_vs_packed:.2f};"
+                f"packed_us={results['packed']['packed']['us_per_batch']:.0f};"
+                f"planes_us={results['packed']['planes']['us_per_batch']:.0f}")
+    # ISSUE 9 acceptance: the whole-net megakernel beats the per-layer
+    # planes chain (one launch + zero HBM round-trips for activations
+    # vs depth launches) by >= 1.2x on the paper net
+    fusednet_vs_planes = (results["packed"]["planes"]["us_per_batch"]
+                          / results["packed"]["fusednet"]["us_per_batch"])
+    results["packed"]["fusednet_vs_planes_speedup"] = fusednet_vs_planes
+    rows.append(
+        f"netgen_serve_fusednet_vs_planes_speedup,0,"
+        f"ratio={fusednet_vs_planes:.2f};"
+        f"planes_us={results['packed']['planes']['us_per_batch']:.0f};"
+        f"fusednet_us={results['packed']['fusednet']['us_per_batch']:.0f}")
+    if full:    # the acceptance claims are about the paper-sized net; the
         # fast-mode net is small enough for timing noise to flip ordering
         assert planes_vs_packed > 1.0, (
             f"planes datapath did not beat packed: {planes_vs_packed:.2f}x")
+        assert fusednet_vs_planes >= 1.2, (
+            f"fusednet megakernel did not beat the per-layer planes "
+            f"chain by 1.2x: {fusednet_vs_planes:.2f}x")
 
     # -- persistent autotuner (ISSUE 5): search cost + tuned predictor ------
     tune_sess = netgen.Session()        # in-memory tuner (default_tuner)
@@ -329,7 +370,7 @@ def run(full: bool = False, json_path: str | None = None) -> list[str]:
         f"telemetry tracing overhead too high: on={dt_on*1e6:.1f}us "
         f"off={dt_off*1e6:.1f}us ({overhead*100:.1f}%)")
 
-    # -- roofline inputs: XLA cost analysis of the compiled oracle ----------
+    # -- roofline: XLA cost analysis vs measured (ISSUE 9) ------------------
     prof = telemetry.jit_cost(oracle.artifact, (pb, psizes[0]))
     if prof is not None:
         results["roofline_jit"] = {
@@ -337,6 +378,31 @@ def run(full: bool = False, json_path: str | None = None) -> list[str]:
         rows.append(f"netgen_serve_jit_cost_jnp,0,"
                     f"flops={prof['flops']:.0f};"
                     f"bytes={prof['bytes_accessed']:.0f}")
+    # the megakernel's gap-to-hardware row: measured time vs the
+    # bytes-bound floor its jit_cost implies at an assumed HBM
+    # bandwidth — persisted in BENCH_netgen.json so successive PRs
+    # track the ratio (interpret mode is orders of magnitude off the
+    # floor; the ratio's trend is the signal, not its magnitude)
+    fused_fn = forms["fusednet"].artifact
+    prof_f = telemetry.jit_cost(
+        getattr(fused_fn, "jitted", fused_fn), (pb, psizes[0]))
+    if prof_f is not None:
+        measured_us = results["packed"]["fusednet"]["us_per_batch"]
+        bound_us = prof_f["bytes_accessed"] / (_HBM_GBPS * 1e9) * 1e6
+        ratio = measured_us / bound_us if bound_us > 0 else float("inf")
+        results["roofline"] = {
+            "target": "pallas[fusednet=true]", "sizes": list(psizes),
+            "batch": pb, "flops": prof_f["flops"],
+            "bytes_accessed": prof_f["bytes_accessed"],
+            "hbm_gbps_assumed": _HBM_GBPS,
+            "bytes_bound_us": bound_us,
+            "measured_us": measured_us,
+            "measured_vs_bound": ratio,
+        }
+        rows.append(f"netgen_roofline_fusednet_b{pb},{measured_us:.0f},"
+                    f"bound_us={bound_us:.2f};ratio={ratio:.0f};"
+                    f"flops={prof_f['flops']:.0f};"
+                    f"bytes={prof_f['bytes_accessed']:.0f}")
 
     results["telemetry"] = telemetry.summary()
 

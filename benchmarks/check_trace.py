@@ -22,11 +22,20 @@ telemetry invariants:
                 netgen_requests_total (every dispatch observed exactly
                 one per-version service time).
 
+A third check spans BOTH files (`check_launches`): every
+`netgen.kernel` span dispatched on the fusednet megakernel must record
+exactly ONE Pallas launch (`launches` attr == 1 — the datapath's whole
+point), and `netgen_kernel_launches_total{form="fusednet"}` must cover
+every such dispatch round (warm-up and direct predictor calls may
+launch outside a serving span, so the counter bounds the span count
+from above). Skipped when the trace carries no fusednet traffic.
+
   PYTHONPATH=src python benchmarks/check_trace.py DIR \\
       [--compile-budget-s 300]
 
 The checks are importable pure functions (`check_spans`,
-`check_metrics`) so the telemetry tests exercise the same gate CI runs.
+`check_metrics`, `check_launches`) so the telemetry tests exercise the
+same gate CI runs.
 """
 from __future__ import annotations
 
@@ -183,6 +192,37 @@ def check_metrics(samples: list[tuple[str, dict, float]]) -> list[str]:
     return errors
 
 
+def check_launches(spans: list[dict],
+                   samples: list[tuple[str, dict, float]]) -> list[str]:
+    """The megakernel's launch-count contract (empty list == pass): a
+    fusednet dispatch round is ONE Pallas launch. Each `netgen.kernel`
+    span with attrs.form == "fusednet" must carry launches == 1, and
+    the `netgen_kernel_launches_total{form="fusednet"}` counter must be
+    at least the number of such rounds (predictor warm-ups launch
+    outside any serving span, so equality is not required). No-op for
+    traces without fusednet traffic."""
+    errors: list[str] = []
+    rounds = [rec for rec in spans
+              if rec.get("name") == "netgen.kernel"
+              and (rec.get("attrs") or {}).get("form") == "fusednet"]
+    for rec in rounds:
+        launches = (rec.get("attrs") or {}).get("launches")
+        if launches != 1:
+            errors.append(
+                f"fusednet dispatch round (span_id="
+                f"{rec.get('span_id')}) records launches={launches!r}, "
+                f"expected exactly 1")
+    total = sum(v for name, labels, v in samples
+                if name == "netgen_kernel_launches_total"
+                and labels.get("form") == "fusednet")
+    if rounds and total < len(rounds):
+        errors.append(
+            f"{len(rounds)} fusednet dispatch rounds but "
+            f"netgen_kernel_launches_total{{form=fusednet}} is only "
+            f"{total:.0f}")
+    return errors
+
+
 def check_trace_dir(trace_dir, *, compile_budget_s: float = 300.0
                     ) -> list[str]:
     """All invariant violations for one --trace output directory."""
@@ -214,6 +254,7 @@ def check_trace_dir(trace_dir, *, compile_budget_s: float = 300.0
                 errors.append(f"{jsonl}:{i}: not valid JSON")
         errors += check_spans(spans, compile_budget_s=compile_budget_s,
                               require=require)
+        errors += check_launches(spans, samples)
     return errors
 
 

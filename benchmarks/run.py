@@ -12,6 +12,14 @@ Verilog emission); default is a fast sanity pass. --fake-devices N
 spreads the sharded serving rows over N faked host devices (must be
 set before jax initializes, hence a flag here). --serve-json
 additionally writes the serve suite's detailed measurement dict.
+
+Row conventions: ratio rows (`*_speedup`) put 0 in us_per_call and
+carry `ratio=..;<num>_us=..;<den>_us=..` in derived — the ratio's own
+measurement pair, self-contained in BENCH_netgen.json. The serve suite
+emits one `netgen_serve_pallas_<form>_b256` row per datapath (dense /
+packed / planes / fusednet) plus `netgen_roofline_fusednet_b256`:
+us_per_call is the measured time, derived holds the jit_cost-derived
+bytes-bound floor and the measured/bound ratio.
 """
 from __future__ import annotations
 

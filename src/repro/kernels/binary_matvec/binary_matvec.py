@@ -33,6 +33,15 @@ TPU), accumulating into the output block, which stays resident in VMEM
 across the K sweep (revisited blocks are not re-fetched). Block sizes
 are keyword knobs on every entry point so `repro.netgen.tune` can
 search them per workload instead of trusting the defaults.
+
+A fourth datapath, `binary_forward_planes`, fuses an ENTIRE planes-form
+network — every layer's bit-plane weights resident in VMEM at once —
+into one persistent launch: binarize+pack on entry, per-layer popcount
+accumulate, strict step + repack *in-register* between layers (the
+inter-layer activations never touch HBM), argmax fused at the end. The
+grid runs over batch tiles only (and a leading model axis when the
+input is a stacked (M, B, K) block), so Pallas's grid pipeline
+double-buffers the input DMA while weights stay put.
 """
 from __future__ import annotations
 
@@ -228,6 +237,148 @@ def binary_matmul_planes(
         interpret=interpret,
     )(xpp, posp, negp)
     return out[:B, :N]
+
+
+# --------------------------------------------------------------------------
+# whole-net megakernel: every layer fused into one persistent launch
+# --------------------------------------------------------------------------
+
+def _pack_bits_block(bits: jnp.ndarray, words: int) -> jnp.ndarray:
+    """In-register repack: bool (bm, n) -> uint32 words (bm, words),
+    zero-padding n up to words*32 (strict step: padding bits are 0)."""
+    bm, n = bits.shape
+    total = words * 32
+    if n < total:
+        bits = jnp.concatenate(
+            [bits, jnp.zeros((bm, total - n), bits.dtype)], axis=1)
+    shifts = jnp.arange(32, dtype=jnp.uint32)
+    b32 = bits.reshape(bm, words, 32).astype(jnp.uint32)
+    return jnp.sum(b32 << shifts[None, None, :], axis=-1, dtype=jnp.uint32)
+
+
+def _forward_planes_kernel(x_ref, *refs, threshold: int, layers, n_classes: int,
+                           bkw, stacked: bool):
+    """One batch tile through the whole net. x: (bm, K) raw uint8 (leading
+    model axis of size 1 when stacked); per layer l, refs hold pos_l then
+    neg_l uint32 (P_l, W_l, N_l) bit-planes, fully resident; o: (bm,) int32
+    predicted class. Activations live in registers/VMEM for the whole
+    sweep — the only HBM traffic per grid step is the input tile and the
+    (bm,) prediction vector."""
+    o_ref = refs[-1]
+    plane_refs = refs[:-1]
+    x = x_ref[...]
+    if stacked:
+        x = x[0]
+    a = _pack_bits_block(x.astype(jnp.int32) > threshold, layers[0][1])
+    acc = None
+    for li, (P, W, N, out_words) in enumerate(layers):
+        pos = plane_refs[2 * li][...]
+        neg = plane_refs[2 * li + 1][...]
+        if stacked:
+            pos, neg = pos[0], neg[0]
+        acc = jnp.zeros((a.shape[0], N), jnp.int32)
+        ck = min(bkw, W) if bkw else W
+        for c in range(0, W, ck):       # static lane tiling over words
+            xw = a[:, c:c + ck]
+            pw = pos[:, c:c + ck]
+            nw = neg[:, c:c + ck]
+            for b in range(P):          # static unroll: P is tiny
+                cp = jax.lax.population_count(xw[:, :, None] & pw[b][None])
+                cn = jax.lax.population_count(xw[:, :, None] & nw[b][None])
+                d = jnp.sum(cp.astype(jnp.int32) - cn.astype(jnp.int32),
+                            axis=1)
+                acc = acc + (d << b)
+        if out_words is not None:       # strict step + repack, in-register
+            a = _pack_bits_block(acc > 0, out_words)
+    # Slice to the real class count before argmax: a zero-padded class
+    # column must never win when every real score is negative.
+    out = jnp.argmax(acc[:, :n_classes], axis=-1).astype(jnp.int32)
+    o_ref[...] = out[None, :] if stacked else out
+
+
+@functools.partial(
+    jax.jit, static_argnames=("threshold", "n_classes", "bm", "bkw",
+                              "interpret"))
+def binary_forward_planes(
+    x: jnp.ndarray,
+    *planes: jnp.ndarray,
+    threshold: int,
+    n_classes: int,
+    bm: int = 32,
+    bkw: int | None = 8,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    """Whole-net forward in ONE pallas_call: raw uint8 images -> class ids.
+
+    x: uint8 (B, K), or (M, B, K) for a stacked M-model plan. `planes`
+    interleaves pos_0, neg_0, pos_1, neg_1, ... — uint32
+    (P_l, W_l, N_l) packed bit-planes per layer ((M, P_l, W_l, N_l)
+    when stacked), as produced by `ExecutionPlan.megakernel_view()`:
+    each hidden fan_out is pre-padded so N_l == W_{l+1} * 32 and the
+    in-kernel repack needs no bit shuffling. Returns int32 (B,) /
+    (M, B).
+
+    Grid is (B/bm,) (stacked: (M, B/bm), batch innermost so one model's
+    weights stay resident across its batch sweep); the grid pipeline
+    double-buffers the input-tile DMA against compute. `bkw` chunks the
+    word axis of each popcount (bounding the (bm, ck, N) intermediate);
+    None means whole-width.
+    """
+    assert planes and len(planes) % 2 == 0, len(planes)
+    stacked = x.ndim == 3
+    if stacked:
+        M, B, K = x.shape
+    else:
+        B, K = x.shape
+    pairs = list(zip(planes[0::2], planes[1::2]))
+    layers = []
+    for li, (pos, neg) in enumerate(pairs):
+        assert pos.shape == neg.shape, (li, pos.shape, neg.shape)
+        assert pos.ndim == (4 if stacked else 3), (li, pos.shape)
+        P, W, N = pos.shape[-3:]
+        if li + 1 < len(pairs):
+            out_words = pairs[li + 1][0].shape[-2]
+            assert N == out_words * 32, (li, N, out_words)
+        else:
+            out_words = None
+            assert 1 <= n_classes <= N, (n_classes, N)
+        layers.append((P, W, N, out_words))
+    assert layers[0][1] * 32 >= K, (layers[0], K)
+    bm = min(bm, _rup(B))
+    Bp = _pad_to(B, bm)
+    kern = functools.partial(
+        _forward_planes_kernel, threshold=threshold, layers=tuple(layers),
+        n_classes=n_classes, bkw=bkw, stacked=stacked)
+    if stacked:
+        xp = jnp.zeros((M, Bp, K), jnp.uint8).at[:, :B].set(
+            x.astype(jnp.uint8))
+        in_specs = [pl.BlockSpec((1, bm, K), lambda m, i: (m, i, 0))]
+        for P, W, N, _ in layers:
+            spec = pl.BlockSpec((1, P, W, N), lambda m, i: (m, 0, 0, 0))
+            in_specs += [spec, spec]
+        out = pl.pallas_call(
+            kern,
+            grid=(M, Bp // bm),
+            in_specs=in_specs,
+            out_specs=pl.BlockSpec((1, bm), lambda m, i: (m, i)),
+            out_shape=jax.ShapeDtypeStruct((M, Bp), jnp.int32),
+            interpret=interpret,
+        )(xp, *planes)
+        return out[:, :B]
+    xp = jnp.zeros((Bp, K), jnp.uint8).at[:B].set(x.astype(jnp.uint8))
+    in_specs = [pl.BlockSpec((bm, K), lambda i: (i, 0))]
+    for P, W, N, _ in layers:
+        spec = pl.BlockSpec((P, W, N), lambda i: (0, 0, 0))
+        in_specs += [spec, spec]
+    out = pl.pallas_call(
+        kern,
+        grid=(Bp // bm,),
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((bm,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((Bp,), jnp.int32),
+        interpret=interpret,
+    )(xp, *planes)
+    return out[:B]
 
 
 def _rup(x: int, m: int = 8) -> int:

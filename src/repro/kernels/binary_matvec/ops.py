@@ -31,6 +31,16 @@ def binary_matmul_planes(xp: jnp.ndarray, pos: jnp.ndarray,
     return _k.binary_matmul_planes(xp, pos, neg, **kw)
 
 
+def binary_forward_planes(x: jnp.ndarray, *planes: jnp.ndarray,
+                          **kw) -> jnp.ndarray:
+    """Whole-net megakernel: raw uint8 (B, K) / (M, B, K) through every
+    layer's resident bit-planes in ONE Pallas launch (binarize+pack,
+    popcount accumulate, in-register step+repack, fused argmax). Plane
+    arrays come from `ExecutionPlan.megakernel_view()`."""
+    kw.setdefault("interpret", _INTERPRET)
+    return _k.binary_forward_planes(x, *planes, **kw)
+
+
 def pack_bits(x: jnp.ndarray) -> jnp.ndarray:
     """Pack binary activations 32-per-uint32 (pads K up to a /32 multiple)."""
     b, k = x.shape

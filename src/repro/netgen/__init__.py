@@ -84,8 +84,16 @@ matrix is decomposed into packed signed bit-planes
 popcount in `binary_matmul_planes` — both operands travel as bits,
 with the plane count set by the layer's actual post-pass weight
 magnitudes. `plan.stack_plans` joins M compatible plans along a model
-axis for the serving layer. Artifacts record the compiled form
-(`artifact.plan_form`) and re-derive the plan via `artifact.plan()`.
+axis for the serving layer. `pallas[fusednet=true]` is the planes form
+taken to its limit: `plan.megakernel_view()` flattens the whole net
+(hidden fan_outs pre-padded to the next layer's word width) and
+`binary_forward_planes` runs EVERY layer in one persistent Pallas
+launch — weights resident in VMEM, strict step + repack in-register
+between layers (inter-layer activations never touch HBM), argmax fused
+— one launch per forward instead of one per layer. Artifacts record
+the compiled form (`artifact.plan_form`), the datapath
+(`artifact.datapath`) and launch count (`artifact.launches_per_call`),
+and re-derive the plan via `artifact.plan()`.
 
 Autotuning (`repro.netgen.tune`): `pallas[tuned=true]` grid-searches
 the kernel block sizes (bm, bn, bkw) — and the datapath form, unless

@@ -90,11 +90,12 @@ from repro.netgen.plan import (
 )
 
 __all__ = [
-    "Diagnostic", "RangeAnalysis", "StackReport", "VerificationError",
-    "analyze", "analyze_ranges", "check_envelope", "check_observed",
-    "check_ranges", "diagnose_stack", "lint_store", "proof_summary",
-    "strict_verify", "summary_row", "tile_legality", "tile_report",
-    "verify_circuit", "verify_plan",
+    "Diagnostic", "FUSEDNET_VMEM_BYTES", "RangeAnalysis", "StackReport",
+    "VerificationError", "analyze", "analyze_ranges", "check_envelope",
+    "check_observed", "check_ranges", "diagnose_stack",
+    "fusednet_vmem_bytes", "lint_store", "proof_summary", "strict_verify",
+    "summary_row", "tile_legality", "tile_report", "verify_circuit",
+    "verify_plan",
 ]
 
 _SUMMARY_FORMAT = "netgen-analysis-v1"
@@ -722,20 +723,62 @@ def effective_tiles(plan: ExecutionPlan, form: str, blocks: Mapping,
     """The per-layer (bm, bn, bk/bkw) the kernels will ACTUALLY run
     after clamping a candidate's block sizes to the problem dims —
     two candidates with equal effective tiles launch identical grids
-    (see `binary_matmul*`'s `min(b·, _rup(dim))` clamps)."""
+    (see `binary_matmul*`'s `min(b·, _rup(dim))` clamps). The fusednet
+    megakernel has no fan-out tiling, so its per-layer tiles are
+    (bm, bkw) pairs — candidates differing only in `bn` clamp to the
+    same megakernel and dedupe."""
     bm, bn, bkw = int(blocks["bm"]), int(blocks["bn"]), int(blocks["bkw"])
     tiles = []
     fan_in = plan.n_inputs
     for layer in plan.layers:
         n = layer.fan_out
-        if form == "dense":
+        if form == "fusednet":
+            k_eff = min(bkw, max(-(-fan_in // PACK_LANES), 1))
+            tiles.append((min(bm, _rup(batch)), k_eff))
+        elif form == "dense":
             k_eff = min(bkw * PACK_LANES, _rup(fan_in))
+            tiles.append((min(bm, _rup(batch)), min(bn, _rup(n)), k_eff))
         else:
             # packed/planes kernels see KW = ceil(fan_in / 32) lane words
             k_eff = min(bkw, max(-(-fan_in // PACK_LANES), 1))
-        tiles.append((min(bm, _rup(batch)), min(bn, _rup(n)), k_eff))
+            tiles.append((min(bm, _rup(batch)), min(bn, _rup(n)), k_eff))
         fan_in = n
     return tuple(tiles)
+
+
+# VMEM budget for the whole-net megakernel: everything it keeps resident
+# per grid step must fit one TPU core's vector memory (~16 MiB).
+FUSEDNET_VMEM_BYTES = 16 * 1024 * 1024
+
+
+def fusednet_vmem_bytes(plan: ExecutionPlan, *, bm: int,
+                        bkw: int | None = None, batch: int | None = None
+                        ) -> int:
+    """Estimated per-grid-step VMEM residency of the fusednet megakernel
+    for this plan, computed analytically from layer geometry and weight
+    magnitudes (no plane decomposition is materialized — this runs per
+    tuner candidate). Mirrors `MegakernelView.vmem_bytes`: all layers'
+    bit-plane weights (one model's worth when stacked) + the input tile
+    + the peak per-layer working set."""
+    if batch is not None:
+        bm = min(bm, _rup(batch))
+    weight = 0
+    peak = 0
+    fan_in = plan.n_inputs
+    depth = plan.depth
+    for i, layer in enumerate(plan.layers):
+        w = max(1, -(-fan_in // PACK_LANES))
+        hidden = i < depth - 1
+        n = layer.fan_out
+        n_pad = (max(1, -(-n // PACK_LANES)) * PACK_LANES if hidden
+                 else max(1, n))
+        p = max(1, int(np.abs(layer.weights).max(initial=0)).bit_length())
+        weight += 2 * p * w * n_pad * 4
+        ck = min(bkw, w) if bkw else w
+        work = 2 * bm * ck * n_pad * 4 + bm * n_pad * 4 + bm * w * 4
+        peak = max(peak, work)
+        fan_in = n
+    return weight + bm * plan.n_inputs + peak + bm * 4
 
 
 def tile_report(plan: ExecutionPlan, candidates: Sequence[Mapping], *,
@@ -767,6 +810,12 @@ def _tile_reason(plan: ExecutionPlan, cand: Mapping, *, batch: int,
     blocks = {k: cand.get(k) for k in ("bm", "bn", "bkw")}
     if any(v is None for v in blocks.values()):
         return None                      # partial candidate: cannot judge
+    if form == "fusednet":
+        need = fusednet_vmem_bytes(
+            plan, bm=int(blocks["bm"]), bkw=int(blocks["bkw"]), batch=batch)
+        if need > FUSEDNET_VMEM_BYTES:
+            return (f"fusednet residency {need} B exceeds the "
+                    f"{FUSEDNET_VMEM_BYTES} B VMEM budget")
     eff = (form, effective_tiles(plan, form, blocks, batch))
     prior = seen.get(eff)
     if prior is not None:

@@ -22,11 +22,22 @@ the layer boundary. Three datapaths, selected by the plan form
             magnitude range, so a quantized net moves ~2P bits of
             weight per addend instead of 32.
 
+A fourth datapath, `pallas[fusednet=true]`, abandons the per-layer
+chain entirely: the whole planes-form net (any depth, single or
+stacked) runs as ONE persistent `binary_forward_planes` launch — every
+layer's bit-plane weights resident in VMEM, step+repack in-register
+between layers, argmax fused — via `plan.megakernel_view()`. It is the
+*preferred* planes path for the stacked multi-net dispatch
+(`compile_pallas_multi` upgrades `planes=true` to the megakernel,
+falling back to the per-layer chain if the plan has no megakernel
+view), and each predictor call is exactly one kernel launch, counted in
+`netgen_kernel_launches_total{form}`.
+
 Block sizes (`bm`, `bn`, `bkw`) are declared target options; with
 `pallas[tuned=true]` they — and, when no form is forced, the
-dense/packed/planes choice itself — are grid-searched per (plan shape x
-device kind) through `repro.netgen.tune` and persisted, so a warm
-process never re-measures (`Session(tune_store=...)`).
+dense/packed/planes/fusednet choice itself — are grid-searched per
+(plan shape x device kind) through `repro.netgen.tune` and persisted,
+so a warm process never re-measures (`Session(tune_store=...)`).
 
 The `fused` variant lowers the whole 2-layer paper net into the
 single-launch `fused_mlp` kernel, the combinational-circuit analogue
@@ -49,6 +60,9 @@ from repro.netgen.plan import ExecutionPlan, lower_circuit
 __all__ = ["compile_pallas", "compile_pallas_multi", "compile_fused"]
 
 _FORMS = ("dense", "packed", "planes")
+# Executable datapaths: the plan forms plus the whole-net megakernel
+# (which runs the planes form, but as one persistent launch).
+_DATAPATHS = ("dense", "packed", "planes", "fusednet")
 
 # The tuner's default candidate grid: block sizes the binary_matvec
 # kernels accept, small enough to search in seconds yet covering the
@@ -62,12 +76,18 @@ _TUNE_BLOCKS = (
 _TUNE_BATCH = 256        # measurement batch: the serve layer's default cap
 
 
-def _resolve_form(packed: bool, planes: bool) -> str | None:
-    """The explicitly requested plan form, or None when the caller left
-    the choice open (tuned=true may then search it)."""
-    if packed and planes:
+def _resolve_form(packed: bool, planes: bool,
+                  fusednet: bool = False) -> str | None:
+    """The explicitly requested datapath, or None when the caller left
+    the choice open (tuned=true may then search it). `fusednet` runs
+    the planes form, so planes+fusednet means fusednet; packed is a
+    different activation encoding and stays exclusive."""
+    if packed and (planes or fusednet):
         raise ValueError(
-            "pallas: packed=true and planes=true are exclusive datapaths")
+            "pallas: packed=true is exclusive with the bit-plane "
+            "datapaths (planes=true / fusednet=true)")
+    if fusednet:
+        return "fusednet"
     if planes:
         return "planes"
     if packed:
@@ -76,7 +96,7 @@ def _resolve_form(packed: bool, planes: bool) -> str | None:
 
 
 def _in_form(plan: ExecutionPlan, form: str) -> ExecutionPlan:
-    if form == "planes":
+    if form in ("planes", "fusednet"):
         return plan.planes()
     if form == "packed":
         return plan.pack()
@@ -173,29 +193,80 @@ def _chain(plan: ExecutionPlan, kw: dict, blocks: dict):
     return tuple(arrays), run
 
 
+def _finish_predictor(predict, jitted, *, plan_form: str, datapath: str,
+                      blocks: dict, launches: int):
+    """Stamp the predictor attributes every caller reads: the executed
+    plan form, the datapath name (== form, or "fusednet" for the
+    megakernel — surfaces in the `netgen.kernel` span and the launch
+    counter), the chosen blocks, launches per call, and the underlying
+    jitted fn (lowerable — `telemetry.jit_cost` roofline input)."""
+    predict.plan_form = plan_form
+    predict.datapath = datapath
+    predict.blocks = dict(blocks)
+    predict.launches_per_call = launches
+    predict.jitted = jitted
+    return predict
+
+
 def _build_single(plan: ExecutionPlan, kw: dict, blocks: dict):
+    from repro.netgen import telemetry
+
     arrays, run = _chain(plan, kw, blocks)
     jitted = jax.jit(lambda x: run(x, *arrays))
+    form, depth = plan.form, plan.depth
 
     def predict(x_uint8):
+        telemetry.kernel_launches(form).inc(depth)
         return jitted(x_uint8)
 
-    predict.plan_form = plan.form
-    predict.blocks = dict(blocks)
-    return predict
+    return _finish_predictor(predict, jitted, plan_form=form, datapath=form,
+                             blocks=blocks, launches=depth)
 
 
 def _build_multi(plan: ExecutionPlan, kw: dict, blocks: dict):
+    from repro.netgen import telemetry
+
     arrays, run = _chain(plan, kw, blocks)
     jitted = jax.jit(lambda block: jax.lax.map(
         lambda s: run(s[0], *s[1:]), (block, *arrays)))
+    form = plan.form
+    # lax.map sweeps the model axis sequentially: depth launches/model.
+    launches = plan.depth * (plan.n_models or 1)
 
     def predict(x_uint8):                            # (M, B, n_in)
+        telemetry.kernel_launches(form).inc(launches)
         return jitted(x_uint8)
 
-    predict.plan_form = plan.form
-    predict.blocks = dict(blocks)
-    return predict
+    return _finish_predictor(predict, jitted, plan_form=form, datapath=form,
+                             blocks=blocks, launches=launches)
+
+
+def _build_fusednet(plan: ExecutionPlan, kw: dict, blocks: dict):
+    """The whole-net megakernel predictor: one persistent
+    `binary_forward_planes` launch per call — single (B, n_in) or
+    stacked (M, B, n_in) — through `plan.megakernel_view()`. Raises
+    ValueError when the plan has no megakernel view (callers that
+    merely *prefer* the megakernel fall back to the per-layer chain)."""
+    from repro.kernels.binary_matvec import ops as bmv
+    from repro.netgen import telemetry
+
+    view = plan.megakernel_view()
+    arrays = tuple(jnp.asarray(a, jnp.uint32) for a in view.arrays)
+    kkw = dict(kw)
+    if blocks.get("bm") is not None:
+        kkw["bm"] = int(blocks["bm"])
+    if blocks.get("bkw") is not None:
+        kkw["bkw"] = int(blocks["bkw"])
+    jitted = jax.jit(lambda x: bmv.binary_forward_planes(
+        x, *arrays, threshold=view.input_threshold,
+        n_classes=view.n_classes, **kkw))
+
+    def predict(x_uint8):
+        telemetry.kernel_launches("fusednet").inc()
+        return jitted(x_uint8)
+
+    return _finish_predictor(predict, jitted, plan_form="planes",
+                             datapath="fusednet", blocks=blocks, launches=1)
 
 
 # ---------------------------------------------------------------------------
@@ -251,7 +322,10 @@ def _tuned_params(plan: ExecutionPlan, kw: dict, blocks: dict,
         if fn is None:
             form = cand["form"]
             cblocks = {k: cand[k] for k in ("bm", "bn", "bkw")}
-            build = _build_multi if multi else _build_single
+            if form == "fusednet":
+                build = _build_fusednet
+            else:
+                build = _build_multi if multi else _build_single
             fn = build(_in_form(plan, form), kw, cblocks)
             built[ckey] = fn
         import time
@@ -279,16 +353,17 @@ def _tuned_params(plan: ExecutionPlan, kw: dict, blocks: dict,
 
 
 def _resolve_datapath(plan: ExecutionPlan, kw: dict, *, packed, planes,
-                      tuned, bm, bn, bkw, tuner, multi: bool):
+                      fusednet, tuned, bm, bn, bkw, tuner, multi: bool):
     """Turn the declared target options into (form, blocks, prebuilt):
-    explicit options pin their axis; `tuned=true` searches the rest.
+    explicit options pin their axis; `tuned=true` searches the rest
+    (over every datapath, megakernel included, when no form is forced).
     `prebuilt` is the winning predictor when this process's search just
     built it (None otherwise — the caller builds)."""
-    form = _resolve_form(packed, planes)
+    form = _resolve_form(packed, planes, fusednet)
     blocks = {"bm": bm, "bn": bn, "bkw": bkw}
     prebuilt = None
     if tuned:
-        forms = (form,) if form is not None else _FORMS
+        forms = (form,) if form is not None else _DATAPATHS
         best, prebuilt = _tuned_params(
             plan, kw, blocks, forms, tuner, multi=multi)
         form = best["form"]
@@ -304,56 +379,74 @@ def _resolve_datapath(plan: ExecutionPlan, kw: dict, *, packed, planes,
 
 def compile_pallas(circuit: Circuit, *, interpret: bool | None = None,
                    packed: bool = False, planes: bool = False,
-                   tuned: bool = False, bm: int | None = None,
-                   bn: int | None = None, bkw: int | None = None,
-                   _tuner=None):
-    """Return a jitted fn chaining one kernel launch per plan layer.
+                   fusednet: bool = False, tuned: bool = False,
+                   bm: int | None = None, bn: int | None = None,
+                   bkw: int | None = None, _tuner=None):
+    """Return a jitted fn chaining one kernel launch per plan layer —
+    or, with `fusednet=true`, ONE whole-net megakernel launch.
 
     `interpret` overrides the kernel ops' container default (interpret
     mode on CPU); pass `pallas[interpret=false]` on a real TPU to lower
     through Mosaic. `packed` selects the end-to-end bit-packed
     activation datapath, `planes` the fully bit-packed (bit-plane
-    weight) datapath — both bit-exact with dense. `bm`/`bn`/`bkw` pin
-    kernel block sizes; `tuned` grid-searches unpinned block sizes (and
-    the form, when none is forced) through the persistent autotuner.
-    The returned fn carries `.plan_form` and `.blocks` describing what
-    the search (or the flags) chose.
+    weight) datapath, `fusednet` the single-launch planes-form
+    megakernel — all bit-exact with dense. `bm`/`bn`/`bkw` pin kernel
+    block sizes; `tuned` grid-searches unpinned block sizes (and the
+    datapath, when none is forced) through the persistent autotuner.
+    The returned fn carries `.plan_form`, `.datapath` and `.blocks`
+    describing what the search (or the flags) chose.
     """
     kw = {} if interpret is None else {"interpret": interpret}
     plan = lower_circuit(circuit)
     form, blocks, prebuilt = _resolve_datapath(
-        plan, kw, packed=packed, planes=planes, tuned=tuned,
-        bm=bm, bn=bn, bkw=bkw, tuner=_tuner, multi=False)
+        plan, kw, packed=packed, planes=planes, fusednet=fusednet,
+        tuned=tuned, bm=bm, bn=bn, bkw=bkw, tuner=_tuner, multi=False)
     if prebuilt is not None:
         return prebuilt
+    if form == "fusednet":
+        return _build_fusednet(plan.planes(), kw, blocks)
     return _build_single(_in_form(plan, form), kw, blocks)
 
 
 def compile_pallas_multi(plan: ExecutionPlan, *,
                          interpret: bool | None = None,
                          packed: bool = False, planes: bool = False,
-                         tuned: bool = False, bm: int | None = None,
-                         bn: int | None = None, bkw: int | None = None,
-                         _tuner=None):
-    """Multi-net dispatch through the binary_matvec kernel chain.
+                         fusednet: bool = False, tuned: bool = False,
+                         bm: int | None = None, bn: int | None = None,
+                         bkw: int | None = None, _tuner=None):
+    """Multi-net dispatch through the binary_matvec kernels.
 
     `plan` is a *stacked* ExecutionPlan (`repro.netgen.plan.stack_plans`,
     hidden widths pre-padded): per-layer (M, fan_in, fan_out) weights.
-    The model axis is swept with `lax.map` — a scan whose body is the
-    per-layer kernel chain, so the whole M-version batch is one jitted
-    dispatch and each version's weights stream through the same kernel
-    traces. All declared options behave as in `compile_pallas`; tuning
-    records for stacked plans are keyed on the stacked shape (model
-    count included), separate from the single-net records.
+
+    The bit-plane datapath prefers the whole-net megakernel: both
+    `fusednet=true` and `planes=true` build ONE persistent
+    `binary_forward_planes` launch over grid (M, B/bm) — model axis
+    outermost, so each version's resident weights serve a full batch
+    sweep before the next version's are brought in. `planes=true`
+    falls back to the per-layer chain when the megakernel build fails
+    (`fusednet=true` is strict). Everything else sweeps the model axis
+    with `lax.map` — a scan whose body is the per-layer kernel chain
+    (depth x M launches per dispatch vs the megakernel's 1). All
+    declared options behave as in `compile_pallas`; tuning records for
+    stacked plans are keyed on the stacked shape (model count
+    included), separate from the single-net records.
     """
     if not plan.stacked:
         raise ValueError("compile_pallas_multi needs a stacked ExecutionPlan")
     kw = {} if interpret is None else {"interpret": interpret}
     form, blocks, prebuilt = _resolve_datapath(
-        plan, kw, packed=packed, planes=planes, tuned=tuned,
-        bm=bm, bn=bn, bkw=bkw, tuner=_tuner, multi=True)
+        plan, kw, packed=packed, planes=planes, fusednet=fusednet,
+        tuned=tuned, bm=bm, bn=bn, bkw=bkw, tuner=_tuner, multi=True)
     if prebuilt is not None:
         return prebuilt
+    if form == "fusednet":
+        return _build_fusednet(plan.planes(), kw, blocks)
+    if form == "planes":
+        try:
+            return _build_fusednet(plan.planes(), kw, blocks)
+        except ValueError:
+            pass                    # no megakernel view: per-layer chain
     return _build_multi(_in_form(plan, form), kw, blocks)
 
 
@@ -407,9 +500,11 @@ def compile_fused(circuit: Circuit, *, interpret: bool | None = None,
         return fused.fused_mlp_predict(
             x_uint8, w1, w2, threshold=thr, **bm_kw, **kw)
 
+    from repro.netgen import telemetry
+
     def predict(x_uint8):
+        telemetry.kernel_launches("fused").inc()
         return _jitted(x_uint8)
 
-    predict.plan_form = "dense"
-    predict.blocks = dict(bm_kw)
-    return predict
+    return _finish_predictor(predict, _jitted, plan_form="dense",
+                             datapath="fused", blocks=bm_kw, launches=1)

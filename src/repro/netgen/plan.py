@@ -57,8 +57,8 @@ import numpy as np
 from repro.netgen.graph import Circuit, as_layered_weights
 
 __all__ = [
-    "ExecutionPlan", "PlanLayer", "PACK_LANES", "decompose_planes",
-    "lower_circuit", "stack_plans",
+    "ExecutionPlan", "MegakernelView", "PlanLayer", "PACK_LANES",
+    "decompose_planes", "lower_circuit", "stack_plans",
 ]
 
 PACK_LANES = 32      # activations per uint32 word in the packed datapath
@@ -184,6 +184,101 @@ class ExecutionPlan:
                 layer, pos_planes=pos, neg_planes=neg, n_planes=n_planes))
         return dataclasses.replace(
             base, layers=tuple(layers), bitplanes=True)
+
+    def megakernel_view(self) -> "MegakernelView":
+        """The whole-net megakernel's flattened view of this plan: the
+        planes form with each hidden layer's fan_out zero-padded up to
+        the NEXT layer's word width (N_l == W_{l+1} * 32), so the
+        in-kernel step+repack between layers is a pure reshape with no
+        bit shuffling. Zero-width layers are padded to one zero word.
+        Padding is exact under strict-step semantics: a padded
+        accumulator column is 0, step(0) = 0, and the padded bit lands
+        in a zero-padded weight word of the next layer (zero popcount).
+        The final layer's fan_out is NOT padded — `n_classes` bounds
+        the fused argmax so a phantom class can never win."""
+        plan = self.planes()
+        if plan.n_classes < 1:
+            raise ValueError("megakernel_view needs at least one class")
+        depth = plan.depth
+        arrays: list[np.ndarray] = []
+        layer_words, layer_planes, layer_fan_out = [], [], []
+        want_w: int | None = None
+        for i, layer in enumerate(plan.layers):
+            hidden = i < depth - 1
+            w_target = max(1, layer.words) if want_w is None else want_w
+            n = layer.fan_out
+            n_target = (max(1, -(-n // PACK_LANES)) * PACK_LANES
+                        if hidden else n)
+
+            def _padded(a: np.ndarray) -> np.ndarray:
+                pw = w_target - a.shape[-2]
+                pn = n_target - a.shape[-1]
+                if pw or pn:
+                    pad = [(0, 0)] * a.ndim
+                    pad[-2], pad[-1] = (0, pw), (0, pn)
+                    a = np.pad(a, pad)
+                return np.ascontiguousarray(a)
+
+            arrays += [_padded(layer.pos_planes), _padded(layer.neg_planes)]
+            layer_words.append(w_target)
+            layer_planes.append(int(layer.n_planes))
+            layer_fan_out.append(n)
+            want_w = n_target // PACK_LANES if hidden else None
+        return MegakernelView(
+            n_inputs=plan.n_inputs,
+            input_threshold=plan.input_threshold,
+            n_classes=plan.n_classes,
+            n_models=plan.n_models,
+            layer_words=tuple(layer_words),
+            layer_planes=tuple(layer_planes),
+            layer_fan_out=tuple(layer_fan_out),
+            arrays=tuple(arrays))
+
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class MegakernelView:
+    """Shape-generic metadata + flat plane arrays for the whole-net
+    megakernel (`kernels.binary_matvec.binary_forward_planes`): per-layer
+    word widths / plane counts / TRUE (unpadded) fan_outs, and the
+    interleaved (pos_0, neg_0, pos_1, neg_1, ...) uint32 plane arrays —
+    (P_l, W_l, N_l) each, leading model axis when stacked — already
+    padded so consecutive layers chain by construction."""
+    n_inputs: int
+    input_threshold: int
+    n_classes: int
+    n_models: int | None
+    layer_words: tuple[int, ...]
+    layer_planes: tuple[int, ...]
+    layer_fan_out: tuple[int, ...]
+    arrays: tuple[np.ndarray, ...]
+
+    @property
+    def depth(self) -> int:
+        return len(self.layer_words)
+
+    @property
+    def stacked(self) -> bool:
+        return self.n_models is not None
+
+    def vmem_bytes(self, *, bm: int, bkw: int | None = None) -> int:
+        """Estimated per-grid-step VMEM residency: every layer's plane
+        arrays (one model's worth when stacked) + the input tile + the
+        peak per-layer working set (popcount temporaries bounded by the
+        `bkw` word chunk, accumulator, activation words). The legality
+        check in `repro.netgen.analysis` holds this under the VMEM
+        budget before a tuner candidate is ever measured."""
+        models = self.n_models or 1
+        weight = sum(a.size * 4 for a in self.arrays) // models
+        x_tile = bm * self.n_inputs
+        peak = 0
+        for li, (w, _p) in enumerate(zip(self.layer_words,
+                                         self.layer_planes)):
+            n = (self.layer_words[li + 1] * PACK_LANES
+                 if li + 1 < self.depth else self.layer_fan_out[li])
+            ck = min(bkw, w) if bkw else w
+            work = 2 * bm * ck * n * 4 + bm * n * 4 + bm * w * 4
+            peak = max(peak, work)
+        return weight + x_tile + peak + bm * 4
 
 
 def decompose_planes(w: np.ndarray) -> tuple[np.ndarray, np.ndarray, int]:

@@ -26,7 +26,12 @@ ROADMAP's "Serving specialized programs" item:
       (`repro.netgen.plan.stack_plans`) and served by one jitted
       multi-net dispatch (the target's `compile_multi` form, with the
       server's declared target options — interpret, packed — forwarded
-      through the registry) — M versions, one XLA call. When a device
+      through the registry) — M versions, one XLA call. For the
+      bit-plane datapath (`pallas[planes=true]` / `fusednet=true`) the
+      stacked dispatch is the whole-net megakernel: one persistent
+      Pallas launch per dispatch round for all M versions and every
+      layer, recorded on the `netgen.kernel` span (form/launches) and
+      in `netgen_kernel_launches_total{form}`. When a device
       mesh with a data axis is active (`repro.parallel.sharding
       .use_mesh`), the stacked dispatch additionally shards its slot
       (batch) dimension across the mesh with `shard_map` — the
@@ -359,6 +364,22 @@ def stack_layered_weights(circuits: Sequence[Circuit]
     return plan.input_threshold, [l.weights for l in plan.layers]
 
 
+def _kernel_attrs(fn) -> dict:
+    """The datapath attributes a `netgen.kernel` span carries when the
+    predictor declares them (pallas builds do): `form` names the
+    executed datapath and `launches` the pallas_call count one dispatch
+    performs — `benchmarks/check_trace.py` gates that every fusednet
+    round records exactly one launch."""
+    dp = getattr(fn, "datapath", None)
+    if dp is None:
+        return {}
+    attrs = {"form": dp}
+    launches = getattr(fn, "launches_per_call", None)
+    if launches is not None:
+        attrs["launches"] = launches
+    return attrs
+
+
 def _shard_stacked(fn, mesh, capacity: int):
     """Wrap a stacked dispatch ((M, cap, n_in) -> (M, cap)) in
     `shard_map` over the mesh's data axes, splitting the slot (batch)
@@ -387,7 +408,16 @@ def _shard_stacked(fn, mesh, capacity: int):
         from jax.experimental.shard_map import shard_map as _shard_map
         mapped = _shard_map(fn, mesh=mesh, in_specs=in_specs,
                             out_specs=out_specs, check_rep=False)
-    return jax.jit(mapped)
+    wrapped = jax.jit(mapped)
+    # keep the datapath identity visible on the sharded wrapper: the
+    # kernel span's form/launches attrs come from these
+    for attr in ("datapath", "launches_per_call", "plan_form"):
+        if hasattr(fn, attr):
+            try:
+                setattr(wrapped, attr, getattr(fn, attr))
+            except AttributeError:   # jitted fns normally allow attrs
+                break
+    return wrapped
 
 
 # ---------------------------------------------------------------------------
@@ -653,8 +683,8 @@ class NetServer:
             block[i], n = pad_slots(chunk, cap)
             valid.append(n)
         self._h_occupancy.observe(sum(valid) / (len(chunks) * cap))
-        with self._tel.span("netgen.kernel", round=round,
-                            valid=sum(valid)):
+        attrs = {"round": round, "valid": sum(valid), **_kernel_attrs(fn)}
+        with self._tel.span("netgen.kernel", **attrs):
             preds = np.asarray(fn(block))            # (M, cap)
         return preds, valid
 
@@ -663,11 +693,12 @@ class NetServer:
         cap = self.slot_capacity
         if x.shape[0] == 0:
             return np.zeros((0,), np.int64)
+        attrs = _kernel_attrs(getattr(compiled, "artifact", None))
         outs = []
         for i in range(0, x.shape[0], cap):
             padded, n = pad_slots(x[i:i + cap], cap)
             self._h_occupancy.observe(n / cap)
-            with self._tel.span("netgen.kernel", valid=n):
+            with self._tel.span("netgen.kernel", valid=n, **attrs):
                 outs.append(np.asarray(compiled(padded))[:n])
         return np.concatenate(outs)
 

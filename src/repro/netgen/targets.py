@@ -186,12 +186,16 @@ register_target(Target(
                 "(interpret-mode on CPU; packed=true chains bit-packed "
                 "activations end to end, planes=true additionally "
                 "decomposes weights into packed bit-planes accumulated "
-                "by popcount, tuned=true grid-searches the form and the "
-                "bm/bn/bkw block sizes per plan shape and persists the "
-                "winner)",
+                "by popcount, fusednet=true runs the whole planes-form "
+                "net as ONE persistent megakernel launch — any depth, "
+                "stacked or single, weights resident and activations "
+                "never leaving VMEM — tuned=true grid-searches the form "
+                "and the bm/bn/bkw block sizes per plan shape and "
+                "persists the winner)",
     compile=_compile_pallas,
     opts=(("interpret", bool), ("packed", bool), ("planes", bool),
-          ("tuned", bool), ("bm", int), ("bn", int), ("bkw", int)),
+          ("fusednet", bool), ("tuned", bool), ("bm", int), ("bn", int),
+          ("bkw", int)),
     compile_multi=_compile_pallas_multi, wants_tuner=True))
 register_target(Target(
     name="fused", kind="callable",

@@ -68,7 +68,13 @@ Instrumented span tree (what a trace of one request lifecycle nests):
 Serving metrics: `netgen_predict_latency_seconds{server,version}`
 records per-version SERVICE time and `netgen_requests_total` counts one
 increment per dispatch call per version — `benchmarks/check_trace.py`
-gates latency count == request count. The online engine
+gates latency count == request count.
+`netgen_kernel_launches_total{form}` counts Pallas kernel launches per
+datapath form (`kernel_launches(form)` is the accessor backends use):
+the per-layer chains record depth launches per call (times M for the
+lax.map multi dispatch) while the fusednet megakernel records exactly
+ONE per call — `benchmarks/check_trace.py` gates that every fusednet
+`netgen.kernel` dispatch-round span carries launches == 1. The online engine
 (`repro.netgen.engine`) adds, per `engine=` scope:
 `netgen_engine_submitted/completed/batches_total`,
 `netgen_engine_rejected_total{reason=queue_full|deadline|closed}`, the
@@ -101,8 +107,8 @@ from typing import Mapping
 __all__ = [
     "Counter", "Gauge", "Histogram", "Registry", "SpanRecord", "counter",
     "disable", "enable", "export_jsonl", "gauge", "get_registry",
-    "histogram", "jit_cost", "new_scope", "prometheus", "report", "reset",
-    "span", "summary", "timed",
+    "histogram", "jit_cost", "kernel_launches", "new_scope", "prometheus",
+    "report", "reset", "span", "summary", "timed",
 ]
 
 _TRACE_FORMAT = "netgen-trace-v1"
@@ -631,6 +637,15 @@ def disable() -> None:
 
 def counter(name: str, /, **labels) -> Counter:
     return _REGISTRY.counter(name, **labels)
+
+
+def kernel_launches(form: str) -> Counter:
+    """The per-datapath Pallas launch counter,
+    `netgen_kernel_launches_total{form}` — backends increment it by the
+    number of pallas_call launches one predictor call performs (depth
+    per chain call, depth x M for the multi chain, exactly 1 for the
+    fusednet megakernel)."""
+    return _REGISTRY.counter("netgen_kernel_launches_total", form=form)
 
 
 def gauge(name: str, /, **labels) -> Gauge:

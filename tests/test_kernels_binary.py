@@ -183,3 +183,38 @@ def test_binary_matmul_planes_property(b, k, n, mag, seed):
     got = np.asarray(ops.binary_matmul_planes(
         xp, jnp.asarray(pos), jnp.asarray(neg)))
     np.testing.assert_array_equal(got, x.astype(np.int64) @ w.astype(np.int64))
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    b=st.integers(1, 40),
+    n_in=st.integers(1, 80),
+    n_h=st.integers(1, 40),
+    n_out=st.integers(2, 8),
+    mag=st.integers(1, 60),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_binary_forward_planes_property(b, n_in, n_h, n_out, mag, seed):
+    """Property: the whole-net megakernel == the layer-by-layer numpy
+    forward (binarize, matmul, strict step, matmul, argmax) for any
+    widths, batch, and weight magnitude — the in-register repack and
+    all padding seams must be exact."""
+    from repro.netgen.plan import lower_circuit
+    from repro.core import quantize
+    from repro import netgen
+
+    rng = np.random.default_rng(seed)
+    w1 = rng.integers(-mag, mag + 1, size=(n_in, n_h)).astype(np.int32)
+    w2 = rng.integers(-mag, mag + 1, size=(n_h, n_out)).astype(np.int32)
+    net = quantize.QuantizedNet(weights=[w1, w2])
+    x = rng.integers(0, 256, size=(b, n_in)).astype(np.uint8)
+
+    a = (x.astype(np.int64) > net.input_threshold).astype(np.int64)
+    acc = ((a @ w1 > 0).astype(np.int64)) @ w2
+    want = np.argmax(acc, axis=-1).astype(np.int32)
+
+    view = lower_circuit(netgen.lower(net)).megakernel_view()
+    got = np.asarray(ops.binary_forward_planes(
+        jnp.asarray(x), *[jnp.asarray(p) for p in view.arrays],
+        threshold=net.input_threshold, n_classes=view.n_classes))
+    np.testing.assert_array_equal(got, want)

@@ -21,10 +21,10 @@ from repro.core import quantize
 from repro import netgen
 from repro.netgen import analysis
 from repro.netgen.analysis import (
-    INT32_MAX, Diagnostic, RangeAnalysis, VerificationError,
-    analyze_ranges, check_ranges, diagnose_stack, effective_tiles,
-    lint_store, proof_summary, summary_row, tile_legality, verify_circuit,
-    verify_plan,
+    FUSEDNET_VMEM_BYTES, INT32_MAX, Diagnostic, RangeAnalysis,
+    VerificationError, analyze_ranges, check_ranges, diagnose_stack,
+    effective_tiles, fusednet_vmem_bytes, lint_store, proof_summary,
+    summary_row, tile_legality, verify_circuit, verify_plan,
 )
 from repro.netgen.graph import (
     InputCompare, Term, WeightedSum, node_widths, signed_width,
@@ -400,6 +400,48 @@ def test_tile_legality_keeps_partial_and_distinct_candidates():
     assert legal({"bm": 16, "bn": 8, "bkw": 1}) is None   # distinct tiles
     assert "duplicate" in legal({"bm": 8, "bn": 8, "bkw": 1})
     assert legal({"form": "dense"}) is None               # partial: keep
+
+
+def test_fusednet_vmem_matches_view_estimate():
+    """The analytic per-candidate estimate (no plane decomposition
+    materialized) must agree with what the megakernel view actually
+    keeps resident — otherwise the tuner's VMEM gate drifts from the
+    kernel it is gating."""
+    for seed, sizes in ((17, (45, 21, 7)), (18, (64, 33, 10))):
+        plan = lower_circuit(_optimized(seed, sizes=sizes))
+        view = plan.planes().megakernel_view()
+        for bm, bkw in ((8, 1), (32, 4), (256, 16)):
+            assert fusednet_vmem_bytes(plan, bm=bm, bkw=bkw) \
+                == view.vmem_bytes(bm=bm, bkw=bkw), (sizes, bm, bkw)
+
+
+def test_fusednet_candidate_over_vmem_budget_rejected():
+    """A batch tile that would not fit the megakernel's whole residency
+    in VMEM is rejected BEFORE measurement, with the budget named."""
+    plan = lower_circuit(_optimized(19, sizes=(784, 500, 10)))
+    legal = tile_legality(plan, batch=4096)
+    big = {"form": "fusednet", "bm": 2048, "bn": 8, "bkw": 16}
+    reason = legal(big)
+    assert reason is not None and "VMEM budget" in reason
+    assert fusednet_vmem_bytes(plan, bm=2048, bkw=16, batch=4096) \
+        > FUSEDNET_VMEM_BYTES
+    small = {"form": "fusednet", "bm": 32, "bn": 8, "bkw": 8}
+    assert legal(small) is None
+
+
+def test_fusednet_bn_only_candidates_dedupe():
+    """The megakernel has no fan-out tiling: candidates differing only
+    in `bn` clamp to the identical kernel, so the second is rejected as
+    a duplicate measurement."""
+    plan = lower_circuit(_optimized(19, sizes=(40, 16, 4)))
+    a = {"form": "fusednet", "bm": 8, "bn": 8, "bkw": 1}
+    b = {"form": "fusednet", "bm": 8, "bn": 64, "bkw": 1}
+    eff = effective_tiles(plan, "fusednet", a, 4)
+    assert eff == effective_tiles(plan, "fusednet", b, 4)
+    assert all(len(t) == 2 for t in eff)    # (bm, bkw) pairs, no bn
+    legal = tile_legality(plan, batch=4)
+    assert legal(a) is None
+    assert "duplicate" in legal(b)
 
 
 # ---------------------------------------------------------------------------

@@ -113,17 +113,20 @@ def test_stacked_dispatch_differential(seed, n_in, n_h, n_out):
        n_h=st.integers(1, 40), n_out=st.integers(2, 6),
        depth3=st.booleans())
 def test_packed_datapath_differential(seed, n_in, n_h, n_out, depth3):
-    """ISSUE 4/5 satellite: the three pallas datapaths — dense, the
-    end-to-end bit-packed activation chain (`packed=true`), and the
-    fully bit-packed bit-plane chain (`planes=true`) — vs the dense
-    reference, on random depths and widths that straddle the 32-lane
-    boundary (fan_in padding and plane decomposition must be exact,
-    not approximately right)."""
+    """ISSUE 4/5/9 satellite: the four pallas datapaths — dense, the
+    end-to-end bit-packed activation chain (`packed=true`), the fully
+    bit-packed bit-plane chain (`planes=true`), and the whole-net
+    megakernel (`fusednet=true`, one launch for the entire forward) —
+    vs the dense reference, on random depths and widths that straddle
+    the 32-lane boundary (fan_in padding, plane decomposition, and the
+    megakernel's in-register repack must be exact, not approximately
+    right)."""
     sizes = (n_in, n_h, n_h, n_out) if depth3 else (n_in, n_h, n_out)
     net = _random_net(seed, sizes)
     x = _images(seed, 10, n_in)
     ref = np.asarray(quantize.predict_quantized(net)(jnp.asarray(x)))
-    for target in ("pallas", "pallas[packed=true]", "pallas[planes=true]"):
+    for target in ("pallas", "pallas[packed=true]", "pallas[planes=true]",
+                   "pallas[fusednet=true]"):
         fn = netgen.specialize(net, backend=target)
         np.testing.assert_array_equal(
             np.asarray(fn(jnp.asarray(x))), ref, err_msg=target)

@@ -1,0 +1,211 @@
+"""Whole-net megakernel (`pallas[fusednet=true]`) edge cases — ISSUE 9.
+
+The fusednet datapath fuses an entire planes-form plan into ONE Pallas
+launch: binarize+pack on entry, per-layer popcount accumulate, strict
+step + repack in-register between layers, argmax fused at the end.
+These tests pin the shapes where the in-kernel padding contracts can
+silently break: 1-layer nets (no repack at all), fan-in/out that
+straddle the 32-lane word boundary, per-layer plane counts that differ,
+stacked M>1 plans whose hidden widths were padded for stacking, and the
+interpret-mode path CPU-only CI runs. The launch-accounting contract
+(`netgen_kernel_launches_total{form}`, `launches_per_call`, the
+check_trace gate) is covered here too, against the per-layer chain's
+depth-launch count.
+
+Everything runs in interpret mode — the container has no TPU — which is
+exactly the parity CI needs: bit-exact against the dense reference
+`quantize.predict_quantized`.
+"""
+import sys
+from pathlib import Path
+
+import numpy as np
+import jax.numpy as jnp
+
+from repro.core import quantize
+from repro import netgen
+from repro.kernels.binary_matvec import ops
+from repro.netgen import telemetry
+from repro.netgen.plan import PACK_LANES, lower_circuit, stack_plans
+
+from _netgen_helpers import images, random_net
+
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "benchmarks"))
+from check_trace import check_launches  # noqa: E402
+
+
+def _ref(net, x):
+    return np.asarray(quantize.predict_quantized(net)(jnp.asarray(x)))
+
+
+def _fused(net):
+    return netgen.specialize(net, backend="pallas[fusednet=true]")
+
+
+# ---------------------------------------------------------------------------
+# Edge-case exactness
+# ---------------------------------------------------------------------------
+
+def test_single_layer_net():
+    """Depth 1: no hidden repack ever runs; the kernel goes straight
+    from the packed input to the fused argmax."""
+    net = random_net(3, (40, 7), lo=-5, hi=5)
+    x = images(3, 9, 40)
+    np.testing.assert_array_equal(np.asarray(_fused(net)(jnp.asarray(x))),
+                                  _ref(net, x))
+
+
+def test_non_multiple_of_32_fan_in_and_out():
+    """Widths off the 32-lane boundary force padding at every seam:
+    input pack, hidden repack, and the final argmax slice."""
+    for seed, sizes in ((5, (31, 33, 5)), (6, (45, 21, 7)),
+                        (7, (33, 1, 4))):
+        net = random_net(seed, sizes, lo=-5, hi=5)
+        x = images(seed, 11, sizes[0])
+        np.testing.assert_array_equal(
+            np.asarray(_fused(net)(jnp.asarray(x))), _ref(net, x),
+            err_msg=str(sizes))
+
+
+def test_per_layer_plane_counts_differ():
+    """P is per layer (bit_length of that layer's max |w|); a ternary
+    first layer chained to a wide-magnitude second layer must keep
+    separate plane counts, not pad to a uniform maximum."""
+    net = quantize.QuantizedNet(weights=[
+        np.asarray(random_net(9, (50, 20), lo=-1, hi=1).weights[0]),
+        np.asarray(random_net(10, (20, 6), lo=-37, hi=37).weights[0])])
+    view = lower_circuit(netgen.lower(net)).megakernel_view()
+    assert view.layer_planes[0] == 1
+    assert view.layer_planes[1] == 6        # bit_length(37)
+    x = images(9, 13, 50)
+    np.testing.assert_array_equal(np.asarray(_fused(net)(jnp.asarray(x))),
+                                  _ref(net, x))
+
+
+def test_megakernel_view_padding_invariants():
+    """The view's whole contract: hidden fan_out padded so
+    N_l == W_{l+1} * 32 (repack is a reshape), the FINAL layer unpadded
+    (a phantom class must never reach the argmax), arrays interleaved
+    pos/neg with per-layer plane counts."""
+    net = random_net(11, (45, 21, 13, 7), lo=-5, hi=5)
+    view = lower_circuit(netgen.lower(net)).megakernel_view()
+    assert view.depth == 3 and not view.stacked
+    assert len(view.arrays) == 2 * view.depth
+    for li in range(view.depth):
+        pos, neg = view.arrays[2 * li], view.arrays[2 * li + 1]
+        assert pos.shape == neg.shape
+        p, w, n = pos.shape
+        assert (p, w) == (view.layer_planes[li], view.layer_words[li])
+        if li + 1 < view.depth:             # hidden: padded to next words
+            assert n == view.layer_words[li + 1] * PACK_LANES
+            assert n >= view.layer_fan_out[li]
+        else:                               # final: true class count
+            assert n == view.layer_fan_out[li] == view.n_classes == 7
+    # VMEM estimate is positive and monotone in the batch tile
+    assert 0 < view.vmem_bytes(bm=8, bkw=1) < view.vmem_bytes(bm=64, bkw=1)
+
+
+def test_stacked_plan_padded_hidden_widths():
+    """M>1: stack_plans pads hidden widths across versions; the stacked
+    megakernel must agree with every version's own dense reference."""
+    sizes_by_version = ((20, 13, 5), (20, 16, 5), (20, 19, 5))
+    nets = [random_net(20 + i, s, lo=-5, hi=5)
+            for i, s in enumerate(sizes_by_version)]
+    plans = [lower_circuit(netgen.lower(n)) for n in nets]
+    stacked = stack_plans(plans).planes()
+    view = stacked.megakernel_view()
+    assert view.stacked and view.n_models == 3
+    x = images(21, 8, 20)
+    xs = jnp.asarray(np.stack([x] * 3))
+    got = np.asarray(ops.binary_forward_planes(
+        xs, *[jnp.asarray(a) for a in view.arrays],
+        threshold=view.input_threshold, n_classes=view.n_classes))
+    assert got.shape == (3, 8)
+    for m, net in enumerate(nets):
+        np.testing.assert_array_equal(got[m], _ref(net, x), err_msg=str(m))
+
+
+def test_server_stacked_dispatch_prefers_fusednet():
+    """A bit-plane NetServer's stacked dispatch rides the megakernel:
+    one launch per round, `form=fusednet` on the kernel span, and the
+    check_trace launch gate passes on the resulting trace."""
+    telemetry.enable()
+    server = netgen.NetServer(target="pallas[planes=true]",
+                              slot_capacity=8, warmup=False)
+    nets = {f"v{i}": random_net(30 + i, (20, 13 + 3 * i, 5), lo=-5, hi=5)
+            for i in range(3)}
+    for name, net in nets.items():
+        server.register(name, net)
+    x = images(31, 6, 20)
+    out = server.predict_many({name: x for name in nets})
+    assert server.dispatch_counts["stacked"] == 1
+    for name, net in nets.items():
+        np.testing.assert_array_equal(out[name], _ref(net, x), err_msg=name)
+
+    spans = [r.as_dict() for r in telemetry.get_registry().spans()]
+    rounds = [r for r in spans if r.get("name") == "netgen.kernel"
+              and (r.get("attrs") or {}).get("form") == "fusednet"]
+    assert rounds, "stacked bit-plane dispatch did not use the megakernel"
+    assert all((r["attrs"] or {}).get("launches") == 1 for r in rounds)
+    samples = [("netgen_kernel_launches_total", {"form": "fusednet"},
+                float(telemetry.kernel_launches("fusednet").value))]
+    assert check_launches(spans, samples) == []
+
+
+# ---------------------------------------------------------------------------
+# Launch accounting
+# ---------------------------------------------------------------------------
+
+def test_launch_counter_one_vs_depth():
+    """The counter IS the claim: a fusednet forward is one launch, the
+    per-layer planes chain is `depth` launches."""
+    net = random_net(40, (24, 10, 8, 4), lo=-5, hi=5)
+    x = jnp.asarray(images(40, 5, 24))
+    fused = _fused(net)
+    chain = netgen.specialize(net, backend="pallas[planes=true]")
+    assert fused.launches_per_call == 1
+    assert chain.launches_per_call == 3
+    c_fused = telemetry.kernel_launches("fusednet")
+    c_chain = telemetry.kernel_launches("planes")
+    base_f, base_c = c_fused.value, c_chain.value
+    np.asarray(fused(x)), np.asarray(chain(x))
+    assert c_fused.value - base_f == 1
+    assert c_chain.value - base_c == 3
+    np.asarray(fused(x))
+    assert c_fused.value - base_f == 2
+
+
+def test_check_launches_gate_rejects_multi_launch_round():
+    """The CI gate itself: a fusednet round claiming 2 launches, or a
+    counter that undercounts the rounds, must fail; a trace with no
+    fusednet traffic is a no-op."""
+    def span(launches):
+        return {"name": "netgen.kernel", "span_id": 1,
+                "attrs": {"form": "fusednet", "launches": launches}}
+    counter = [("netgen_kernel_launches_total", {"form": "fusednet"}, 1.0)]
+    assert check_launches([span(1)], counter) == []
+    assert any("launches=2" in e
+               for e in check_launches([span(2)], counter))
+    starved = [("netgen_kernel_launches_total", {"form": "fusednet"}, 0.0)]
+    assert any("only 0" in e for e in check_launches([span(1)], starved))
+    plain = [{"name": "netgen.kernel", "span_id": 1,
+              "attrs": {"form": "planes", "launches": 3}}]
+    assert check_launches(plain, starved) == []
+
+
+# ---------------------------------------------------------------------------
+# Interpret-mode parity (the CPU-only CI path)
+# ---------------------------------------------------------------------------
+
+def test_interpret_mode_kernel_parity():
+    """Direct kernel call with interpret pinned on — the only mode this
+    container (and CI) can run — stays bit-exact, including a batch
+    that is not a multiple of the default batch tile."""
+    net = random_net(50, (61, 29, 6), lo=-9, hi=9)
+    view = lower_circuit(netgen.lower(net)).megakernel_view()
+    x = images(50, 37, 61)                      # 37: pads to the bm tile
+    got = np.asarray(ops.binary_forward_planes(
+        jnp.asarray(x), *[jnp.asarray(a) for a in view.arrays],
+        threshold=view.input_threshold, n_classes=view.n_classes,
+        interpret=True))
+    np.testing.assert_array_equal(got, _ref(net, x))
