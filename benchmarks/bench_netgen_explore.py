@@ -1,0 +1,223 @@
+"""Design-space explorer benchmarks + the budgeted CI smoke.
+
+Suite rows (`python -m benchmarks.run --only netgen_explore`):
+
+  netgen_explore_best    the joint-search winner's measured latency on
+                         the bench net (us_per_call); derived carries
+                         the winning pipeline/form/tiles and the search
+                         accounting (candidates/pruned/measured).
+  netgen_explore_replay  the same search re-run against the warm
+                         in-process record: us_per_call is the replay
+                         wall clock, derived asserts the zero-
+                         measurement source.
+  netgen_explore_ladder  the carried-over ladder-depth sweep AS AN
+                         EXPLORER DIMENSION: nets of several hidden
+                         depths enter one `SearchSpace.nets` axis, the
+                         cells objective prices each depth's optimized
+                         circuit, and derived records accuracy-vs-cells
+                         per depth against the paper's accuracy ladder
+                         (L3 reference: 92%).
+
+Standalone — the tier-1 CI smoke (interpret mode, explicit budget):
+
+  PYTHONPATH=src python benchmarks/bench_netgen_explore.py --smoke \\
+      --budget 8 [--store DIR] [--tune-store DIR] [--report FILE] \\
+      [--trace DIR]
+
+The smoke explores, serves the winner through a stacked NetServer (so
+the `explored=true` preference path and the dispatch/kernel spans are
+exercised), re-explores to prove the zero-measurement replay, and —
+with --trace — writes the trace directory `benchmarks/check_trace.py`
+gates (including the explorer counting identities). --report writes
+the `ExplorationReport` JSON the slow CI job uploads; artifacts are
+written ONLY under explicitly given paths.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+from pathlib import Path
+
+import numpy as np
+
+
+def _images(b: int, n_in: int, seed: int = 0) -> np.ndarray:
+    return np.random.default_rng(seed).integers(
+        0, 256, size=(b, n_in)).astype(np.uint8)
+
+
+def _random_net(sizes, seed: int = 0):
+    from repro.core import quantize
+
+    rng = np.random.default_rng(seed)
+    return quantize.QuantizedNet(weights=[
+        rng.integers(-6, 7, size=s).astype(np.int32)
+        for s in zip(sizes, sizes[1:])])
+
+
+def _timed_mean(fn, x, reps: int = 3) -> float:
+    np.asarray(fn(x))
+    best = float("inf")
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        np.asarray(fn(x))
+        best = min(best, time.perf_counter() - t0)
+    return best * 1e6
+
+
+def _accuracy(artifact, x, y) -> float:
+    return float((np.asarray(artifact(x)) == y).mean())
+
+
+def explore_rows(session, net, *, budget: int, batch: int,
+                 report_path=None) -> tuple[list[str], object]:
+    """The search + replay rows; returns (rows, report)."""
+    rep = session.explore(net, objective="latency", strategy="anneal",
+                          budget=budget, seed=0, batch=batch,
+                          interpret=True)
+    spec, tgt = rep.best_config()
+    art = session.compile(net, target=tgt, pipeline=spec.spec_string())
+    x = _images(batch, art.circuit.n_inputs, seed=3)
+    us = _timed_mean(art, x)
+    rows = [
+        f"netgen_explore_best,{us:.1f},"
+        f"target={tgt};pipeline={spec.spec_string()};"
+        f"candidates={rep.candidates};pruned={len(rep.pruned)};"
+        f"measured={len(rep.evaluations)}",
+    ]
+    t0 = time.perf_counter()
+    rep2 = session.explore(net, objective="latency", strategy="anneal",
+                           budget=budget, seed=0, batch=batch,
+                           interpret=True)
+    replay_us = (time.perf_counter() - t0) * 1e6
+    assert rep2.source != "search", rep2.source
+    assert rep2.best == rep.best
+    rows.append(f"netgen_explore_replay,{replay_us:.1f},"
+                f"source={rep2.source};measurements=0")
+    if report_path:
+        with open(report_path, "w") as f:
+            json.dump(rep.as_dict(), f, indent=1)
+            f.write("\n")
+    return rows, rep
+
+
+def ladder_row(session, *, full: bool) -> str:
+    """Ladder-depth sweep through the explorer's nets axis: train the
+    paper protocol at several hidden-layer depths, explore all depths
+    in ONE search space under the cells objective, and report each
+    depth's accuracy against its explored cell price (paper L3
+    reference: 92%)."""
+    from repro.core import dataset, mlp, quantize
+    from repro.netgen.explore import SearchSpace
+
+    if full:
+        depths = {"d1": (500,), "d2": (500, 250)}
+        n_train, n_test, epochs = 1000, 1000, 30
+    else:
+        depths = {"d1": (48,), "d2": (48, 24)}
+        n_train, n_test, epochs = 400, 300, 8
+    xtr, ytr, xte, yte = dataset.train_test_split(n_train, n_test, seed=0)
+    nets = {}
+    for name, hidden in depths.items():
+        params = mlp.train(
+            mlp.MLPConfig(epochs=epochs, seed=1, n_hidden=hidden), xtr, ytr)
+        nets[name] = quantize.quantize(params)
+    space = SearchSpace(
+        pipelines=("default", "zeros,prune,addends"),
+        forms=("planes",), tiles=({"bm": 64, "bn": 64, "bkw": 8},),
+        nets=tuple(nets))
+    # budget == product size: the cells objective dedups each (net,
+    # pipeline) to one measured evaluation, the rest prune
+    rep = session.explore(nets=nets, space=space, objective="cells",
+                          strategy="random",
+                          budget=len(space.candidates()), seed=0,
+                          interpret=True)
+    best_cells: dict[str, float] = {}
+    for cand, value in rep.evaluations:
+        name = cand["net"]
+        best_cells[name] = min(best_cells.get(name, float("inf")), value)
+    parts = []
+    for name in sorted(depths):
+        art = session.compile(nets[name], target="jnp")
+        acc = _accuracy(art, xte, yte)
+        parts.append(f"{name}_acc={acc:.4f}")
+        parts.append(f"{name}_cells={best_cells[name]:.0f}")
+    parts.append("paper_l3_acc=0.92")
+    return f"netgen_explore_ladder,0,{';'.join(parts)}"
+
+
+def run(full: bool = False, report_path=None, store=None,
+        tune_store=None) -> list[str]:
+    from repro import netgen
+
+    sizes = (784, 500, 10) if full else (96, 48, 10)
+    budget = 16 if full else 10
+    batch = 256 if full else 64
+    with netgen.Session(store=store, tune_store=tune_store) as session:
+        rows, _ = explore_rows(session, _random_net(sizes, seed=7),
+                               budget=budget, batch=batch,
+                               report_path=report_path)
+        rows.append(ladder_row(session, full=full))
+    return rows
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--smoke", action="store_true",
+                    help="tier-1 CI smoke: tiny net, explicit budget, "
+                         "serve the winner through a stacked NetServer")
+    ap.add_argument("--budget", type=int, default=8,
+                    help="unique candidates the smoke search considers")
+    ap.add_argument("--store", default=None, help="ArtifactStore dir")
+    ap.add_argument("--tune-store", default=None, help="TuneStore dir")
+    ap.add_argument("--report", default=None,
+                    help="write the ExplorationReport JSON here")
+    ap.add_argument("--trace", default=None, metavar="DIR",
+                    help="write DIR/trace.jsonl + DIR/metrics.prom for "
+                         "benchmarks/check_trace.py")
+    args = ap.parse_args()
+
+    from repro import netgen
+    from repro.netgen import telemetry
+
+    if args.trace:
+        telemetry.enable()
+    print("name,us_per_call,derived")
+    if not args.smoke:
+        for row in run(full=args.full, report_path=args.report):
+            print(row, flush=True)
+    else:
+        sizes = (64, 32, 10)
+        with netgen.Session(store=args.store,
+                            tune_store=args.tune_store) as session:
+            net = _random_net(sizes, seed=7)
+            rows, rep = explore_rows(session, net, budget=args.budget,
+                                     batch=32, report_path=args.report)
+            for row in rows:
+                print(row, flush=True)
+            # serve the winner: stacked dispatch prefers the explored
+            # record over the hand-coded form precedence
+            server = netgen.NetServer(
+                session=session, target="pallas[interpret=true]",
+                slot_capacity=32, warmup=False)
+            server.register("a", net)
+            server.register("b", _random_net(sizes, seed=8))
+            x = _images(16, sizes[0], seed=5)
+            out = server.predict_many({"a": x, "b": x})
+            ref = session.compile(net, target="jnp")
+            np.testing.assert_array_equal(out["a"], np.asarray(ref(x)))
+            fn, _ = server._stacked_fn(("a", "b"))
+            print(f"netgen_explore_smoke,0,budget={args.budget};"
+                  f"winner_form={rep.best.form};"
+                  f"stacked_datapath={fn.datapath}", flush=True)
+    if args.trace:
+        trace_dir = Path(args.trace)
+        trace_dir.mkdir(parents=True, exist_ok=True)
+        telemetry.export_jsonl(trace_dir / "trace.jsonl")
+        (trace_dir / "metrics.prom").write_text(telemetry.prometheus())
+
+
+if __name__ == "__main__":
+    main()

@@ -30,6 +30,12 @@ Measures, in the `bench_throughput` CSV idiom:
   * the persistent autotuner (ISSUE 5): `pallas[tuned=true]` grid
     search wall-clock, the winning (form, bm, bn, bkw), and the tuned
     predictor's timing next to the fixed-default forms
+  * the design-space explorer (ISSUE 10): `Session.explore`'s joint
+    pipeline x datapath x tile winner timed against the hand-tuned
+    `pallas[tuned=true,fusednet=true]` path — the `netgen_explored_b256`
+    row plus the pair-carrying `netgen_explored_vs_tuned_speedup` ratio
+    row; --full asserts the explored config is no worse (>= 1.0x, or
+    the search landed on the identical kernel config)
   * sharded vs single-device stacked serving (ISSUE 4): predict_many
     under a mesh with a data axis (shard_map over the slot dimension)
     vs the same requests without a mesh, bit-exact asserted; pass
@@ -41,7 +47,12 @@ target's Figure-7-style logic-cell estimates per pass for the benchmark
 net.
 
   PYTHONPATH=src python benchmarks/bench_netgen_serve.py [--full] \\
-      [--fake-devices N] [--json bench_netgen_serve.json]
+      [--fake-devices N] [--json FILE]
+
+The detailed measurement JSON is written ONLY when a path is given
+(standalone --json, or benchmarks.run --serve-json): a run must never
+drop artifacts outside its declared output paths — BENCH_netgen.json
+is the single committed trajectory file.
 """
 from __future__ import annotations
 
@@ -253,6 +264,53 @@ def run(full: bool = False, json_path: str | None = None) -> list[str]:
     rows.append(f"netgen_serve_tune_search,{tune_s*1e6:.0f},"
                 f"{tuner.stats.measurements}")
 
+    # -- design-space explorer (ISSUE 10): joint search vs hand-tuned -------
+    # The explorer searches pipeline x datapath x tiles as ONE problem;
+    # the acceptance claim is that its winner is no worse than the
+    # hand-coded `pallas[tuned=true,fusednet=true]` path on the paper
+    # net. Both sides get the same best-of-3 low-noise protocol.
+    rep = tune_sess.explore(pnet, objective="latency", strategy="anneal",
+                            budget=16 if full else 10, seed=0, batch=pb)
+    spec, etgt = rep.best_config()
+    explored = tune_sess.compile(pnet, target=etgt,
+                                 pipeline=spec.spec_string())
+    got = np.asarray(explored(px))
+    assert np.array_equal(got, want), "explored config diverged from oracle"
+    dt_explored = min(_timed_mean("pallas_explored",
+                                  lambda: np.asarray(explored(px)), reps)
+                      for _ in range(3))
+    hand = tune_sess.compile(pnet, target="pallas[tuned=true,fusednet=true]")
+    dt_hand = min(_timed_mean("pallas_hand_tuned",
+                              lambda: np.asarray(hand(px)), reps)
+                  for _ in range(3))
+    explored_vs_tuned = dt_hand / dt_explored
+    same_config = (explored.plan_form == hand.plan_form
+                   and explored.artifact.datapath == hand.artifact.datapath
+                   and explored.artifact.blocks == hand.artifact.blocks)
+    results["explored"] = {
+        "target": etgt, "pipeline": spec.spec_string(),
+        "candidates": rep.candidates, "pruned": len(rep.pruned),
+        "measured": len(rep.evaluations),
+        "us_per_batch": dt_explored * 1e6,
+        "hand_tuned_us_per_batch": dt_hand * 1e6,
+        "explored_vs_tuned_speedup": explored_vs_tuned,
+        "same_config_as_hand_tuned": same_config,
+    }
+    rows.append(f"netgen_explored_b{pb},"
+                f"{dt_explored*1e6:.0f},{pb/dt_explored:.0f}")
+    rows.append(f"netgen_explored_vs_tuned_speedup,0,"
+                f"ratio={explored_vs_tuned:.2f};"
+                f"tuned_us={dt_hand*1e6:.0f};"
+                f"explored_us={dt_explored*1e6:.0f}")
+    if full:
+        # ISSUE 10 acceptance: the joint search finds a config no worse
+        # than the hand-tuned fusednet path. When the search lands on
+        # the *same* kernel config, "no worse" holds by definition and
+        # the measured ratio is pure timing noise around 1.0.
+        assert explored_vs_tuned >= 1.0 or same_config, (
+            f"explored config ({etgt}) is worse than the hand-tuned "
+            f"fusednet path: {explored_vs_tuned:.2f}x")
+
     # -- sharded vs single-device stacked serving (ISSUE 4) -----------------
     import math
 
@@ -419,8 +477,9 @@ def main() -> None:
                     help="fake N host devices for the sharded rows "
                          "(standalone runs only: must be set before jax "
                          "initializes)")
-    ap.add_argument("--json", default="bench_netgen_serve.json",
-                    help="write the full measurement set here")
+    ap.add_argument("--json", default=None,
+                    help="write the full measurement set here (no file "
+                         "is written without an explicit path)")
     args = ap.parse_args()
     if args.fake_devices:
         import os

@@ -33,9 +33,17 @@ from above). Skipped when the trace carries no fusednet traffic.
   PYTHONPATH=src python benchmarks/check_trace.py DIR \\
       [--compile-budget-s 300]
 
+A fourth check (`check_explore`) gates the design-space explorer's
+counting identities when a trace carries explorer traffic: per
+explorer scope, `netgen_explore_candidates_total` ==
+`..._pruned_total` + `..._measured_total` (every considered candidate
+was either statically rejected or measured) and
+`..._artifacts_total` == `..._measured_total` (every measured
+candidate is backed by exactly one store artifact).
+
 The checks are importable pure functions (`check_spans`,
-`check_metrics`, `check_launches`) so the telemetry tests exercise the
-same gate CI runs.
+`check_metrics`, `check_launches`, `check_explore`) so the telemetry
+tests exercise the same gate CI runs.
 """
 from __future__ import annotations
 
@@ -223,6 +231,43 @@ def check_launches(spans: list[dict],
     return errors
 
 
+def check_explore(samples: list[tuple[str, dict, float]]) -> list[str]:
+    """The design-space explorer's counting identities (empty list ==
+    pass), per `explorer=` scope: every unique candidate considered was
+    either pruned pre-measurement by the shared legality checks or
+    measured (`candidates == pruned + measured` — a candidate that
+    silently vanished means the search lied about its coverage), and
+    every measured candidate is backed by exactly one store artifact
+    (`artifacts == measured`). No-op for traces without explorer
+    traffic."""
+    errors: list[str] = []
+    short = {
+        "netgen_explore_candidates_total": "candidates",
+        "netgen_explore_pruned_total": "pruned",
+        "netgen_explore_measured_total": "measured",
+        "netgen_explore_artifacts_total": "artifacts",
+    }
+    per: dict[str, dict[str, float]] = defaultdict(dict)
+    for name, labels, value in samples:
+        scope = labels.get("explorer")
+        if scope is not None and name in short:
+            per[scope][short[name]] = value
+    for scope, c in sorted(per.items()):
+        cand = c.get("candidates", 0.0)
+        pruned = c.get("pruned", 0.0)
+        measured = c.get("measured", 0.0)
+        if cand != pruned + measured:
+            errors.append(
+                f"explorer {scope}: candidates ({cand:.0f}) != pruned "
+                f"({pruned:.0f}) + measured ({measured:.0f})")
+        if c.get("artifacts", 0.0) != measured:
+            errors.append(
+                f"explorer {scope}: artifacts ({c.get('artifacts', 0.0):.0f})"
+                f" != measured candidates ({measured:.0f}) — a measured "
+                f"candidate must be backed by exactly one store artifact")
+    return errors
+
+
 def check_trace_dir(trace_dir, *, compile_budget_s: float = 300.0
                     ) -> list[str]:
     """All invariant violations for one --trace output directory."""
@@ -236,6 +281,7 @@ def check_trace_dir(trace_dir, *, compile_budget_s: float = 300.0
         try:
             samples = parse_prometheus(prom.read_text())
             errors += check_metrics(samples)
+            errors += check_explore(samples)
         except ValueError as e:
             errors.append(str(e))
     # did this process compile anything, or warm-start off the store?

@@ -6,12 +6,17 @@ instead of re-reading CI logs.
 
   python -m benchmarks.run [--full] [--only SUITE] [--fake-devices N]
       [--bench-json BENCH_netgen.json] [--serve-json FILE]
+      [--explore-report FILE]
 
 --full runs paper-sized versions (500 hidden units, 60 epochs, full
 Verilog emission); default is a fast sanity pass. --fake-devices N
 spreads the sharded serving rows over N faked host devices (must be
 set before jax initializes, hence a flag here). --serve-json
-additionally writes the serve suite's detailed measurement dict.
+additionally writes the serve suite's detailed measurement dict;
+--explore-report the explore suite's ExplorationReport JSON. Suite
+artifacts are written ONLY under these declared output paths — no
+suite drops files in the working directory, so `BENCH_netgen.json`
+stays the single committed trajectory file.
 
 Row conventions: ratio rows (`*_speedup`) put 0 in us_per_call and
 carry `ratio=..;<num>_us=..;<den>_us=..` in derived — the ratio's own
@@ -91,6 +96,15 @@ def main() -> None:
                          "timings); empty string disables")
     ap.add_argument("--serve-json", default=None,
                     help="also write the serve suite's detailed JSON here")
+    ap.add_argument("--explore-report", default=None,
+                    help="also write the explore suite's "
+                         "ExplorationReport JSON here")
+    ap.add_argument("--store", default=None,
+                    help="persistent ArtifactStore dir for the explore "
+                         "suite (CI hands it the cached .netgen-store)")
+    ap.add_argument("--tune-store", default=None,
+                    help="persistent TuneStore dir for the explore suite "
+                         "(explored winners land here for warm replays)")
     args = ap.parse_args()
     if args.fake_devices:
         import os
@@ -99,9 +113,9 @@ def main() -> None:
             + f" --xla_force_host_platform_device_count={args.fake_devices}")
 
     from benchmarks import (bench_kernels, bench_ladder, bench_netgen,
-                            bench_netgen_engine, bench_netgen_passes,
-                            bench_netgen_serve, bench_throughput,
-                            roofline_table)
+                            bench_netgen_engine, bench_netgen_explore,
+                            bench_netgen_passes, bench_netgen_serve,
+                            bench_throughput, roofline_table)
 
     suites = {
         "ladder": bench_ladder.run,          # paper §III accuracy table
@@ -110,6 +124,9 @@ def main() -> None:
         "netgen_serve": lambda full: bench_netgen_serve.run(
             full=full, json_path=args.serve_json),  # compile cache + multi-net
         "netgen_engine": bench_netgen_engine.run,  # online serving load gen
+        "netgen_explore": lambda full: bench_netgen_explore.run(
+            full=full, report_path=args.explore_report,
+            store=args.store, tune_store=args.tune_store),  # joint DSE
         "throughput": bench_throughput.run,  # paper §V.E FPGA-vs-CPU table
         "kernels": bench_kernels.run,
         "roofline": roofline_table.run,      # dry-run summary counts

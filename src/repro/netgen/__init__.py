@@ -102,6 +102,31 @@ its batch tile. `Session(tune_store=...)` persists the winners
 content-addressed (a second process performs ZERO tuning
 measurements); `session.tune_stats()` shows hits vs measurements.
 
+Design-space exploration (`repro.netgen.explore`)
+-------------------------------------------------
+The paper's levers — pass pipeline, datapath form, kernel tile sizes —
+interact, so `Session.explore(...)` searches them as ONE optimization
+problem: a seeded `Explorer` ("random" permutation or simulated
+annealing) over a `SearchSpace` of pipeline spec strings x
+dense/packed/planes/fusednet x (bm, bn, bkw) tiles x optionally
+several nets (the ladder-depth axis), under a pluggable lower-is-
+better objective ("latency", deterministic "cells" from the Fig-7
+estimate, "combined", or `make_objective(fn, name=...)`). Illegal
+candidates are pruned BEFORE measurement through the shared
+`analysis.tile_legality` / `IrregularCircuitError` checks; every
+measured candidate compiles through the Session (artifacts persist in
+the ArtifactStore) and the whole search persists as one content-
+addressed `TuneRecord`, so a second process replays the returned
+`ExplorationReport` with zero measurements and zero compiles.
+`pallas[explored=true]` resolves the persisted winner for a plan
+shape, and the serving layer's stacked dispatch prefers it over the
+hand-coded form precedence (`NetServer(prefer_explored=...)`):
+
+    rep = session.explore(qnet, objective="latency", budget=24, seed=0)
+    spec, target = rep.best_config()
+    art = session.compile(qnet, target=target, pipeline=spec)
+    print(rep.describe())            # candidates / pruned / winner
+
 Serving (compile cache + multi-version dispatch + mesh sharding)
 ----------------------------------------------------------------
 `repro.netgen.serve` makes the compile-per-model-then-serve workflow
@@ -220,6 +245,10 @@ from repro.netgen.analysis import (
     analyze_ranges, diagnose_stack, verify_circuit, verify_plan,
 )
 from repro.netgen.backends.cost import CellCounts, CostReport
+from repro.netgen.explore import (
+    Candidate, ExplorationReport, Explorer, Objective, SearchSpace,
+    make_objective,
+)
 from repro.netgen.frontend import lower
 from repro.netgen.graph import (
     Argmax, Circuit, InputCompare, IrregularCircuitError, SignStep, Term,
@@ -250,13 +279,14 @@ from repro.netgen.tune import (
 )
 
 __all__ = [
-    "Argmax", "Artifact", "ArtifactStore", "CacheKey", "CellCounts",
-    "Circuit", "CircuitOps", "CompileCache", "CompiledNet", "CostReport",
-    "DEFAULT_PASSES", "DeadlineExceededError", "Diagnostic",
-    "EngineClosedError", "EngineStats", "ExecutionPlan", "HW_PASSES",
-    "InputCompare", "IrregularCircuitError", "KernelTuner", "NetServer",
+    "Argmax", "Artifact", "ArtifactStore", "CacheKey", "Candidate",
+    "CellCounts", "Circuit", "CircuitOps", "CompileCache", "CompiledNet",
+    "CostReport", "DEFAULT_PASSES", "DeadlineExceededError", "Diagnostic",
+    "EngineClosedError", "EngineStats", "ExecutionPlan",
+    "ExplorationReport", "Explorer", "HW_PASSES", "InputCompare",
+    "IrregularCircuitError", "KernelTuner", "NetServer", "Objective",
     "Pass", "PassStats", "PipelineSpec", "PlanLayer", "QueueFullError",
-    "RangeAnalysis", "ServingEngine", "Session", "SignStep",
+    "RangeAnalysis", "SearchSpace", "ServingEngine", "Session", "SignStep",
     "StackReport", "Target", "Term", "TuneRecord", "TuneStats",
     "TuneStore", "VerificationError", "WeightedSum", "addend_rewrite",
     "analysis", "analyze_ranges", "as_layered_weights", "backends",
@@ -265,7 +295,8 @@ __all__ = [
     "default_session", "default_tuner", "delete_zero_terms",
     "diagnose_stack", "emit_verilog", "engine", "evaluate",
     "list_passes", "list_pipelines", "list_targets", "lower",
-    "lower_circuit", "node_widths", "ops", "prune_dead_units",
+    "lower_circuit", "make_objective", "node_widths", "ops",
+    "prune_dead_units",
     "register_pass", "register_pipeline", "register_target",
     "resolve_target", "run_pipeline", "serve", "share_common_addends",
     "specialize", "stack_layered_weights", "stack_plans", "telemetry",

@@ -289,6 +289,73 @@ def _plan_signature(plan: ExecutionPlan) -> dict:
     }
 
 
+# ---------------------------------------------------------------------------
+# Explored datapath records (repro.netgen.explore)
+# ---------------------------------------------------------------------------
+
+# The design-space explorer publishes its winning datapath (form +
+# blocks) under this pseudo-target, keyed on the plan signature alone —
+# NOT on a candidate grid — so any later compile of the same shape can
+# resolve it without knowing how the search was configured.
+_EXPLORED_TARGET = "pallas-explored"
+
+
+def explored_key_fields(signature: dict, *, interpret, multi: bool) -> dict:
+    """The JSON-stable identity an explored datapath record is keyed on.
+    One home for the scheme: the explorer writes through it and
+    `pallas[explored=true]` reads through it."""
+    return {
+        "target": _EXPLORED_TARGET,
+        "device_kind": jax.devices()[0].device_kind,
+        "interpret": interpret,
+        "multi": bool(multi),
+        "signature": signature,
+    }
+
+
+def publish_explored(plan: ExecutionPlan, tuner, best: dict, *,
+                     interpret=None, measurements=(), extra=None):
+    """Upsert the explored winner's datapath record for this plan shape
+    (`best`: form + bm/bn/bkw). Called by `repro.netgen.explore` after a
+    search; later `explored=true` compiles of the same signature resolve
+    it with zero measurements."""
+    from repro.netgen import tune
+
+    tuner = tuner if tuner is not None else tune.default_tuner()
+    fields = explored_key_fields(
+        _plan_signature(plan), interpret=interpret, multi=plan.stacked)
+    return tuner.publish(fields, best, measurements=measurements,
+                         extra=extra)
+
+
+def explored_record(plan: ExecutionPlan, tuner, *, interpret, multi: bool):
+    """The resident explored-winner record for this plan shape, or None.
+    A stacked lookup that misses falls back to the single-net signature
+    (model axis erased): the explorer searches one net at a time, and a
+    homogeneous stack executes the same per-model geometry the single
+    net was measured on."""
+    from repro.netgen import tune
+
+    tuner = tuner if tuner is not None else tune.default_tuner()
+    sig = _plan_signature(plan)
+    rec = tuner.record_for(tune.tune_key(
+        explored_key_fields(sig, interpret=interpret, multi=multi)))
+    if rec is None and multi:
+        rec = tuner.record_for(tune.tune_key(explored_key_fields(
+            {**sig, "n_models": None}, interpret=interpret, multi=False)))
+    return rec
+
+
+def _form_compatible(pinned: str | None, recorded: str) -> bool:
+    """May an explored record's form satisfy an explicitly pinned one?
+    planes and fusednet are the same bit-plane datapath family (the
+    megakernel runs the planes form), so they satisfy each other; any
+    other disagreement means the record is ignored."""
+    if pinned is None or pinned == recorded:
+        return True
+    return {pinned, recorded} == {"planes", "fusednet"}
+
+
 def _tuned_params(plan: ExecutionPlan, kw: dict, blocks: dict,
                   forms, tuner, *, multi: bool):
     """Grid-search (form x block sizes) for this plan through the tuner
@@ -353,15 +420,39 @@ def _tuned_params(plan: ExecutionPlan, kw: dict, blocks: dict,
 
 
 def _resolve_datapath(plan: ExecutionPlan, kw: dict, *, packed, planes,
-                      fusednet, tuned, bm, bn, bkw, tuner, multi: bool):
+                      fusednet, tuned, bm, bn, bkw, tuner, multi: bool,
+                      explored: bool = False):
     """Turn the declared target options into (form, blocks, prebuilt):
     explicit options pin their axis; `tuned=true` searches the rest
     (over every datapath, megakernel included, when no form is forced).
     `prebuilt` is the winning predictor when this process's search just
-    built it (None otherwise — the caller builds)."""
+    built it (None otherwise — the caller builds).
+
+    `explored=true` consults the design-space explorer's persisted
+    winner for this plan signature FIRST (see `repro.netgen.explore`):
+    a resident record supplies the form and any unpinned block sizes
+    with zero measurements; without one (or when it contradicts an
+    explicitly pinned form) the option is inert and resolution falls
+    through to tuned/default — so the serving layer can request it
+    unconditionally."""
+    from repro.netgen import telemetry
+
     form = _resolve_form(packed, planes, fusednet)
     blocks = {"bm": bm, "bn": bn, "bkw": bkw}
     prebuilt = None
+    if explored:
+        rec = explored_record(plan, tuner, interpret=kw.get("interpret"),
+                              multi=multi)
+        hit = rec is not None and _form_compatible(form, rec.best.get("form"))
+        telemetry.get_registry().counter(
+            "netgen_explored_resolved_total",
+            outcome="hit" if hit else "miss").inc()
+        if hit:
+            best = rec.best
+            if form is None:
+                form = best["form"]
+            return form, {k: blocks[k] if blocks[k] is not None
+                          else best.get(k) for k in blocks}, None
     if tuned:
         forms = (form,) if form is not None else _DATAPATHS
         best, prebuilt = _tuned_params(
@@ -380,6 +471,7 @@ def _resolve_datapath(plan: ExecutionPlan, kw: dict, *, packed, planes,
 def compile_pallas(circuit: Circuit, *, interpret: bool | None = None,
                    packed: bool = False, planes: bool = False,
                    fusednet: bool = False, tuned: bool = False,
+                   explored: bool = False,
                    bm: int | None = None, bn: int | None = None,
                    bkw: int | None = None, _tuner=None):
     """Return a jitted fn chaining one kernel launch per plan layer —
@@ -394,13 +486,17 @@ def compile_pallas(circuit: Circuit, *, interpret: bool | None = None,
     block sizes; `tuned` grid-searches unpinned block sizes (and the
     datapath, when none is forced) through the persistent autotuner.
     The returned fn carries `.plan_form`, `.datapath` and `.blocks`
-    describing what the search (or the flags) chose.
+    describing what the search (or the flags) chose. `explored=true`
+    resolves the design-space explorer's persisted winner for this plan
+    shape when one exists (see `repro.netgen.explore`); without a
+    record it is inert.
     """
     kw = {} if interpret is None else {"interpret": interpret}
     plan = lower_circuit(circuit)
     form, blocks, prebuilt = _resolve_datapath(
         plan, kw, packed=packed, planes=planes, fusednet=fusednet,
-        tuned=tuned, bm=bm, bn=bn, bkw=bkw, tuner=_tuner, multi=False)
+        tuned=tuned, bm=bm, bn=bn, bkw=bkw, tuner=_tuner, multi=False,
+        explored=explored)
     if prebuilt is not None:
         return prebuilt
     if form == "fusednet":
@@ -412,6 +508,7 @@ def compile_pallas_multi(plan: ExecutionPlan, *,
                          interpret: bool | None = None,
                          packed: bool = False, planes: bool = False,
                          fusednet: bool = False, tuned: bool = False,
+                         explored: bool = False,
                          bm: int | None = None, bn: int | None = None,
                          bkw: int | None = None, _tuner=None):
     """Multi-net dispatch through the binary_matvec kernels.
@@ -437,7 +534,8 @@ def compile_pallas_multi(plan: ExecutionPlan, *,
     kw = {} if interpret is None else {"interpret": interpret}
     form, blocks, prebuilt = _resolve_datapath(
         plan, kw, packed=packed, planes=planes, fusednet=fusednet,
-        tuned=tuned, bm=bm, bn=bn, bkw=bkw, tuner=_tuner, multi=True)
+        tuned=tuned, bm=bm, bn=bn, bkw=bkw, tuner=_tuner, multi=True,
+        explored=explored)
     if prebuilt is not None:
         return prebuilt
     if form == "fusednet":

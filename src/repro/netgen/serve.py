@@ -454,7 +454,8 @@ class NetServer:
     def __init__(self, *, session=None, target: str | None = None,
                  pipeline=None, backend: str = "jnp",
                  passes=None, cache: CompileCache | None = None,
-                 slot_capacity: int = 256, warmup: bool = True):
+                 slot_capacity: int = 256, warmup: bool = True,
+                 prefer_explored: bool = True):
         target = target if target is not None else backend
         self._target, self._opts = resolve_target(target)
         if not self._target.callable:
@@ -478,6 +479,13 @@ class NetServer:
         # tuning records as the single-version compiles
         self._tuner = getattr(self.cache, "tuner", None)
         self.backend = self._target.name
+        # prefer a design-space-explored datapath record over the
+        # hand-coded form precedence for stacked dispatch builds, when
+        # the target declares `explored` and the caller didn't pin it
+        # (a missing record leaves the option inert — see
+        # `repro.netgen.explore`)
+        self.prefer_explored = bool(prefer_explored) and \
+            any(name == "explored" for name, _ in self._target.opts)
         self.passes = pipeline if pipeline is not None else passes
         self.slot_capacity = int(slot_capacity)
         self.warmup = bool(warmup)
@@ -750,9 +758,12 @@ class NetServer:
                     try:
                         plan = stack_plans(
                             [lower_circuit(c) for c in circuits])
+                        opts = dict(self._opts)
+                        if self.prefer_explored and "explored" not in opts:
+                            opts["explored"] = True
                         fn = compile_multi(
                             plan, backend=self._target.name,
-                            tuner=self._tuner, **self._opts)
+                            tuner=self._tuner, **opts)
                         sharded_fn = (
                             None if mesh is None else
                             _shard_stacked(fn, mesh, self.slot_capacity))

@@ -707,6 +707,32 @@ class Session:
             max_batch_delay=max_batch_delay,
             max_queue_depth=max_queue_depth)
 
+    def explore(self, net=None, *, nets=None, space=None,
+                objective="latency", strategy: str = "anneal",
+                budget: int = 24, seed: int = 0, batch: int = 256,
+                reps: int = 2, cells_weight: float = 0.01,
+                interpret: bool | None = None,
+                input_threshold: int | None = None):
+        """Jointly search pipeline x datapath x tile sizes for `net`
+        (or a `nets` mapping — the ladder-depth axis) and return an
+        `ExplorationReport` (see `repro.netgen.explore`).
+
+        Every evaluation compiles through this session — artifacts land
+        in the memory tier and the `ArtifactStore` — and the finished
+        search persists through the session's `TuneStore`, so a second
+        process with the same stores replays the exploration with zero
+        compiles and zero measurements. The winner also publishes the
+        `pallas-explored` datapath record `pallas[explored=true]` (and
+        the serving layer's stacked dispatch) resolve by plan
+        signature."""
+        from repro.netgen.explore import Explorer
+
+        return Explorer(
+            self, net=net, nets=nets, space=space, objective=objective,
+            strategy=strategy, budget=budget, seed=seed, batch=batch,
+            reps=reps, cells_weight=cells_weight, interpret=interpret,
+            input_threshold=input_threshold).run()
+
     def shutdown(self, wait: bool = True) -> None:
         """Stop the async compile executor (idempotent; queued compiles
         finish when `wait`)."""

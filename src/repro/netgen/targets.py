@@ -191,11 +191,13 @@ register_target(Target(
                 "stacked or single, weights resident and activations "
                 "never leaving VMEM — tuned=true grid-searches the form "
                 "and the bm/bn/bkw block sizes per plan shape and "
-                "persists the winner)",
+                "persists the winner; explored=true resolves the "
+                "design-space explorer's persisted winner for the plan "
+                "shape when one exists, see Session.explore)",
     compile=_compile_pallas,
     opts=(("interpret", bool), ("packed", bool), ("planes", bool),
-          ("fusednet", bool), ("tuned", bool), ("bm", int), ("bn", int),
-          ("bkw", int)),
+          ("fusednet", bool), ("tuned", bool), ("explored", bool),
+          ("bm", int), ("bn", int), ("bkw", int)),
     compile_multi=_compile_pallas_multi, wants_tuner=True))
 register_target(Target(
     name="fused", kind="callable",

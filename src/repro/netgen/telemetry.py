@@ -64,6 +64,9 @@ Instrumented span tree (what a trace of one request lifecycle nests):
         netgen.kernel       one per jitted call (slot round)
     netgen.store.load       artifact rebuilt from disk
     netgen.tune.search      candidates, winner, measure seconds
+    netgen.explore          one design-space search (strategy,
+                            objective, budget, best, pruned, measured)
+                            — parents its evaluations' compile spans
 
 Serving metrics: `netgen_predict_latency_seconds{server,version}`
 records per-version SERVICE time and `netgen_requests_total` counts one
@@ -92,6 +95,18 @@ skipped as statically illegal or duplicate kernels, without spending a
 measurement; `netgen_stack_incompat_total{server,reason}` counts
 version sets the NetServer diagnosed as unstackable, labelled with the
 first failing check (e.g. stack.depth, stack.classes, stack.build).
+
+Design-space explorer metrics (`repro.netgen.explore`), per
+`explorer=` scope: `netgen_explore_candidates_total` (unique points
+considered) == `netgen_explore_pruned_total` (rejected pre-measurement
+by the shared legality checks) + `netgen_explore_measured_total`
+(objective evaluations), and `netgen_explore_artifacts_total` (the
+store artifact backing each evaluation) == measured —
+`benchmarks/check_trace.py` gates both identities.
+`netgen_explore_accepted_total` counts acceptance-trace accepts and
+`netgen_explore_replays_total` warm replays served from a persisted
+record (zero measurements); `netgen_explored_resolved_total{outcome}`
+counts `pallas[explored=true]` record lookups (hit / miss).
 """
 from __future__ import annotations
 

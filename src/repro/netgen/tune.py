@@ -78,12 +78,18 @@ def _jsonify(obj):
 class TuneRecord:
     """One persisted search result: the problem's content address, the
     winning parameters, and the full measurement table (each candidate's
-    best-of-reps wall clock in microseconds, search order preserved)."""
+    best-of-reps wall clock in microseconds, search order preserved).
+
+    `extra` carries driver-specific payload beyond the argmin — the
+    design-space explorer stores its acceptance trace and prune log
+    there so a warm start replays the whole report, not just the
+    winner. Pre-`extra` records load with an empty dict."""
     key: str
     best: dict
-    measurements: tuple          # ((params_dict, us), ...)
+    measurements: tuple          # ((params_dict, value), ...)
     device_kind: str
     created_unix: float
+    extra: dict = dataclasses.field(default_factory=dict)
 
     def as_dict(self) -> dict:
         return {
@@ -93,6 +99,7 @@ class TuneRecord:
             "measurements": [[p, us] for p, us in self.measurements],
             "device_kind": self.device_kind,
             "created_unix": self.created_unix,
+            "extra": self.extra,
         }
 
     @classmethod
@@ -104,6 +111,7 @@ class TuneRecord:
                                for p, us in d["measurements"]),
             device_kind=d["device_kind"],
             created_unix=float(d["created_unix"]),
+            extra=dict(d.get("extra") or {}),
         )
 
 
@@ -227,6 +235,93 @@ class KernelTuner:
             rec = self.store.get(key)
         return rec
 
+    def _lookup(self, key: str) -> tuple[TuneRecord | None, str]:
+        """(record, tier) under the tuner lock; counts the hit. Tier is
+        "memory", "store", or "" on a double miss."""
+        rec = self._mem.get(key)
+        if rec is not None:
+            self._c_hits.inc()
+            return rec, "memory"
+        if self.store is not None:
+            rec = self.store.get(key)
+            if rec is not None:
+                self._mem[key] = rec
+                self._c_store_hits.inc()
+                return rec, "store"
+        return None, ""
+
+    def get_or_run(self, key_fields,
+                   run: Callable[[str], tuple[Mapping, Sequence, Mapping]],
+                   ) -> tuple[TuneRecord, str]:
+        """Content-addressed caller-driven search: the generalization of
+        `get_or_tune` for drivers that own their OWN search loop (the
+        design-space explorer). Returns `(record, tier)` where tier is
+        "memory", "store", or "run".
+
+        On a double miss the per-key in-flight lock is taken and
+        `run(key)` performs the search, returning `(best, measurements,
+        extra)` — the winning params dict, the ((params, value), ...)
+        table, and a JSON-stable payload stored on the record. The
+        driver's measurement count rides the shared
+        `netgen_tune_measurements_total` counter (one per table row), so
+        `TuneStats.measurements == 0` still certifies a warm start."""
+        key = tune_key(key_fields)
+        with self._lock:
+            rec, tier = self._lookup(key)
+            if rec is not None:
+                return rec, tier
+            key_lock = self._inflight.setdefault(key, threading.Lock())
+        with key_lock:
+            with self._lock:
+                rec, tier = self._lookup(key)
+            if rec is not None:
+                return rec, tier
+            t0 = time.perf_counter()
+            best, measurements, extra = run(key)
+            dt = time.perf_counter() - t0
+            rec = TuneRecord(
+                key=key,
+                best=dict(best),
+                measurements=tuple((dict(p), float(v))
+                                   for p, v in measurements),
+                device_kind=_field(key_fields, "device_kind"),
+                created_unix=time.time(),
+                extra=dict(extra),
+            )
+            self._c_measurements.inc(len(rec.measurements))
+            self._c_tunes.inc()
+            self._h_measure.observe(dt)
+            with self._lock:
+                self._mem[key] = rec
+                self._inflight.pop(key, None)
+            if self.store is not None:
+                self.store.put(rec)
+            return rec, "run"
+
+    def publish(self, key_fields, best: Mapping, *,
+                measurements: Sequence = (), extra: Mapping | None = None,
+                ) -> TuneRecord:
+        """Unconditionally upsert a record for this problem — no search,
+        no measurement counters. The design-space explorer publishes its
+        winning datapath under the `pallas-explored` key this way: a
+        re-exploration with a different objective may legitimately
+        REPLACE the resident winner (unlike `get_or_tune`/`get_or_run`
+        records, which are immutable functions of their key)."""
+        key = tune_key(key_fields)
+        rec = TuneRecord(
+            key=key,
+            best=dict(best),
+            measurements=tuple((dict(p), float(v)) for p, v in measurements),
+            device_kind=_field(key_fields, "device_kind"),
+            created_unix=time.time(),
+            extra=dict(extra or {}),
+        )
+        with self._lock:
+            self._mem[key] = rec
+        if self.store is not None:
+            self.store.put(rec)
+        return rec
+
     def get_or_tune(self, key_fields, candidates: Sequence[Mapping],
                     measure: Callable[[Mapping], float], *,
                     reps: int = 2,
@@ -258,21 +353,8 @@ class KernelTuner:
             raise ValueError("no tuning candidates")
         key = tune_key(key_fields)
 
-        def lookup() -> TuneRecord | None:
-            rec = self._mem.get(key)
-            if rec is not None:
-                self._c_hits.inc()
-                return rec
-            if self.store is not None:
-                rec = self.store.get(key)
-                if rec is not None:
-                    self._mem[key] = rec
-                    self._c_store_hits.inc()
-                    return rec
-            return None
-
         with self._lock:
-            rec = lookup()
+            rec, _ = self._lookup(key)
             if rec is not None:
                 return dict(rec.best)
             key_lock = self._inflight.setdefault(key, threading.Lock())
@@ -283,7 +365,7 @@ class KernelTuner:
         # SAME shape run one search, with losers re-reading the result.
         with key_lock:
             with self._lock:
-                rec = lookup()
+                rec, _ = self._lookup(key)
             if rec is not None:
                 return dict(rec.best)
             kept, rejected = list(candidates), []

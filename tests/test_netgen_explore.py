@@ -1,0 +1,444 @@
+"""Design-space explorer tests (ISSUE 10): the joint pipeline x
+datapath x tile search (`repro.netgen.explore`), seeded determinism,
+pre-measurement pruning through the shared analysis legality checks,
+the `pallas[explored=true]` winner resolution, the serving layer's
+explored-record preference, the check_trace counting-identity gate,
+and the cross-process zero-measurement / zero-compile replay."""
+import json
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+import jax.numpy as jnp
+
+from repro.core import quantize
+from repro import netgen
+from repro.netgen.explore import (
+    Candidate, ExplorationReport, Explorer, SearchSpace, make_objective)
+
+from _netgen_helpers import images, random_net
+
+SRC = os.path.join(os.path.dirname(os.path.dirname(__file__)), "src")
+BENCH = os.path.join(os.path.dirname(os.path.dirname(__file__)),
+                     "benchmarks")
+
+
+def _random_net(seed: int, sizes=(20, 16, 4)):
+    return random_net(seed, sizes, lo=-5, hi=5)
+
+
+def _images(seed: int, b: int, n_in: int) -> np.ndarray:
+    return images(seed, b, n_in, salt=55)
+
+
+def _ref(net, x):
+    return np.asarray(quantize.predict_quantized(net)(jnp.asarray(x)))
+
+
+def _session(tmp_path, name="a"):
+    return netgen.Session(store=tmp_path / f"art-{name}",
+                          tune_store=tmp_path / f"tune-{name}")
+
+
+_FAST = dict(budget=6, seed=0, batch=16, reps=1, interpret=True)
+
+
+# ---------------------------------------------------------------------------
+# SearchSpace
+# ---------------------------------------------------------------------------
+
+def test_search_space_product_and_validation():
+    space = SearchSpace(pipelines=("default",), forms=("dense", "planes"),
+                        tiles=({"bm": 32, "bn": 32, "bkw": 4},),
+                        nets=("net",))
+    cands = space.candidates()
+    assert len(cands) == 2
+    # pipeline strings are canonicalized, so aliases key identically
+    assert all(c.pipeline == "zeros,prune" for c in cands)
+    with pytest.raises(ValueError):
+        SearchSpace(forms=("dense", "warp"))
+    with pytest.raises(ValueError):
+        SearchSpace(pipelines=())
+
+
+# ---------------------------------------------------------------------------
+# Determinism (satellite): same seed -> identical acceptance trace
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("strategy", ["random", "anneal"])
+def test_explore_same_seed_identical_trace(tmp_path, strategy):
+    """Two INDEPENDENT sessions (separate tune stores, so both truly
+    search) produce bit-identical acceptance traces under the
+    deterministic cells objective."""
+    net = _random_net(0)
+    reports = []
+    for name in ("a", "b"):
+        rep = _session(tmp_path, name).explore(
+            net, objective="cells", strategy=strategy, **_FAST)
+        assert rep.source == "search"
+        reports.append(rep)
+    a, b = reports
+    assert a.trace == b.trace
+    assert a.best == b.best and a.best_value == b.best_value
+    assert a.evaluations == b.evaluations and a.pruned == b.pruned
+
+
+def test_explore_different_seed_may_differ_but_is_reported(tmp_path):
+    net = _random_net(1)
+    a = _session(tmp_path, "a").explore(net, objective="cells",
+                                        strategy="random", budget=4, seed=0,
+                                        interpret=True)
+    b = _session(tmp_path, "b").explore(net, objective="cells",
+                                        strategy="random", budget=4, seed=1,
+                                        interpret=True)
+    # different seeds are different problems: both searched, neither
+    # replayed the other's record
+    assert a.source == "search" and b.source == "search"
+    assert a.key != b.key
+
+
+# ---------------------------------------------------------------------------
+# Pre-measurement pruning through the shared analysis checks
+# ---------------------------------------------------------------------------
+
+def test_cse_pipeline_pruned_before_measurement_for_latency(tmp_path):
+    """A CSE'd pipeline has no layer-structured ExecutionPlan, so a
+    predictor objective must prune it with the irregularity reason —
+    BEFORE any compile of a pallas candidate or any measurement."""
+    net = _random_net(2)
+    space = SearchSpace(
+        pipelines=("zeros,prune,cse[bucketed=true]", "default"),
+        forms=("dense",), tiles=({"bm": 32, "bn": 32, "bkw": 4},))
+    session = _session(tmp_path)
+    rep = session.explore(net, space=space, objective="latency",
+                          strategy="random", budget=2, seed=0, batch=16,
+                          reps=1, interpret=True)
+    assert len(rep.pruned) == 1 and len(rep.evaluations) == 1
+    (cand, reason), = rep.pruned
+    assert "cse" in cand["pipeline"]
+    assert "no ExecutionPlan" in reason
+    assert rep.best.pipeline == "zeros,prune"
+    # candidates identity the CI gate asserts from telemetry
+    assert rep.candidates == len(rep.pruned) + len(rep.evaluations)
+
+
+def test_duplicate_tiles_pruned_via_tile_legality(tmp_path):
+    """Two tile candidates that clamp to the same effective kernel on a
+    small plan: the second is rejected as a duplicate by the shared
+    `analysis.tile_legality` closure, without spending a measurement."""
+    net = _random_net(3)        # 20 inputs -> 1 lane word: bkw clamps
+    space = SearchSpace(
+        pipelines=("default",), forms=("planes",),
+        tiles=({"bm": 128, "bn": 128, "bkw": 8},
+               {"bm": 128, "bn": 128, "bkw": 16}))
+    rep = _session(tmp_path).explore(
+        net, space=space, objective="latency", strategy="random",
+        budget=2, seed=0, batch=16, reps=1, interpret=True)
+    assert len(rep.evaluations) == 1 and len(rep.pruned) == 1
+    assert "duplicate kernel" in rep.pruned[0][1]
+
+
+def test_everything_pruned_is_an_error(tmp_path):
+    net = _random_net(4)
+    space = SearchSpace(pipelines=("zeros,prune,cse[bucketed=true]",),
+                        forms=("dense",),
+                        tiles=({"bm": 32, "bn": 32, "bkw": 4},))
+    with pytest.raises(ValueError, match="measured nothing"):
+        _session(tmp_path).explore(net, space=space, objective="latency",
+                                   strategy="random", budget=1, seed=0,
+                                   interpret=True)
+
+
+def test_cells_objective_admits_irregular_pipelines(tmp_path):
+    """The cells objective never builds a predictor, so CSE'd pipelines
+    are legal candidates (the FPGA flow can still emit them) and each
+    (net, pipeline) is measured exactly once (tile/datapath dupes
+    prune)."""
+    net = _random_net(5)
+    space = SearchSpace(
+        pipelines=("default", "zeros,prune,addends",
+                   "zeros,prune,addends,cse[bucketed=true]"),
+        forms=("dense", "planes"),
+        tiles=({"bm": 32, "bn": 32, "bkw": 4},))
+    rep = _session(tmp_path).explore(
+        net, space=space, objective="cells", strategy="random",
+        budget=6, seed=0, interpret=True)
+    measured_pipes = {c["pipeline"] for c, _ in rep.evaluations}
+    assert len(rep.evaluations) == 3       # one per pipeline
+    assert any("cse" in p for p in measured_pipes)
+    # addends strictly shrinks the mult-free circuit's cell count
+    by_pipe = {c["pipeline"]: v for c, v in rep.evaluations}
+    assert by_pipe["zeros,prune,addends"] < by_pipe["zeros,prune"]
+
+
+# ---------------------------------------------------------------------------
+# Warm starts + persistence
+# ---------------------------------------------------------------------------
+
+def test_explore_warm_start_zero_measurements(tmp_path):
+    net = _random_net(6)
+    session = _session(tmp_path)
+    rep = session.explore(net, objective="latency", strategy="anneal",
+                          **_FAST)
+    assert rep.source == "search"
+    before = session.tune_stats().measurements
+    again = session.explore(net, objective="latency", strategy="anneal",
+                            **_FAST)
+    assert again.source == "memory"
+    assert session.tune_stats().measurements == before
+    assert again.best == rep.best and again.trace == rep.trace
+
+
+def test_objective_and_strategy_are_part_of_the_problem(tmp_path):
+    net = _random_net(7)
+    session = _session(tmp_path)
+    a = session.explore(net, objective="cells", strategy="random", **_FAST)
+    b = session.explore(net, objective="cells", strategy="anneal", **_FAST)
+    assert a.key != b.key
+    c = session.explore(net, objective="combined", strategy="random",
+                        **_FAST)
+    assert c.key not in (a.key, b.key)
+
+
+def test_callable_objective_needs_stable_name(tmp_path):
+    net = _random_net(8)
+    session = _session(tmp_path)
+    with pytest.raises(ValueError, match="stable name"):
+        session.explore(net, objective=lambda ev: 0.0, **_FAST)
+    obj = make_objective(lambda ev: float(ev.cells % 97), name="cells_mod",
+                         needs_predictor=False, needs_latency=False)
+    rep = session.explore(net, objective=obj, strategy="random", **_FAST)
+    assert rep.objective == "cells_mod"
+
+
+# ---------------------------------------------------------------------------
+# pallas[explored=true] + serving preference
+# ---------------------------------------------------------------------------
+
+def test_explored_target_resolves_winner(tmp_path):
+    net = _random_net(9)
+    x = _images(9, 12, 20)
+    session = _session(tmp_path)
+    # pin the space so the winner is a non-default datapath
+    space = SearchSpace(pipelines=("default",), forms=("packed",),
+                        tiles=({"bm": 32, "bn": 32, "bkw": 4},))
+    rep = session.explore(net, space=space, objective="latency",
+                          strategy="random", budget=1, seed=0, batch=16,
+                          reps=1, interpret=True)
+    assert rep.best.form == "packed"
+    art = session.compile(net, target="pallas[explored=true,interpret=true]")
+    assert art.artifact.datapath == "packed"
+    assert art.artifact.blocks == {"bm": 32, "bn": 32, "bkw": 4}
+    np.testing.assert_array_equal(np.asarray(art(x)), _ref(net, x))
+    # the explored option is part of the canonical target string / key
+    assert "explored=true" in art.target
+
+
+def test_explored_without_record_is_inert(tmp_path):
+    net = _random_net(10, sizes=(22, 14, 5))
+    session = _session(tmp_path, "empty")
+    art = session.compile(net, target="pallas[explored=true,interpret=true]")
+    assert art.artifact.datapath == "dense"      # fell through to default
+
+
+def test_explored_respects_contradicting_pin(tmp_path):
+    """An explicit datapath pin wins over a contradicting record; the
+    record's blocks only apply when the form family agrees."""
+    net = _random_net(11)
+    session = _session(tmp_path)
+    space = SearchSpace(pipelines=("default",), forms=("packed",),
+                        tiles=({"bm": 32, "bn": 32, "bkw": 4},))
+    session.explore(net, space=space, objective="latency",
+                    strategy="random", budget=1, seed=0, batch=16,
+                    reps=1, interpret=True)
+    art = session.compile(
+        net, target="pallas[explored=true,planes=true,interpret=true]")
+    assert art.artifact.datapath == "planes"     # pin kept, record ignored
+    assert art.artifact.blocks.get("bm") is None
+
+
+def test_serving_prefers_explored_record(tmp_path):
+    """The stacked dispatch resolves the explored datapath (via the
+    single-net signature fallback) instead of the hand-coded form
+    precedence — and stays bit-exact."""
+    net_a, net_b = _random_net(12), _random_net(13)
+    x = _images(12, 8, 20)
+    session = _session(tmp_path)
+    space = SearchSpace(pipelines=("default",), forms=("packed",),
+                        tiles=({"bm": 32, "bn": 32, "bkw": 4},))
+    session.explore(net_a, space=space, objective="latency",
+                    strategy="random", budget=1, seed=0, batch=16,
+                    reps=1, interpret=True)
+    server = netgen.NetServer(session=session,
+                              target="pallas[interpret=true]",
+                              slot_capacity=8, warmup=False)
+    server.register("a", net_a)
+    server.register("b", net_b)
+    out = server.predict_many({"a": x, "b": x})
+    np.testing.assert_array_equal(out["a"], _ref(net_a, x))
+    np.testing.assert_array_equal(out["b"], _ref(net_b, x))
+    fn, _ = server._stacked_fn(("a", "b"))
+    assert fn.datapath == "packed"
+    assert fn.blocks == {"bm": 32, "bn": 32, "bkw": 4}
+    # opting out restores the hand-coded precedence
+    plain = netgen.NetServer(session=session,
+                             target="pallas[interpret=true]",
+                             slot_capacity=8, warmup=False,
+                             prefer_explored=False)
+    plain.register("a", net_a)
+    plain.register("b", net_b)
+    pfn, _ = plain._stacked_fn(("a", "b"))
+    assert pfn.datapath == "dense"
+
+
+# ---------------------------------------------------------------------------
+# Report + the check_trace gate
+# ---------------------------------------------------------------------------
+
+def test_report_roundtrips_and_best_config_compiles(tmp_path):
+    net = _random_net(14)
+    x = _images(14, 10, 20)
+    session = _session(tmp_path)
+    rep = session.explore(net, objective="latency", strategy="anneal",
+                          **_FAST)
+    blob = json.dumps(rep.as_dict())         # JSON-stable
+    back = json.loads(blob)
+    assert Candidate.from_dict(back["best"]) == rep.best
+    spec, target = rep.best_config()
+    art = session.compile(net, target=target, pipeline=spec.spec_string())
+    np.testing.assert_array_equal(np.asarray(art(x)), _ref(net, x))
+    assert "explore[" in rep.describe()
+
+
+def test_check_explore_gate_counting_identities():
+    sys.path.insert(0, BENCH)
+    try:
+        from check_trace import check_explore
+    finally:
+        sys.path.remove(BENCH)
+    good = [
+        ("netgen_explore_candidates_total", {"explorer": "e1"}, 6.0),
+        ("netgen_explore_pruned_total", {"explorer": "e1"}, 2.0),
+        ("netgen_explore_measured_total", {"explorer": "e1"}, 4.0),
+        ("netgen_explore_artifacts_total", {"explorer": "e1"}, 4.0),
+    ]
+    assert check_explore(good) == []
+    assert check_explore([]) == []           # no explorer traffic: no-op
+    lost = [("netgen_explore_candidates_total", {"explorer": "e2"}, 6.0),
+            ("netgen_explore_pruned_total", {"explorer": "e2"}, 1.0),
+            ("netgen_explore_measured_total", {"explorer": "e2"}, 4.0),
+            ("netgen_explore_artifacts_total", {"explorer": "e2"}, 4.0)]
+    assert any("candidates" in e for e in check_explore(lost))
+    unbacked = [("netgen_explore_candidates_total", {"explorer": "e3"}, 4.0),
+                ("netgen_explore_pruned_total", {"explorer": "e3"}, 0.0),
+                ("netgen_explore_measured_total", {"explorer": "e3"}, 4.0),
+                ("netgen_explore_artifacts_total", {"explorer": "e3"}, 3.0)]
+    assert any("artifact" in e for e in check_explore(unbacked))
+
+
+def test_live_explorer_counters_satisfy_the_gate(tmp_path):
+    """The gate's identities hold for REAL explorer telemetry, not just
+    synthetic samples."""
+    from repro.netgen import telemetry
+
+    sys.path.insert(0, BENCH)
+    try:
+        from check_trace import check_explore, parse_prometheus
+    finally:
+        sys.path.remove(BENCH)
+    net = _random_net(15)
+    _session(tmp_path).explore(net, objective="latency",
+                               strategy="random", **_FAST)
+    samples = parse_prometheus(telemetry.prometheus())
+    assert check_explore(samples) == []
+    assert any(name == "netgen_explore_candidates_total" and v > 0
+               for name, _, v in samples)
+
+
+# ---------------------------------------------------------------------------
+# Ladder-depth dimension (satellite)
+# ---------------------------------------------------------------------------
+
+def test_nets_axis_explores_multiple_depths(tmp_path):
+    """The ladder-depth sweep: nets of different depths enter one
+    search space; the cells objective prices each, and the report
+    carries per-depth evaluations."""
+    nets = {"d1": _random_net(16, sizes=(20, 12, 4)),
+            "d2": _random_net(17, sizes=(20, 12, 8, 4))}
+    space = SearchSpace(pipelines=("default", "zeros,prune,addends"),
+                        forms=("planes",),
+                        tiles=({"bm": 32, "bn": 32, "bkw": 4},),
+                        nets=("d1", "d2"))
+    rep = _session(tmp_path).explore(
+        nets=nets, space=space, objective="cells", strategy="random",
+        budget=len(space.candidates()), seed=0, interpret=True)
+    seen = {c["net"] for c, _ in rep.evaluations}
+    assert seen == {"d1", "d2"}
+    assert rep.best.net in nets
+    with pytest.raises(ValueError, match="unknown nets"):
+        Explorer(_session(tmp_path, "x"), nets=nets,
+                 space=SearchSpace(nets=("d1", "d3")))
+
+
+# ---------------------------------------------------------------------------
+# Cross-process replay: ZERO measurements, ZERO compiles (acceptance)
+# ---------------------------------------------------------------------------
+
+def test_explore_cross_process_zero_measurements_zero_compiles(tmp_path):
+    """A fresh process pointed at the same ArtifactStore + TuneStore
+    replays the exploration from the persisted record — no tuning
+    searches, no measurements — and rebuilds both the winner artifact
+    and the `pallas[explored=true]` predictor with zero compiles."""
+    art_dir, tune_dir = tmp_path / "art", tmp_path / "tune"
+    session = netgen.Session(store=art_dir, tune_store=tune_dir)
+    net = _random_net(18)
+    x = _images(18, 10, 20)
+    rep = session.explore(net, objective="latency", strategy="anneal",
+                          **_FAST)
+    assert rep.source == "search"
+    spec, target = rep.best_config()
+    session.compile(net, target=target, pipeline=spec.spec_string())
+    session.compile(net, target="pallas[explored=true,interpret=true]")
+
+    script = f"""
+import json, sys
+import numpy as np
+sys.path.insert(0, {os.path.dirname(os.path.abspath(__file__))!r})
+from _netgen_helpers import random_net, images
+from repro import netgen
+
+net = random_net(18, (20, 16, 4), lo=-5, hi=5)
+x = images(18, 10, 20, salt=55)
+session = netgen.Session(store={str(art_dir)!r}, tune_store={str(tune_dir)!r})
+rep = session.explore(net, objective="latency", strategy="anneal",
+                      budget=6, seed=0, batch=16, reps=1, interpret=True)
+spec, target = rep.best_config()
+art = session.compile(net, target=target, pipeline=spec.spec_string())
+exp = session.compile(net, target="pallas[explored=true,interpret=true]")
+ts = session.tune_stats()
+print(json.dumps({{
+    "source": rep.source,
+    "best": rep.best.as_dict(),
+    "trace_len": len(rep.trace),
+    "tunes": ts.tunes,
+    "measurements": ts.measurements,
+    "compiles": session.stats().compiles,
+    "store_hits": session.stats().store_hits,
+    "datapath": exp.artifact.datapath,
+    "pred": np.asarray(art(x)).tolist(),
+}}))
+"""
+    out = subprocess.run(
+        [sys.executable, "-c", script],
+        env={**os.environ, "PYTHONPATH": SRC},
+        capture_output=True, text=True, check=True)
+    got = json.loads(out.stdout.strip().splitlines()[-1])
+    assert got["source"] == "store"
+    assert got["best"] == rep.best.as_dict()
+    assert got["trace_len"] == len(rep.trace)
+    assert got["tunes"] == 0 and got["measurements"] == 0
+    assert got["compiles"] == 0 and got["store_hits"] >= 2
+    assert got["datapath"] == rep.best.form
+    assert np.array_equal(np.asarray(got["pred"]), _ref(net, x))
